@@ -1,0 +1,49 @@
+"""Tables 1-2 reproduction: per-query latency breakdown at efSearch=48,
+top-1 — network / sub-HNSW / meta-HNSW, + round-trips per query.
+
+Paper reference points (per query):
+  SIFT1M:  naive net 90271us, w/o-doorbell 607.5us, d-HNSW 527.6us;
+           trips 3.547 / 0.896 / 4.75e-3
+  GIST1M:  naive net 422.9ms, w/o-doorbell 2.9ms, d-HNSW 1.3ms
+"""
+from __future__ import annotations
+
+from benchmarks.common import P, batched_queries, dataset, emit, engine
+from repro.core.hnsw import recall_at_k
+
+
+def run(datasets=("sift", "gist")) -> list[dict]:
+    rows = []
+    for name in datasets:
+        ds = dataset(name)
+        queries = batched_queries(ds, P["batch"])
+        for mode in ("naive", "no_doorbell", "full"):
+            eng = engine(name, mode)
+            # steady state: warm once, then measure
+            eng.search(queries, k=1, ef=48)
+            d, g, st = eng.search(queries, k=1, ef=48)
+            B = len(queries)
+            row = dict(
+                name=f"table/{name}@1/{mode}",
+                us_per_call=round(
+                    (st["net"]["latency_s"] + st["sub_s"] + st["meta_s"])
+                    / B * 1e6, 2),
+                net_us_q=round(st["net"]["latency_s"] / B * 1e6, 3),
+                sub_us_q=round(st["sub_s"] / B * 1e6, 2),
+                meta_us_q=round(st["meta_s"] / B * 1e6, 2),
+                rtpq=round(st["round_trips_per_query"], 5),
+                bytes_q=int(st["net"]["bytes"] / B),
+                recall=round(recall_at_k(
+                    g[: min(B, len(ds.queries))],
+                    ds.gt_ids[: min(B, len(ds.queries)), :1]), 4))
+            rows.append(row)
+            emit(dict(row))
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

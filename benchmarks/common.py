@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: datasets, engine builds, CSV emit.
+
+Scale presets (env ``REPRO_BENCH_SCALE``):
+  quick — CI-sized (default): sift 20k / gist 4k, batch 256
+  full  — paper-shaped run on this box: sift 100k / gist 20k, batch 2000
+
+The paper's absolute numbers come from 4x Xeon servers + 100 Gb RDMA; on
+this container compute terms are CPU-measured (relative shape) and the
+network term is priced by core/cost_model.py — the reproduction targets
+are the paper's *ratios* (naive : no_doorbell : full) and recall curve.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import numpy as np
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G, TPU_ICI
+from repro.data.synthetic import gist_like, sift_like
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+PRESETS = {
+    "quick": dict(sift_n=20_000, gist_n=4_000, n_queries=256, batch=256,
+                  n_rep=128, efs=(1, 2, 4, 8, 16, 32, 48)),
+    "full": dict(sift_n=100_000, gist_n=20_000, n_queries=2_000, batch=2_000,
+                 n_rep=256, efs=(1, 2, 4, 8, 16, 32, 48)),
+}
+P = PRESETS[SCALE]
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str):
+    if name == "sift":
+        return sift_like(n=P["sift_n"], n_queries=P["n_queries"], seed=0)
+    return gist_like(n=P["gist_n"], n_queries=max(P["n_queries"] // 4, 64),
+                     seed=0)
+
+
+@functools.lru_cache(maxsize=None)
+def engine(name: str, mode: str, search_mode: str = "graph",
+           fabric: str = "rdma", b: int = 4):
+    ds = dataset(name)
+    cfg = EngineConfig(
+        mode=mode, search_mode=search_mode, b=b, ef=48,
+        n_rep=min(P["n_rep"], ds.data.shape[0] // 16),
+        cache_frac=0.10, doorbell=16,
+        fabric=RDMA_100G if fabric == "rdma" else TPU_ICI, seed=0)
+    t0 = time.perf_counter()
+    eng = DHNSWEngine(cfg).build(ds.data)
+    eng.build_s = time.perf_counter() - t0
+    return eng
+
+
+def emit(row: dict) -> None:
+    """One CSV line: name,us_per_call,extra key=val pairs."""
+    name = row.pop("name")
+    us = row.pop("us_per_call", "")
+    rest = " ".join(f"{k}={v}" for k, v in row.items())
+    print(f"{name},{us},{rest}", flush=True)
+
+
+def batched_queries(ds, batch):
+    q = ds.queries
+    if len(q) < batch:
+        reps = -(-batch // len(q))
+        q = np.concatenate([q] * reps)[:batch]
+    return q[:batch]

@@ -1,0 +1,45 @@
+"""Paper-geometry headline run: the closest this box gets to the
+paper's SIFT1M/500-partitions/batch-2000 setup.
+
+    PYTHONPATH=src python -m benchmarks.headline_full
+
+100k x 128d clustered vectors, 256 partitions, batch 2000, b=4, ef=48,
+RDMA fabric.  Reproduces (see EXPERIMENTS.md §Paper):
+    recall@10 ~0.86, rtpq 4.0 -> 0.01, naive/full net ratio ~32x.
+Takes a few minutes (three engine builds at 100k vectors).
+"""
+import time
+
+import numpy as np
+
+from repro.core import DHNSWEngine, EngineConfig, recall_at_k
+from repro.core.cost_model import RDMA_100G
+from repro.data.synthetic import sift_like
+
+
+def main():
+    ds = sift_like(n=100_000, n_queries=2000, seed=0)
+    res = {}
+    for mode in ("naive", "no_doorbell", "full"):
+        t0 = time.time()
+        eng = DHNSWEngine(EngineConfig(
+            mode=mode, search_mode="graph", b=4, ef=48, n_rep=256,
+            cache_frac=0.10, doorbell=16, fabric=RDMA_100G,
+            seed=0)).build(ds.data)
+        tb = time.time() - t0
+        d, g, st = eng.search(ds.queries, k=10, ef=48)
+        rec = recall_at_k(g, ds.gt_ids[:, :10])
+        res[mode] = st
+        print(f"{mode:12s} build {tb:.0f}s recall@10 {rec:.4f} "
+              f"net_us_q {st['net']['latency_s']/2000*1e6:.2f} "
+              f"rtpq {st['round_trips_per_query']:.5f} "
+              f"bytes_q {st['net']['bytes']/2000:.0f}", flush=True)
+    n, f = res["naive"], res["full"]
+    print(f"HEADLINE naive/full net ratio @batch2000: "
+          f"{n['net']['latency_s']/f['net']['latency_s']:.1f}x "
+          f"(trips {n['net']['round_trips']:.0f} vs "
+          f"{f['net']['round_trips']:.0f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Layer-exact HLO costing for the roofline (fixes scan undercounting).
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE regardless
+of trip count, so costing the full model underreports per-layer work by
+~n_layers x.  Fix: compile the model at ONE and TWO layer-units with the
+unit scans *unrolled* (a unit = the smallest repeating block: 1 layer;
+2 for gemma2's local/global pair; ``attn_every`` mamba blocks + 1 shared
+attn for zamba2; 1 enc + 1 dec layer for whisper), then extrapolate
+
+    cost(L) = cost(1u) + (units - 1) * (cost(2u) - cost(1u))
+
+— the diff cancels the embed/unembed/loss epilogue exactly and counts
+each additional unit exactly once.  Everything still comes from compiled
+artifacts on the production (16,16) mesh, so flops/bytes are per-device
+and the parsed collectives carry the real SPMD schedule.
+
+Two passes per cell:
+  A "flops": full (einsum) attention — exact matmul flops, every scan
+     with trips<=128 unrolled (covers CE chunks, SSD chunks).
+  B "bytes/collectives": the real flash path, scans with trips<=8
+     unrolled (layer scans, 4k flash blocks); long-trip inner scans stay
+     rolled -> attention/CE streaming bytes at 32k are a documented
+     undercount (weights dominate those cells).
+
+Writes results/hlo_cost.jsonl; benchmarks/roofline.py consumes it.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=256 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+from jax import lax  # noqa: E402
+
+_ORIG_SCAN = lax.scan
+_UNROLL_LIMIT = {"limit": 8}
+
+
+def _selective_unroll_scan(f, init, xs=None, length=None, **kw):
+    import jax.numpy as jnp
+    n = length
+    if n is None and xs is not None:
+        leaves = jax.tree.leaves(xs)
+        if leaves:
+            n = leaves[0].shape[0]
+    if n is not None and n <= _UNROLL_LIMIT["limit"]:
+        kw["unroll"] = True
+    return _ORIG_SCAN(f, init, xs, length=length, **kw)
+
+
+def _patch_scan():
+    lax.scan = _selective_unroll_scan
+    jax.lax.scan = _selective_unroll_scan
+
+
+from repro.configs.base import SHAPES, InputShape, shape_applicable  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.launch.dryrun import parse_collectives  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.train.train_step import make_step  # noqa: E402
+
+
+def unit_layers(cfg) -> int:
+    if cfg.family == "hybrid":
+        return max(cfg.attn_every, 1)
+    if cfg.local_global_pattern:
+        return 2
+    return 1
+
+
+def n_units(cfg) -> int:
+    return cfg.n_layers // unit_layers(cfg)
+
+
+def cfg_at_units(cfg, units: int):
+    u = unit_layers(cfg)
+    kw = dict(n_layers=units * u)
+    if cfg.family == "encdec":
+        enc_per_unit = max(cfg.n_enc_layers // max(n_units(cfg), 1), 1)
+        kw["n_enc_layers"] = units * enc_per_unit
+    return cfg.replace(**kw)
+
+
+def cost_one(cfg, shape, mesh) -> dict:
+    fn, in_sh, out_sh, args = make_step(cfg, shape, mesh, micro_steps=1)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": float(coll["wire_bytes_per_device"]),
+            "coll_op_bytes": float(coll["operand_bytes_total"]),
+            "n_coll": int(coll["n_collectives"])}
+
+
+def extrapolate(c1: dict, c2: dict, units: int) -> dict:
+    out = {}
+    for k in ("flops", "bytes", "wire", "coll_op_bytes", "n_coll"):
+        d = max(c2[k] - c1[k], 0.0)
+        out[k] = c1[k] + (units - 1) * d
+    return out
+
+
+def run_cell(arch: str, shape_id: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_id]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_id, "status": "skipped",
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=False)
+    units = n_units(cfg)
+    res = {"arch": arch, "shape": shape_id, "status": "ok",
+           "units": units, "unit_layers": unit_layers(cfg),
+           "n_devices": mesh.size,
+           "model_flops": M.model_flops(cfg, shape)}
+    t0 = time.time()
+    # pass A: exact flops (full attention, deep unroll)
+    os.environ["REPRO_FORCE_FULL_ATTENTION"] = "1"
+    _UNROLL_LIMIT["limit"] = 128
+    a1 = cost_one(cfg_at_units(cfg, 1), shape, mesh)
+    a2 = cost_one(cfg_at_units(cfg, 2), shape, mesh)
+    res["passA"] = extrapolate(a1, a2, units)
+    # pass B: flash path bytes + collectives (shallow unroll)
+    os.environ.pop("REPRO_FORCE_FULL_ATTENTION", None)
+    _UNROLL_LIMIT["limit"] = 8
+    b1 = cost_one(cfg_at_units(cfg, 1), shape, mesh)
+    b2 = cost_one(cfg_at_units(cfg, 2), shape, mesh)
+    res["passB"] = extrapolate(b1, b2, units)
+    res["cost_s"] = round(time.time() - t0, 1)
+    res["flops_dev"] = res["passA"]["flops"]
+    res["bytes_dev"] = res["passB"]["bytes"]
+    res["wire_dev"] = res["passB"]["wire"]
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="results/hlo_cost.jsonl")
+    args = ap.parse_args()
+    _patch_scan()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    done = set()
+    if os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"]))
+            except Exception:
+                pass
+    for arch in archs:
+        for shape_id in shapes:
+            if (arch, shape_id) in done:
+                print(f"[skip-done] {arch}/{shape_id}", flush=True)
+                continue
+            print(f"[cost] {arch}/{shape_id}", flush=True)
+            try:
+                res = run_cell(arch, shape_id)
+            except Exception as e:  # noqa: BLE001
+                res = {"arch": arch, "shape": shape_id, "status": "error",
+                       "error": str(e)[:500],
+                       "traceback": traceback.format_exc()[-2000:]}
+            print(f"[done] {arch}/{shape_id} {res['status']} "
+                  f"{res.get('cost_s', '')}s", flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Fig. 6 reproduction: latency-recall curves, 3 schemes x 2 datasets
+x top-{1,10}, efSearch 1..48.
+
+Latency per query = network (cost model, RDMA fabric) + measured
+sub-HNSW + meta-HNSW compute, / batch.  The paper's claims checked here:
+  * recall rises with efSearch toward ~0.85+ and saturates;
+  * naive latency / d-HNSW latency ~ O(100x) (117x in the paper);
+  * w/o doorbell sits between, ~1.1-1.3x above full d-HNSW.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import P, batched_queries, dataset, emit, engine
+from repro.core.hnsw import recall_at_k
+
+
+def run(datasets=("sift", "gist"), topks=(10, 1)) -> list[dict]:
+    rows = []
+    for name in datasets:
+        ds = dataset(name)
+        queries = batched_queries(ds, P["batch"])
+        for topk in topks:
+            for mode in ("naive", "no_doorbell", "full"):
+                eng = engine(name, mode)
+                for ef in P["efs"]:
+                    # cold-ish cache per (mode, ef) point: reuse engine,
+                    # cache persists across points exactly like the
+                    # paper's steady-state serving loop
+                    d, g, st = eng.search(queries, k=topk, ef=ef)
+                    n = min(len(g), len(ds.queries))
+                    rec = recall_at_k(g[:n], ds.gt_ids[:n, :topk])
+                    net_s = st["net"]["latency_s"]
+                    total = net_s + st["sub_s"] + st["meta_s"]
+                    row = dict(
+                        name=f"fig6/{name}@top{topk}/{mode}/ef{ef}",
+                        us_per_call=round(total / len(queries) * 1e6, 2),
+                        recall=round(rec, 4),
+                        net_us_q=round(net_s / len(queries) * 1e6, 3),
+                        sub_us_q=round(st["sub_s"] / len(queries) * 1e6, 1),
+                        meta_us_q=round(st["meta_s"] / len(queries) * 1e6, 1),
+                        rtpq=round(st["round_trips_per_query"], 5))
+                    rows.append(row)
+                    emit(dict(row))
+    # headline ratio check (ef=48, top-10): the paper's 117x/121x is a
+    # NETWORK-term ratio under NIC queueing; we report the linear-model
+    # network ratio (no queueing -> a conservative lower bound) plus the
+    # total-latency ratio for completeness
+    by = {r["name"]: r for r in rows}
+    for name in datasets:
+        n = by.get(f"fig6/{name}@top10/naive/ef48")
+        f = by.get(f"fig6/{name}@top10/full/ef48")
+        nd = by.get(f"fig6/{name}@top10/no_doorbell/ef48")
+        if n and f:
+            emit(dict(name=f"fig6/{name}/headline",
+                      us_per_call="",
+                      naive_over_full_net=round(
+                          n["net_us_q"] / max(f["net_us_q"], 1e-9), 1),
+                      nodoorbell_over_full_net=round(
+                          nd["net_us_q"] / max(f["net_us_q"], 1e-9), 2),
+                      naive_over_full_total=round(
+                          n["us_per_call"] / max(f["us_per_call"], 1e-9), 1),
+                      recall_at_ef48=f["recall"]))
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Re-parse collective bytes of saved dry-run HLO with the current
+parser (the parser gained result-size fallbacks after the first dry-run
+pass; the .hlo.gz artifacts are the source of truth)."""
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.dryrun import parse_collectives  # noqa: E402
+
+HLO_DIR = "results/hlo"
+JSONL = "results/dryrun.jsonl"
+
+
+def main():
+    rows = [json.loads(l) for l in open(JSONL)]
+    n = 0
+    for r in rows:
+        f = r.get("hlo_file")
+        if not f:
+            continue
+        path = os.path.join(HLO_DIR, f)
+        if not os.path.exists(path):
+            continue
+        hlo = gzip.open(path, "rt").read()
+        r["collectives"] = parse_collectives(hlo)
+        n += 1
+    with open(JSONL, "w") as out:
+        for r in rows:
+            out.write(json.dumps(r) + "\n")
+    print(f"re-parsed {n}/{len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from results/dryrun.jsonl:
+
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = wire_bytes_per_device / 50e9 B/s per ICI link
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); collective bytes
+from parsing the post-SPMD HLO (launch/dryrun.py::parse_collectives,
+ring-model per-device wire bytes).  cost_analysis on the CPU backend
+reports per-PROGRAM totals of the SPMD module (one device's program), so
+flops/bytes are already per-device: divide by per-chip peaks directly.
+
+Also reported: MODEL_FLOPS = 6ND (train) / 2ND (serve), the useful-work
+ratio MODEL_FLOPS / (HLO_FLOPs * chips), the dominant term, and the
+roofline fraction = model-ideal time / dominant time.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12      # bf16 per chip (v5e-class)
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+DRYRUN = os.environ.get("DRYRUN_JSONL", "results/dryrun.jsonl")
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_dev: float          # per-device HLO flops
+    bytes_dev: float          # per-device HLO bytes accessed
+    wire_dev: float           # per-device collective wire bytes
+    model_flops: float
+    n_collectives: int
+
+    @property
+    def t_compute(self):
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.wire_dev / ICI_BW
+
+    @property
+    def dominant(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_dominant(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self):
+        """MODEL_FLOPS / total compiled flops (catches remat/waste)."""
+        total = self.flops_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """model-ideal compute time / dominant-term time: how close the
+        compiled program is to the best this workload could do."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        return ideal / self.t_dominant if self.t_dominant else 0.0
+
+
+HLO_COST = os.environ.get("HLO_COST_JSONL", "results/hlo_cost.jsonl")
+
+
+def load_cells(path: str = DRYRUN, mesh: str = "single") -> list[Cell]:
+    """Prefer the layer-exact costing pass (benchmarks/hlo_cost.py, which
+    corrects cost_analysis's scan-body-counted-once undercount); fall
+    back to the raw dry-run numbers for cells it hasn't covered."""
+    exact = {}
+    if os.path.exists(HLO_COST):
+        for line in open(HLO_COST):
+            r = json.loads(line)
+            if r.get("status") == "ok":
+                exact[(r["arch"], r["shape"])] = r
+    cells = []
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        cost = r.get("cost", {})
+        coll = r.get("collectives", {})
+        e = exact.get((r["arch"], r["shape"]))
+        cells.append(Cell(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            chips=r.get("n_devices", 256),
+            flops_dev=float(e["flops_dev"] if e else cost.get("flops", 0.0)),
+            bytes_dev=float(e["bytes_dev"] if e else
+                            cost.get("bytes accessed", 0.0)),
+            wire_dev=float(e["wire_dev"] if e else
+                           coll.get("wire_bytes_per_device", 0.0)),
+            model_flops=float(r.get("model_flops", 0.0)),
+            n_collectives=int(coll.get("n_collectives", 0))))
+    return cells
+
+
+def run(mesh: str = "single") -> list[dict]:
+    cells = load_cells(mesh=mesh)
+    rows = []
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape)):
+        row = dict(
+            name=f"roofline/{c.arch}/{c.shape}/{c.mesh}",
+            us_per_call=round(c.t_dominant * 1e6, 1),
+            t_compute_s=f"{c.t_compute:.3e}",
+            t_memory_s=f"{c.t_memory:.3e}",
+            t_collective_s=f"{c.t_collective:.3e}",
+            dominant=c.dominant,
+            useful=round(c.useful_ratio, 3),
+            roofline_frac=round(c.roofline_fraction, 3))
+        rows.append(row)
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+    for mesh in ("single",):
+        for row in run(mesh):
+            emit(dict(row))
+    # summary: worst cells (hillclimb candidates)
+    cells = load_cells()
+    ranked = sorted(cells, key=lambda c: c.roofline_fraction)
+    print("# worst roofline fractions:")
+    for c in ranked[:5]:
+        print(f"#   {c.arch}/{c.shape}: {c.roofline_fraction:.3f} "
+              f"(dominant: {c.dominant})")
+    coll = sorted(cells, key=lambda c: -(c.t_collective / max(c.t_dominant, 1e-30)))
+    print("# most collective-bound:")
+    for c in coll[:5]:
+        print(f"#   {c.arch}/{c.shape}: coll/dom = "
+              f"{c.t_collective / max(c.t_dominant, 1e-30):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [suite ...]
+
+Suites: fig6 (latency-recall), tables (breakdown), throughput, insert,
+roofline.  Default: all.  Prints ``name,us_per_call,key=val...`` CSV.
+Scale via REPRO_BENCH_SCALE={quick,full} (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = ["fig6", "tables", "throughput", "insert", "roofline"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or SUITES
+    print(f"# benchmark run: suites={want}", flush=True)
+    failures = []
+    for suite in want:
+        t0 = time.time()
+        print(f"# --- {suite} ---", flush=True)
+        try:
+            if suite == "fig6":
+                from benchmarks.latency_recall import run
+                run()
+            elif suite == "tables":
+                from benchmarks.breakdown import run
+                run()
+            elif suite == "throughput":
+                from benchmarks.throughput import run
+                run()
+            elif suite == "insert":
+                from benchmarks.insert import run
+                run()
+            elif suite == "roofline":
+                from benchmarks.roofline import main as rl
+                rl()
+            else:
+                print(f"# unknown suite {suite}")
+                continue
+        except Exception:
+            failures.append(suite)
+            print(f"# SUITE FAILED: {suite}")
+            traceback.print_exc()
+        print(f"# --- {suite} done in {time.time() - t0:.1f}s ---",
+              flush=True)
+    if failures:
+        sys.exit(f"failed suites: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Throughput & ablations beyond the paper's tables:
+
+  * QPS vs batch size (batching is the paper's §3.3 lever);
+  * cache-capacity ablation (hit-rate and bytes saved vs cache_frac);
+  * doorbell-width ablation (§3.2's NIC-scalability tradeoff);
+  * Pallas distance+topk kernel vs jnp ref on the scan path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import P, batched_queries, dataset, emit
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G
+
+
+def _mk(name, **kw):
+    ds = dataset(name)
+    cfg = dict(mode="full", search_mode="scan", b=4, ef=48,
+               n_rep=min(P["n_rep"], ds.data.shape[0] // 16),
+               cache_frac=0.10, doorbell=16, fabric=RDMA_100G, seed=0)
+    cfg.update(kw)
+    return DHNSWEngine(EngineConfig(**cfg)).build(ds.data), ds
+
+
+def run() -> list[dict]:
+    rows = []
+    # ---- QPS vs batch
+    eng, ds = _mk("sift")
+    for batch in (64, 256, 1024):
+        if batch > 4 * len(ds.queries):
+            continue
+        q = batched_queries(ds, batch)
+        eng.search(q, k=10)          # warm
+        t0 = time.perf_counter()
+        _, _, st = eng.search(q, k=10)
+        wall = time.perf_counter() - t0
+        total = st["net"]["latency_s"] + st["sub_s"] + st["meta_s"]
+        row = dict(name=f"throughput/batch{batch}",
+                   us_per_call=round(total / batch * 1e6, 2),
+                   qps_model=int(batch / total), qps_wall=int(batch / wall),
+                   rtpq=round(st["round_trips_per_query"], 5))
+        rows.append(row)
+        emit(dict(row))
+
+    # ---- cache-capacity ablation
+    for frac in (0.02, 0.10, 0.30):
+        eng, ds = _mk("sift", cache_frac=frac)
+        q = batched_queries(ds, P["batch"])
+        eng.search(q, k=10)
+        _, _, st = eng.search(q, k=10)
+        row = dict(name=f"cache/frac{frac}", us_per_call="",
+                   hits=st["cache_hits"], fetches=st["n_fetches"],
+                   bytes=int(st["net"]["bytes"]))
+        rows.append(row)
+        emit(dict(row))
+
+    # ---- doorbell-width ablation
+    for db in (1, 4, 16, 64):
+        eng, ds = _mk("sift", doorbell=db)
+        q = batched_queries(ds, P["batch"])
+        _, _, st = eng.search(q, k=10)
+        row = dict(name=f"doorbell/width{db}", us_per_call="",
+                   trips=st["net"]["round_trips"],
+                   net_us=round(st["net"]["latency_s"] * 1e6, 1))
+        rows.append(row)
+        emit(dict(row))
+
+    # ---- kernel vs ref on the hot loop
+    from repro.kernels.distance_topk.ops import distance_topk
+    ds = dataset("sift")
+    q = jnp.asarray(ds.queries[:128])
+    x = jnp.asarray(ds.data[:4096])
+    for use_ref in (True, False):
+        distance_topk(q, x, 10, use_ref=use_ref)  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            distance_topk(q, x, 10, use_ref=use_ref)[0].block_until_ready()
+        dt = (time.perf_counter() - t0) / 5
+        row = dict(name=f"kernel/distance_topk/{'ref' if use_ref else 'pallas-interp'}",
+                   us_per_call=round(dt * 1e6, 1),
+                   note="interpret-mode-on-CPU; TPU perf from roofline")
+        rows.append(row)
+        emit(dict(row))
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

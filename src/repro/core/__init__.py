@@ -1,0 +1,24 @@
+"""d-HNSW core: the paper's contribution.
+
+Public API:
+    DHNSWEngine / EngineConfig   — build + batched search + insert
+    build_meta                   — representative index (§3.1)
+    build_store / LayoutSpec     — RDMA-friendly layout (§3.2)
+    plan_batch                   — query-aware batched loading (§3.3)
+"""
+from repro.core.cost_model import RDMA_100G, TPU_ICI, Fabric, NetLedger
+from repro.core.engine import MODES, DHNSWEngine, EngineConfig
+from repro.core.hnsw import (HNSW, HNSWParams, PaddedGraph, brute_force_knn,
+                             recall_at_k)
+from repro.core.layout import LayoutSpec, Store, build_store
+from repro.core.meta import MetaIndex, build_meta
+from repro.core.scheduler import LRUCacheState, Plan, naive_plan, plan_batch
+
+__all__ = [
+    "DHNSWEngine", "EngineConfig", "MODES",
+    "HNSW", "HNSWParams", "PaddedGraph", "brute_force_knn", "recall_at_k",
+    "MetaIndex", "build_meta",
+    "LayoutSpec", "Store", "build_store",
+    "LRUCacheState", "Plan", "plan_batch", "naive_plan",
+    "Fabric", "NetLedger", "RDMA_100G", "TPU_ICI",
+]

@@ -1,0 +1,143 @@
+"""Device-side store: fetched-span decode + per-partition search.
+
+Everything here is static-shaped and jit-friendly.  A fetch span is
+``(fetch_blocks, gblk)`` int32 + ``(fetch_blocks, vblk)`` float32 — the
+unit one doorbell descriptor covers.  ``decode_span`` turns a span + its
+metadata row into padded search arrays; the two search paths (faithful
+graph walk / MXU scan) run on the decoded view.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import search as S
+from repro.core.layout import (LayoutSpec, MT_ENTRY, MT_N_BASE, MT_OV_A,
+                               MT_OV_B, MT_SIDE)
+
+
+class DecodedPartition(NamedTuple):
+    vectors: jax.Array    # (np_max + ov_cap, D) — base then overflow slots
+    adjacency: jax.Array  # (1, np_max, deg) local ids, -1 pad
+    gids: jax.Array       # (np_max + ov_cap,) global ids, -1 pad
+    valid: jax.Array      # (np_max + ov_cap,) bool — base n + live overflow
+    entry: jax.Array      # () local entry id (the representative)
+
+
+def decode_span(spec: LayoutSpec, g_span, v_span, meta_row) -> DecodedPartition:
+    """g_span (fetch_blocks, gblk) i32; v_span (fetch_blocks, vblk) f32."""
+    side = meta_row[MT_SIDE]
+    n_base = meta_row[MT_N_BASE]
+    gflat = g_span.reshape(-1)
+    vflat = v_span.reshape(-1)
+
+    data_g = lax.dynamic_slice(gflat, (side * spec.ov_blocks * spec.gblk,),
+                               (spec.np_max * (spec.deg + 1),))
+    adjacency = data_g[: spec.np_max * spec.deg].reshape(spec.np_max, spec.deg)
+    base_gids = data_g[spec.np_max * spec.deg:]
+
+    ov_goff = (1 - side) * spec.data_blocks * spec.gblk
+    ov_gids = lax.dynamic_slice(gflat, (ov_goff,), (spec.ov_cap,))
+
+    data_v = lax.dynamic_slice(vflat, (side * spec.ov_blocks * spec.vblk,),
+                               (spec.np_max * spec.dim,))
+    base_vecs = data_v.reshape(spec.np_max, spec.dim)
+    ov_voff = (1 - side) * spec.data_blocks * spec.vblk
+    ov_vecs = lax.dynamic_slice(vflat, (ov_voff,),
+                                (spec.ov_cap * spec.dim,)).reshape(
+                                    spec.ov_cap, spec.dim)
+
+    cnt_a, cnt_b = meta_row[MT_OV_A], meta_row[MT_OV_B]
+    ov_idx = jnp.arange(spec.ov_cap)
+    # A's inserts fill the front, B's fill the back; a fetch sees both but
+    # only its own side's slots belong to this partition
+    ov_mine = jnp.where(side == 0, ov_idx < cnt_a,
+                        ov_idx >= spec.ov_cap - cnt_b)
+    base_valid = jnp.arange(spec.np_max) < n_base
+    return DecodedPartition(
+        vectors=jnp.concatenate([base_vecs, ov_vecs], axis=0),
+        adjacency=adjacency[None],
+        gids=jnp.concatenate([base_gids, ov_gids]),
+        valid=jnp.concatenate([base_valid, ov_mine]),
+        entry=meta_row[MT_ENTRY],
+    )
+
+
+def search_decoded_scan(part: DecodedPartition, q, k: int):
+    """Exact top-k over every valid vector (base + overflow) — the
+    beyond-paper MXU path.  Returns (dists (k,), global ids (k,))."""
+    d = jnp.sum(jnp.square(part.vectors - q[None, :]), axis=-1)
+    d = jnp.where(part.valid, d, jnp.inf)
+    nd, ni = lax.top_k(-d, k)
+    return -nd, part.gids[ni]
+
+
+def search_decoded_graph(part: DecodedPartition, q, k: int, ef: int):
+    """Paper-faithful: beam-search the sub-HNSW graph over the base
+    vectors, then brute-scan the (tiny) live overflow slice and merge —
+    exactly how the paper covers not-yet-relinked inserted vectors."""
+    np_max = part.adjacency.shape[1]
+    bd, bi = S.beam_search(part.vectors[:np_max], part.adjacency, q,
+                           part.entry, ef=max(ef, k), n_levels=1)
+    bd = jnp.where((bi >= 0) & part.valid[jnp.maximum(bi, 0)], bd, jnp.inf)
+    base_d, base_i = bd[:k], jnp.where(jnp.isfinite(bd[:k]),
+                                       part.gids[jnp.maximum(bi[:k], 0)], -1)
+    ov_vecs = part.vectors[np_max:]
+    ov_d = jnp.sum(jnp.square(ov_vecs - q[None, :]), axis=-1)
+    ov_d = jnp.where(part.valid[np_max:], ov_d, jnp.inf)
+    kk = min(k, ov_vecs.shape[0])
+    od, oi = lax.top_k(-ov_d, kk)
+    og = part.gids[np_max + oi]
+    return S.merge_topk(base_d, base_i, -od, jnp.where(jnp.isfinite(-od), og, -1), k)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "k", "ef", "mode"))
+def serve_pairs(spec: LayoutSpec, cache_g, cache_v, meta_rows, slot_ids,
+                queries, pair_valid, *, k: int, ef: int, mode: str):
+    """Serve one round: for each (query, resident-slot) pair, top-k inside
+    that partition.
+
+    cache_g: (c, fetch_blocks, gblk); cache_v: (c, fetch_blocks, vblk)
+    meta_rows: (n_pairs, META_COLS) — metadata of each pair's partition
+    slot_ids:  (n_pairs,) cache slot holding the partition
+    queries:   (n_pairs, D); pair_valid: (n_pairs,) padding mask
+    Returns (dists, gids): (n_pairs, k), inf/-1 where invalid.
+    """
+
+    def one(slot, row, q, ok):
+        part = decode_span(spec, cache_g[slot], cache_v[slot], row)
+        if mode == "graph":
+            d, g = search_decoded_graph(part, q, k, ef)
+        else:
+            d, g = search_decoded_scan(part, q, k)
+        return jnp.where(ok, d, jnp.inf), jnp.where(ok, g, -1)
+
+    return jax.vmap(one)(slot_ids, meta_rows, queries, pair_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1, 2))
+def write_slots(spec: LayoutSpec, cache_g, cache_v, slot_ids, g_blocks,
+                v_blocks):
+    """Install fetched spans into cache slots (functional scatter).
+
+    g_blocks: (n_fetch, fetch_blocks, gblk); slot_ids: (n_fetch,).
+    """
+    cache_g = cache_g.at[slot_ids].set(g_blocks)
+    cache_v = cache_v.at[slot_ids].set(v_blocks)
+    return cache_g, cache_v
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def overflow_append(spec: LayoutSpec, graph_buf, vec_buf, vec, gid,
+                    vec_block, vec_off, gid_block, gid_off):
+    """Device twin of ``layout.insert_vector``: one-slot scatter into the
+    shared overflow region (coords from ``overflow_write_coords``)."""
+    row = lax.dynamic_update_slice(vec_buf[vec_block], vec, (vec_off,))
+    vec_buf = lax.dynamic_update_index_in_dim(vec_buf, row, vec_block, 0)
+    grow = graph_buf[gid_block].at[gid_off].set(gid)
+    graph_buf = lax.dynamic_update_index_in_dim(graph_buf, grow, gid_block, 0)
+    return graph_buf, vec_buf

@@ -1,0 +1,305 @@
+"""RDMA-friendly graph-index storage layout — paper §3.2, TPU-adapted.
+
+One registered memory region per buffer, divided into fixed-size blocks
+(the doorbell/DMA granularity).  Groups of two sub-HNSW clusters share a
+single overflow region in the middle:
+
+    group g:  [ sub-HNSW A | shared overflow | sub-HNSW B ]
+              `-- fetch A --------------'
+                          `-------------- fetch B --'
+
+so one contiguous read returns a cluster *and* every vector ever inserted
+into it — the paper's core layout invariant.  A global metadata table
+(per-partition offsets/counters) sits logically at the start of the
+region; compute instances cache it (here: small replicated array + host
+mirror).
+
+TPU adaptation (recorded in DESIGN.md): JAX arrays are typed, so the
+byte region becomes two lockstep block buffers — ``graph_buf`` (int32:
+adjacency + global ids) and ``vec_buf`` (float32: vectors) — with
+identical block indexing; and partitions are padded to the build-max
+partition size ``np_max`` so every fetch span is the same number of
+blocks (static shapes).  Uniform sampling makes partitions multinomial-
+balanced (sigma/mean = 1/sqrt(mean)), so measured padding waste is ~7-15%
+and is reported by ``Store.padding_waste()``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.hnsw import HNSW, HNSWParams, bulk_l0_graph
+from repro.core.meta import MetaIndex
+
+# meta_table columns (int32)
+MT_BLK_START = 0   # first block of this partition's fetch span
+MT_SIDE = 1        # 0 = A (data first), 1 = B (overflow first)
+MT_N_BASE = 2      # base vectors in the sub-HNSW
+MT_ENTRY = 3       # entry node (local id) = the representative
+MT_OV_A = 4        # overflow slots used from the front (partner A)
+MT_OV_B = 5        # overflow slots used from the back (partner B)
+MT_GROUP = 6
+META_COLS = 8      # padded for alignment / future fields
+
+
+@dataclass(frozen=True)
+class LayoutSpec:
+    """All build-time constants the device decode path needs (static)."""
+
+    dim: int
+    deg: int               # sub-HNSW L0 degree (M0)
+    np_max: int            # max base vectors per partition (pad target)
+    ov_cap: int            # overflow vector slots per group (shared)
+    slot_vecs: int         # vectors per block (VBLK = slot_vecs * dim)
+    n_partitions: int
+
+    @property
+    def vblk(self) -> int:           # floats per vec block
+        return self.slot_vecs * self.dim
+
+    @property
+    def gblk(self) -> int:           # ints per graph block
+        return self.slot_vecs * (self.deg + 1)
+
+    @property
+    def data_blocks(self) -> int:    # blocks for one padded sub-HNSW
+        g = math.ceil(self.np_max * (self.deg + 1) / self.gblk)
+        v = math.ceil(self.np_max * self.dim / self.vblk)
+        return max(g, v)
+
+    @property
+    def ov_blocks(self) -> int:      # blocks for one shared overflow region
+        g = math.ceil(self.ov_cap / self.gblk)
+        v = math.ceil(self.ov_cap * self.dim / self.vblk)
+        return max(g, v)
+
+    @property
+    def fetch_blocks(self) -> int:   # every fetch span: data + overflow
+        return self.data_blocks + self.ov_blocks
+
+    @property
+    def group_blocks(self) -> int:
+        return 2 * self.data_blocks + self.ov_blocks
+
+    @property
+    def n_groups(self) -> int:
+        return (self.n_partitions + 1) // 2
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_groups * self.group_blocks
+
+    def block_bytes(self) -> int:
+        """Wire bytes of one block fetch (both lockstep buffers)."""
+        return self.vblk * 4 + self.gblk * 4
+
+    def partition_bytes(self) -> int:
+        return self.fetch_blocks * self.block_bytes()
+
+    def data_blk_off(self, side: int) -> int:
+        return side * self.ov_blocks        # B's data sits after the overflow
+
+    def ov_blk_off(self, side: int) -> int:
+        return (1 - side) * self.data_blocks  # A's overflow sits after its data
+
+
+@dataclass
+class Store:
+    """The serialized memory-pool region (host copy; device_put to serve)."""
+
+    spec: LayoutSpec
+    graph_buf: np.ndarray   # (n_blocks, gblk) i32
+    vec_buf: np.ndarray     # (n_blocks, vblk) f32
+    meta_table: np.ndarray  # (P, META_COLS) i32  ("global metadata block")
+    n_base: np.ndarray      # (P,) convenience copy of MT_N_BASE
+
+    def total_bytes(self) -> int:
+        return self.graph_buf.nbytes + self.vec_buf.nbytes
+
+    def padding_waste(self) -> float:
+        used = int(self.n_base.sum()) * (self.spec.dim * 4 + (self.spec.deg + 1) * 4)
+        return 1.0 - used / max(self.total_bytes(), 1)
+
+    def fetch_span(self, pid: int) -> tuple[int, int]:
+        """(first_block, n_blocks) of partition ``pid`` — what one
+        contiguous RDMA_READ (or one doorbell descriptor) covers."""
+        row = self.meta_table[pid]
+        return int(row[MT_BLK_START]), self.spec.fetch_blocks
+
+    def span_block_ids(self, pid: int) -> np.ndarray:
+        s, n = self.fetch_span(pid)
+        return np.arange(s, s + n, dtype=np.int32)
+
+
+def serialize_partition(store: Store, pid: int, local_gids: np.ndarray,
+                        vectors: np.ndarray, entry_local: int = 0,
+                        sub_params: Optional[HNSWParams] = None) -> None:
+    """(Re)build partition ``pid``'s sub-HNSW and serialize it in place.
+
+    ``local_gids``: global ids of the member vectors; ``vectors``: their
+    rows, same order.  Requires ``len(local_gids) <= spec.np_max``.
+    """
+    spec = store.spec
+    p = sub_params or HNSWParams(M=max(spec.deg // 2, 2), M0=spec.deg,
+                                 ef_construction=80)
+    n = len(local_gids)
+    assert n <= spec.np_max, (n, spec.np_max)
+    side = pid % 2
+    group = pid // 2
+    gstart = group * spec.group_blocks
+    data_blk = gstart + (0 if side == 0 else spec.data_blocks + spec.ov_blocks)
+
+    adj = np.full((spec.np_max, spec.deg), -1, np.int32)
+    if n:
+        # bulk offline L0 build (exact kNN + HNSW heuristic prune) — the
+        # paper also builds sub-HNSWs offline; see hnsw.bulk_l0_graph
+        adj[:n] = bulk_l0_graph(np.asarray(vectors, np.float32), spec.deg)
+
+    gflat = store.graph_buf[data_blk:data_blk + spec.data_blocks].reshape(-1)
+    gids = np.full((spec.np_max,), -1, np.int32)
+    gids[:n] = local_gids
+    gflat[: spec.np_max * spec.deg] = adj.reshape(-1)
+    gflat[spec.np_max * spec.deg: spec.np_max * (spec.deg + 1)] = gids
+
+    vflat = store.vec_buf[data_blk:data_blk + spec.data_blocks].reshape(-1)
+    vecs = np.zeros((spec.np_max, spec.dim), np.float32)
+    vecs[:n] = vectors
+    vflat[: spec.np_max * spec.dim] = vecs.reshape(-1)
+
+    row = store.meta_table[pid]
+    # A's span: [data | ov] from the group start; B's: [ov | data] — the
+    # shared overflow is covered by BOTH sides' single contiguous read
+    row[MT_BLK_START] = gstart + side * spec.data_blocks
+    row[MT_SIDE] = side
+    row[MT_N_BASE] = n
+    row[MT_ENTRY] = entry_local
+    row[MT_GROUP] = group
+    store.n_base[pid] = n
+
+
+def build_store(data: np.ndarray, meta: MetaIndex, *,
+                sub_params: Optional[HNSWParams] = None,
+                ov_cap: int = 0, slot_vecs: int = 64,
+                np_max: Optional[int] = None) -> Store:
+    """Build every sub-HNSW and serialize the full memory-pool region."""
+    data = np.asarray(data, np.float32)
+    p = sub_params or HNSWParams(M=8, M0=16, ef_construction=80)
+    parts = meta.partition_lists()
+    P = meta.n_partitions
+    sizes = np.array([len(x) + 1 for x in parts])  # +1: rep always present
+    npm = int(np_max or max(int(sizes.max()), 1))
+    if ov_cap <= 0:
+        # paper sizes the shared region as a small fraction of a group
+        ov_cap = max(16, int(0.1 * 2 * npm))
+    spec = LayoutSpec(dim=data.shape[1], deg=p.M0, np_max=npm, ov_cap=ov_cap,
+                      slot_vecs=slot_vecs, n_partitions=P)
+
+    store = Store(spec=spec,
+                  graph_buf=np.full((spec.n_blocks, spec.gblk), -1, np.int32),
+                  vec_buf=np.zeros((spec.n_blocks, spec.vblk), np.float32),
+                  meta_table=np.zeros((P, META_COLS), np.int32),
+                  n_base=np.zeros((P,), np.int32))
+
+    for pid in range(P):
+        rep_gid = int(meta.rep_ids[pid])
+        ids = [rep_gid] + [int(x) for x in parts[pid] if int(x) != rep_gid]
+        ids = np.asarray(ids[: spec.np_max], np.int64)
+        # entry_local = 0: the representative is inserted first
+        serialize_partition(store, pid, ids, data[ids], 0, p)
+    return store
+
+
+# ----------------------------------------------------------------- insert
+
+def insert_vector(store: Store, vec: np.ndarray, gid: int, pid: int):
+    """Append one vector into partition ``pid``'s shared overflow region
+    (host mirror).  Returns the slot index, or -1 when the group's shared
+    region is full -> caller must repack the group (paper: offline
+    re-pack), see ``repack_group``."""
+    spec = store.spec
+    row = store.meta_table[pid]
+    side, group = int(row[MT_SIDE]), int(row[MT_GROUP])
+    partner = group * 2 + (1 - side)
+    cnt_a, cnt_b = int(row[MT_OV_A]), int(row[MT_OV_B])
+    if cnt_a + cnt_b >= spec.ov_cap:
+        return -1
+    slot = cnt_a if side == 0 else spec.ov_cap - 1 - cnt_b
+
+    co = overflow_write_coords(spec, group, slot)
+    store.vec_buf[co["vec_block"],
+                  co["vec_off"]:co["vec_off"] + spec.dim] = np.asarray(vec, np.float32)
+    store.graph_buf[co["gid_block"], co["gid_off"]] = gid
+
+    col = MT_OV_A if side == 0 else MT_OV_B
+    for q in (pid, partner):
+        if q < spec.n_partitions:
+            store.meta_table[q, col] += 1
+    return slot
+
+
+def overflow_write_coords(spec: LayoutSpec, group: int, slot: int) -> dict:
+    """Buffer coordinates of one overflow slot (device scatter uses the
+    same numbers — ``device_store.overflow_append``)."""
+    ov_blk = group * spec.group_blocks + spec.data_blocks
+    vpos = slot * spec.dim
+    return {
+        "vec_block": ov_blk + vpos // spec.vblk,
+        "vec_off": vpos % spec.vblk,
+        "gid_block": ov_blk + slot // spec.gblk,
+        "gid_off": slot % spec.gblk,
+    }
+
+
+def partition_gids(store: Store, pid: int) -> np.ndarray:
+    """Global ids of the base (graph) vectors of ``pid``."""
+    spec = store.spec
+    row = store.meta_table[pid]
+    side, group = int(row[MT_SIDE]), int(row[MT_GROUP])
+    data_blk = group * spec.group_blocks + (
+        0 if side == 0 else spec.data_blocks + spec.ov_blocks)
+    gflat = store.graph_buf[data_blk:data_blk + spec.data_blocks].reshape(-1)
+    gids = gflat[spec.np_max * spec.deg: spec.np_max * (spec.deg + 1)]
+    return gids[: int(row[MT_N_BASE])].copy()
+
+
+def overflow_gids(store: Store, pid: int) -> np.ndarray:
+    """Global ids of ``pid``'s live overflow inserts (its side only)."""
+    spec = store.spec
+    row = store.meta_table[pid]
+    side, group = int(row[MT_SIDE]), int(row[MT_GROUP])
+    ov_blk = group * spec.group_blocks + spec.data_blocks
+    gflat = store.graph_buf[ov_blk:ov_blk + spec.ov_blocks].reshape(-1)
+    if side == 0:
+        return gflat[: int(row[MT_OV_A])].copy()
+    cb = int(row[MT_OV_B])
+    return gflat[spec.ov_cap - cb: spec.ov_cap][::-1].copy() if cb else gflat[:0]
+
+
+def repack_group(store: Store, group: int, data_lookup,
+                 sub_params: Optional[HNSWParams] = None) -> bool:
+    """Fold both partitions' overflow inserts into rebuilt sub-HNSWs and
+    re-serialize the group in place (paper's offline re-pack).  Returns
+    False if a merged partition no longer fits ``np_max`` (caller must do
+    a full ``build_store`` rebuild with a larger pad)."""
+    spec = store.spec
+    members: dict[int, np.ndarray] = {}
+    for side in (0, 1):
+        pid = group * 2 + side
+        if pid >= spec.n_partitions:
+            continue
+        ids = np.concatenate([partition_gids(store, pid),
+                              overflow_gids(store, pid)])
+        if len(ids) > spec.np_max:
+            return False
+        members[pid] = ids
+    ov_blk = group * spec.group_blocks + spec.data_blocks
+    store.graph_buf[ov_blk:ov_blk + spec.ov_blocks] = -1
+    store.vec_buf[ov_blk:ov_blk + spec.ov_blocks] = 0.0
+    for pid, ids in members.items():
+        serialize_partition(store, pid, ids, data_lookup(ids), 0, sub_params)
+        store.meta_table[pid, MT_OV_A] = 0
+        store.meta_table[pid, MT_OV_B] = 0
+    return True

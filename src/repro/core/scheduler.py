@@ -1,0 +1,167 @@
+"""Query-aware batched data loading — paper §3.3.
+
+Given a batch of queries and each query's top-*b* partitions (from the
+cached meta-HNSW), plan the fetches so that:
+
+  * each required partition is loaded from the memory pool **at most
+    once** per batch (the paper's headline invariant);
+  * partitions already resident in the compute-node cache are not
+    fetched at all;
+  * fetches are grouped into *doorbell batches* of <= ``doorbell`` spans
+    per round trip;
+  * the number of simultaneously-resident partitions never exceeds the
+    cache capacity *c*; processing is organized in **rounds**: fetch a
+    set, serve every (query, partition) pair that hits it, evict LRU,
+    repeat.  Per-query running top-k accumulates across rounds
+    (Fig. 5's "temporarily stored for further comparison").
+
+Planning is plain host code (numpy): it is the compute-instance CPU role
+in the paper, and it only touches the (B, b) partition-id matrix the
+meta-route already produced.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Round:
+    """One fetch-and-serve round.  Slot ids are assigned at *planning*
+    time (a later round may evict this round's partitions, so executors
+    must not re-derive slots from the final cache state)."""
+
+    fetch_pids: np.ndarray          # partitions to pull this round (<= free slots)
+    fetch_slots: np.ndarray         # cache slot for each fetched partition
+    doorbells: list[np.ndarray]     # fetch_pids split into doorbell batches
+    evict_pids: np.ndarray          # evicted before the fetch (LRU)
+    serve_pairs: np.ndarray         # (n, 2) [query_idx, pid] served this round
+    pair_slots: np.ndarray          # (n,) slot holding each pair's partition
+
+
+@dataclass
+class Plan:
+    rounds: list[Round]
+    unique_pids: np.ndarray         # all distinct partitions this batch needs
+    n_cache_hits: int               # (query, partition) pairs already resident
+    n_fetches: int                  # partitions actually transferred
+
+    def loads_per_partition(self) -> dict[int, int]:
+        cnt: dict[int, int] = {}
+        for r in self.rounds:
+            for p in r.fetch_pids.tolist():
+                cnt[p] = cnt.get(p, 0) + 1
+        return cnt
+
+
+class LRUCacheState:
+    """Host-side mirror of the compute-node resident-partition cache.
+
+    Slot contents live on device (``engine.py``); this tracks pid->slot
+    and recency.  Functionally updated by the plan executor so the most
+    recently used *c* partitions persist into the next batch (§3.3)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.slots: list[int] = [-1] * capacity   # slot -> pid
+        self._recency: list[int] = []             # pids, LRU first
+
+    def resident(self) -> set[int]:
+        return {p for p in self.slots if p >= 0}
+
+    def slot_of(self, pid: int) -> int:
+        return self.slots.index(pid)
+
+    def touch(self, pid: int) -> None:
+        if pid in self._recency:
+            self._recency.remove(pid)
+        self._recency.append(pid)
+
+    def admit(self, pid: int) -> tuple[int, int]:
+        """Returns (slot, evicted_pid or -1)."""
+        if pid in self.slots:
+            self.touch(pid)
+            return self.slots.index(pid), -1
+        if -1 in self.slots:
+            slot = self.slots.index(-1)
+            evicted = -1
+        else:
+            lru = self._recency.pop(0)
+            slot = self.slots.index(lru)
+            evicted = lru
+        self.slots[slot] = pid
+        self.touch(pid)
+        return slot, evicted
+
+
+def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
+               doorbell: int = 8) -> Plan:
+    """Build the round schedule for one query batch.
+
+    ``topb_pids``: (B, b) int — per-query required partitions, nearest
+    first.  Mutates ``cache`` recency/slots to its post-batch state.
+    """
+    topb = np.asarray(topb_pids)
+    B, b = topb.shape
+    cap = cache.capacity
+
+    # (query, pid) demand pairs, de-duplicated per query
+    demand: dict[int, list[int]] = {}
+    for q in range(B):
+        for p in dict.fromkeys(int(x) for x in topb[q]):
+            demand.setdefault(p, []).append(q)
+    unique = np.array(sorted(demand), dtype=np.int64)
+
+    resident = cache.resident()
+    hits = [p for p in unique.tolist() if p in resident]
+    n_cache_hits = sum(len(demand[p]) for p in hits)
+    missing = [p for p in unique.tolist() if p not in resident]
+    # fetch order: highest fan-in first — serves the most queries per
+    # round and makes early rounds maximally useful
+    missing.sort(key=lambda p: -len(demand[p]))
+
+    rounds: list[Round] = []
+    # round 0: serve everything already resident (zero fetches)
+    if hits:
+        pairs = np.array([(q, p) for p in hits for q in demand[p]], np.int64)
+        slots = np.array([cache.slot_of(p) for p in hits], np.int64)
+        pslots = np.array([cache.slot_of(p) for p in hits
+                           for _ in demand[p]], np.int64)
+        for p in hits:
+            cache.touch(p)
+        rounds.append(Round(np.array([], np.int64), np.array([], np.int64),
+                            [], np.array([], np.int64), pairs, pslots))
+
+    i = 0
+    while i < len(missing):
+        take = missing[i:i + cap]
+        i += len(take)
+        evicted, slots = [], []
+        for p in take:
+            slot, ev = cache.admit(p)
+            slots.append(slot)
+            if ev >= 0:
+                evicted.append(ev)
+        pairs = np.array([(q, p) for p in take for q in demand[p]], np.int64)
+        pslots = np.array([s for p, s in zip(take, slots)
+                           for _ in demand[p]], np.int64)
+        fetch = np.array(take, np.int64)
+        doorbells = [fetch[j:j + doorbell] for j in range(0, len(fetch), doorbell)]
+        rounds.append(Round(fetch, np.array(slots, np.int64), doorbells,
+                            np.array(evicted, np.int64), pairs, pslots))
+
+    return Plan(rounds=rounds, unique_pids=unique,
+                n_cache_hits=n_cache_hits, n_fetches=len(missing))
+
+
+def naive_plan(topb_pids: np.ndarray) -> list[tuple[int, int]]:
+    """The Naive d-HNSW baseline: every (query, partition) need is its own
+    RDMA read — no dedup, no cache, no doorbell.  Returns the raw fetch
+    list [(query, pid), ...] whose length is the round-trip count."""
+    topb = np.asarray(topb_pids)
+    out = []
+    for q in range(topb.shape[0]):
+        for p in dict.fromkeys(int(x) for x in topb[q]):
+            out.append((q, p))
+    return out

@@ -1,0 +1,55 @@
+"""Elastic scaling: reshard live state onto a different mesh.
+
+Down-scale (lost a pod / shrank the fleet) and up-scale (capacity came
+back) are the same operation: build the new mesh, resolve the same
+*logical* specs against it, and ``device_put`` every leaf to its new
+sharding.  Works for params/opt state (train) and for the d-HNSW
+sharded store (serve) — the store's block-contiguous owner mapping means
+a rescale moves whole block ranges, and ``plan_store_migration`` lists
+exactly which block spans each owner sends where.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_tree(tree: Any, new_shardings: Any) -> Any:
+    """Move every leaf to the new mesh/sharding (cross-mesh device_put)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, new_shardings)
+
+
+def rescale_train_state(params, opt_state, defs, new_mesh: Mesh):
+    """Re-resolve the params' logical specs on ``new_mesh`` and move."""
+    from repro.models.params import param_shardings
+    from repro.train.adamw import AdamWState
+    p_sh = param_shardings(defs, new_mesh)
+    opt_sh = AdamWState(NamedSharding(new_mesh, P()), p_sh, p_sh)
+    return reshard_tree(params, p_sh), reshard_tree(opt_state, opt_sh)
+
+
+def plan_store_migration(n_blocks: int, old_tp: int, new_tp: int):
+    """Block moves for rescaling the d-HNSW memory pool owner count.
+
+    Returns [(src_owner, dst_owner, first_block, n)] — contiguous spans
+    only (the layout guarantee).  Total moved bytes is the rescale cost.
+    """
+    old_per = -(-n_blocks // old_tp)
+    new_per = -(-n_blocks // new_tp)
+    moves = []
+    b = 0
+    while b < n_blocks:
+        src = min(b // old_per, old_tp - 1)
+        dst = min(b // new_per, new_tp - 1)
+        # span until either owner boundary changes
+        nxt = min((b // old_per + 1) * old_per,
+                  (b // new_per + 1) * new_per, n_blocks)
+        if src != dst:
+            moves.append((src, dst, b, nxt - b))
+        b = nxt
+    return moves

@@ -1,0 +1,133 @@
+"""Fault tolerance: heartbeats, straggler detection, checkpoint-restart.
+
+At 1000+ nodes the design assumptions are: (i) *some* worker is always
+slow or dead, (ii) restart must resume from the last committed step with
+no torn state, (iii) the d-HNSW partition->owner map must re-balance
+away from sick memory owners without a full re-shard.
+
+``HeartbeatMonitor`` tracks per-worker beat times and per-step
+durations; stragglers are flagged by an EWMA z-score on step time (the
+standard straggler test — robust to the global speed drifting).
+``run_with_restarts`` is the supervision loop: it executes a step
+function, checkpoints every ``ckpt_every`` steps (atomic, see
+train/checkpoint.py), and on failure restores the last commit and
+continues — fault injection in tests exercises exactly this path.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.train import checkpoint as CKPT
+
+
+@dataclass
+class WorkerStats:
+    last_beat: float = 0.0
+    ewma: float = 0.0       # step-time EWMA
+    ewvar: float = 0.0      # EWMA of squared deviation
+    n: int = 0
+
+
+class HeartbeatMonitor:
+    """Detects dead workers (beat timeout) and stragglers (z-score)."""
+
+    def __init__(self, n_workers: int, *, timeout_s: float = 10.0,
+                 alpha: float = 0.2, z_thresh: float = 3.0):
+        self.workers = {i: WorkerStats() for i in range(n_workers)}
+        self.timeout_s = timeout_s
+        self.alpha = alpha
+        self.z_thresh = z_thresh
+
+    def beat(self, worker: int, step_time_s: float,
+             now: Optional[float] = None) -> None:
+        w = self.workers[worker]
+        w.last_beat = time.monotonic() if now is None else now
+        if w.n == 0:
+            w.ewma = step_time_s
+        else:
+            d = step_time_s - w.ewma
+            w.ewma += self.alpha * d
+            w.ewvar = (1 - self.alpha) * (w.ewvar + self.alpha * d * d)
+        w.n += 1
+
+    def dead(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [i for i, w in self.workers.items()
+                if w.n > 0 and now - w.last_beat > self.timeout_s]
+
+    def stragglers(self) -> list[int]:
+        """Workers whose EWMA step time is a z_thresh outlier vs the fleet."""
+        live = [w.ewma for w in self.workers.values() if w.n >= 3]
+        if len(live) < 3:
+            return []
+        mean = sum(live) / len(live)
+        var = sum((x - mean) ** 2 for x in live) / len(live)
+        sd = math.sqrt(var) + 1e-9
+        return [i for i, w in self.workers.items()
+                if w.n >= 3 and (w.ewma - mean) / sd > self.z_thresh]
+
+
+def rebalance_partitions(owners, sick: set[int], n_owners: int):
+    """Reassign d-HNSW partitions owned by sick memory instances to the
+    least-loaded healthy ones.  The paper's layout makes each migration a
+    contiguous copy of one group span.  Returns (new_owners, moves)."""
+    import numpy as np
+    owners = np.asarray(owners).copy()
+    healthy = [o for o in range(n_owners) if o not in sick]
+    if not healthy:
+        raise RuntimeError("no healthy memory instances left")
+    load = {o: int((owners == o).sum()) for o in healthy}
+    moves = []
+    for pid in np.nonzero(np.isin(owners, list(sick)))[0]:
+        tgt = min(load, key=load.get)
+        moves.append((int(pid), int(owners[pid]), tgt))
+        owners[pid] = tgt
+        load[tgt] += 1
+    return owners, moves
+
+
+@dataclass
+class RestartReport:
+    steps_done: int
+    n_failures: int
+    n_restores: int
+    history: list = field(default_factory=list)
+
+
+def run_with_restarts(step_fn: Callable[[Any, int], Any], state: Any,
+                      n_steps: int, *, ckpt_dir: str, ckpt_every: int = 10,
+                      shardings: Any = None,
+                      max_failures: int = 10) -> tuple[Any, RestartReport]:
+    """Supervised training loop: step, checkpoint, restore-on-failure.
+
+    ``step_fn(state, step) -> state`` may raise (fault injection or real
+    device loss).  On failure we restore the last committed checkpoint
+    and resume from its step.  This is the single-controller analogue of
+    a multi-controller restart: in a real pod deployment each host runs
+    this loop and the failed host's work is recovered from the shared
+    checkpoint directory.
+    """
+    report = RestartReport(0, 0, 0)
+    step = 0
+    CKPT.save(ckpt_dir, step, state)
+    failures = 0
+    while step < n_steps:
+        try:
+            state = step_fn(state, step)
+            step += 1
+            report.steps_done = step
+            if step % ckpt_every == 0 or step == n_steps:
+                CKPT.save(ckpt_dir, step, state)
+                report.history.append(("ckpt", step))
+        except Exception as e:  # noqa: BLE001 — supervision boundary
+            failures += 1
+            report.n_failures = failures
+            if failures > max_failures:
+                raise
+            state, step = CKPT.restore(ckpt_dir, state, shardings=shardings)
+            report.n_restores += 1
+            report.history.append(("restore", step, repr(e)[:60]))
+    return state, report

@@ -1,0 +1,104 @@
+"""GQA flash-decode attention Pallas TPU kernel.
+
+The serving substrate's hot spot: one new query token per sequence
+against a long KV cache — strictly memory-bound (arithmetic intensity
+~2 flops/byte of KV).  The kernel streams the cache through VMEM in
+blocks with online-softmax accumulation, so HBM traffic is exactly one
+pass over K and V; the (tiny) q tile stays resident.
+
+Grid: (B, S/block_s), cache-block axis innermost; scratch carries the
+running (max, sum, acc) across cache blocks.  Per-step VMEM:
+q (K*G, hd) + k/v blocks (block_s, K, hd) x2 + acc — with block_s=256,
+K<=32, hd<=128: ~9 MB worst case, v5e-safe; hd and block_s stay
+multiples of 128/8 for lane alignment.
+
+``pos`` (valid cache length per sequence) is scalar-prefetched: the
+grid's block masks are computed from it before the body runs, and whole
+blocks past ``pos`` skip their flash update entirely (the same trick
+flash-decode uses to avoid streaming dead cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, block_s: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+
+    @pl.when(j * block_s < pos)          # skip fully-masked cache blocks
+    def _update():
+        q = q_ref[0].astype(jnp.float32)             # (K, G, hd)
+        k = k_ref[0].astype(jnp.float32)             # (BS, K, hd)
+        v = v_ref[0].astype(jnp.float32)             # (BS, K, hd)
+        # s[k, g, s] = q[k, g, :] . k[s, k, :]  — batched over kv heads
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale   # (K, G, BS)
+        kpos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos < pos, s, NEG)
+
+        m_prev = m_scr[...]                          # (K, G)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])            # (K, G, BS)
+        corr = jnp.exp(m_prev - m_new)               # (K, G)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1)
+        # acc[k, g, h] += p[k, g, s] v[s, k, h]
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)      # (K, G, hd)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q, k, v, pos, *, block_s: int = 256,
+                            interpret: bool = False):
+    """q (B, K, G, hd); k/v (B, S, K, hd); pos (B,) i32 -> (B, K, G, hd)."""
+    B, K, G, hd = q.shape
+    S = k.shape[1]
+    assert S % block_s == 0, (S, block_s)
+    grid = (B, S // block_s)
+    kern = functools.partial(_kernel, block_s=block_s, scale=hd ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, K, G, hd), lambda b, j, pos: (b, 0, 0, 0)),
+                pl.BlockSpec((1, block_s, K, hd), lambda b, j, pos: (b, j, 0, 0)),
+                pl.BlockSpec((1, block_s, K, hd), lambda b, j, pos: (b, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, K, G, hd), lambda b, j, pos: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((K, G), jnp.float32),
+                pltpu.VMEM((K, G), jnp.float32),
+                pltpu.VMEM((K, G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(pos, q, k, v)

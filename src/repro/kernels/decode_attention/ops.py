@@ -1,0 +1,37 @@
+"""jit'd public wrapper for GQA flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret",
+                                             "use_ref"))
+def decode_attention(q, k, v, pos, *, block_s: int = 256,
+                     interpret: bool | None = None, use_ref: bool = False):
+    """One-token GQA attention against a KV cache.
+
+    q (B, H, hd); k/v (B, S, K, hd); pos (B,) -> (B, H, hd).
+    Pads S to a block multiple (masked via pos).
+    """
+    if use_ref:
+        return decode_attention_ref(q, k, v, pos)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    pad = (-S) % block_s
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = decode_attention_pallas(q.reshape(B, K, G, hd), k, v,
+                                  jnp.asarray(pos, jnp.int32),
+                                  block_s=block_s, interpret=interpret)
+    return out.reshape(B, H, hd)

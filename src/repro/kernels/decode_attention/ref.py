@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for GQA flash-decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos):
+    """One-token GQA attention against a KV cache.
+
+    q (B, H, hd); k/v (B, S, K, hd); pos (B,) = number of valid cache
+    entries per sequence (attend to cache[:pos]).  H = K * G.
+    Returns (B, H, hd) f32.
+    """
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, kf) * (hd ** -0.5)
+    mask = jnp.arange(S)[None, :] < pos[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vf)
+    return out.reshape(B, H, hd)

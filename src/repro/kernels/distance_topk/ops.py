@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the fused distance+top-k kernel.
+
+Pads inputs to block multiples, dispatches to the Pallas kernel
+(interpret=True on CPU — this container — compiled BlockSpecs on TPU),
+and restores inf/-1 padding semantics.  ``use_ref=True`` forces the
+pure-jnp oracle (useful to A/B in benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance_topk.kernel import MASKED, distance_topk_pallas
+from repro.kernels.distance_topk.ref import distance_topk_ref
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "interpret", "use_ref"))
+def distance_topk(queries, database, k: int, n_valid=None, *,
+                  block_q: int = 128, block_n: int = 256,
+                  interpret: bool | None = None, use_ref: bool = False):
+    """Top-k nearest database rows per query (squared L2, ascending).
+
+    queries (B, D), database (N, D) -> (dists (B, k), ids (B, k)).
+    ``n_valid`` masks padded/unused database rows (defaults to N).
+    """
+    if n_valid is None:
+        n_valid = queries.shape[0] * 0 + database.shape[0]
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape(())
+    if use_ref:
+        return distance_topk_ref(queries, database, k, n_valid)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, D = queries.shape
+    qp = _pad_to(queries.astype(jnp.float32), block_q, 0)
+    xp = _pad_to(database.astype(jnp.float32), block_n, 0)
+    d, i = distance_topk_pallas(qp, xp, n_valid, k=k, block_q=block_q,
+                                block_n=block_n, interpret=interpret)
+    d, i = d[:B], i[:B]
+    bad = d >= MASKED * 0.99
+    return jnp.where(bad, jnp.inf, d), jnp.where(bad, -1, i)

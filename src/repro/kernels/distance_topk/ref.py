@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused distance+top-k kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def distance_topk_ref(queries, database, k: int, n_valid=None):
+    """Exact squared-L2 top-k.
+
+    queries: (B, D); database: (N, D) -> (dists (B, k), ids (B, k)),
+    ascending.  ``n_valid`` masks padded database rows.
+    """
+    q = queries.astype(jnp.float32)
+    x = database.astype(jnp.float32)
+    d = (jnp.sum(q * q, -1)[:, None] - 2.0 * q @ x.T
+         + jnp.sum(x * x, -1)[None, :])
+    if n_valid is not None:
+        d = jnp.where(jnp.arange(x.shape[0])[None, :] < n_valid, d, jnp.inf)
+    nd, ni = lax.top_k(-d, k)
+    return -nd, ni

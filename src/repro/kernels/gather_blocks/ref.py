@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the doorbell block gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_blocks_ref(buf, block_ids):
+    """buf (n_blocks, blk); block_ids (m,) i32 -> (m, blk)."""
+    return jnp.take(buf, block_ids, axis=0)

@@ -1,0 +1,245 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the fake-device flag before any other import (jax locks device
+count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import SHAPES, shape_applicable  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.train.train_step import make_step  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9_\[\],x\s{}:()]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|c64|c128|f8e4m3|f8e5m2)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum operand sizes of collective ops in post-SPMD HLO, per op kind,
+    plus a ring-model wire-bytes estimate per participating device."""
+    per_kind: dict[str, float] = {}
+    wire = 0.0
+    count = 0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).lower()
+        if m.group(4) == "-done":
+            continue  # count each async pair once (at -start)
+        # operand/result sizes: the type annotation before the op name is
+        # the RESULT; operands inside the parens are often printed as
+        # bare names (no types), so derive operand size from the result
+        # when the inline parse comes up empty.
+        lhs, rhs = line.split("=", 1)
+        result_b = _shape_bytes(rhs.split("(")[0])
+        args_b = _shape_bytes(rhs.split("(", 1)[1])
+        # group size (for ring model)
+        g = 0
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        g = max(g, 2)
+        if kind == "all-gather":
+            op_b = args_b or result_b / g
+            w = result_b * (g - 1) / g
+        elif kind == "all-reduce":
+            op_b = args_b or result_b
+            w = 2 * op_b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            op_b = args_b or result_b * g
+            w = result_b * (g - 1)
+        elif kind == "all-to-all":
+            op_b = args_b or result_b
+            w = op_b * (g - 1) / g
+        else:  # collective-permute
+            op_b = args_b or result_b
+            w = op_b
+        per_kind[kind] = per_kind.get(kind, 0.0) + op_b
+        wire += w
+        count += 1
+    return {"operand_bytes_by_kind": per_kind,
+            "operand_bytes_total": sum(per_kind.values()),
+            "wire_bytes_per_device": wire,
+            "n_collectives": count}
+
+
+# per-cell gradient-accumulation overrides: biggest models need
+# microbatching to fit 16 GB/chip at global batch 256.  SSM/hybrid train
+# cells hold per-chunk SSD states (B x nchunks x heads x hp x state), so
+# they microbatch the hardest.
+MICRO_OVERRIDES = {
+    ("llama4-scout-17b-a16e", "train_4k"): 4,
+    ("gemma2-27b", "train_4k"): 2,
+    ("qwen3-moe-30b-a3b", "train_4k"): 2,
+    ("whisper-tiny", "train_4k"): 8,
+    ("mamba2-370m", "train_4k"): 8,
+    ("zamba2-2.7b", "train_4k"): 32,
+}
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool,
+             keep_hlo: bool = False, micro_steps: int = 0) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_id)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_id,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    micro = micro_steps or MICRO_OVERRIDES.get((arch, shape_id), 1)
+    t0 = time.time()
+    fn, in_sh, out_sh, abstract_args = make_step(cfg, shape, mesh,
+                                                 micro_steps=micro)
+    # steady-state aliasing: train donates (params, opt); decode donates cache
+    donate = ()
+    if shape.kind == "train":
+        donate = (0, 1)
+    elif shape.kind == "decode":
+        donate = (1,)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    res = {"arch": arch, "shape": shape_id,
+           "mesh": "multi" if multi_pod else "single",
+           "status": "ok", "lower_s": round(t_lower, 1),
+           "compile_s": round(t_compile, 1),
+           "micro_steps": micro,
+           "n_devices": mesh.size,
+           "n_params": int(cfg.param_count()),
+           "n_params_active": int(cfg.param_count(active_only=True)),
+           "model_flops": M.model_flops(cfg, shape)}
+    try:
+        ma = compiled.memory_analysis()
+        res["memory"] = {
+            "argument_size_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_size_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_size_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_size_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        res["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        res["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       (k in ("flops", "bytes accessed", "optimal_seconds")
+                        or k.startswith("bytes accessed"))}
+    except Exception as e:  # pragma: no cover
+        res["cost"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    res["collectives"] = parse_collectives(hlo)
+    res["hlo_chars"] = len(hlo)
+    hlo_dir = os.environ.get("DRYRUN_HLO_DIR")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        fname = f"{arch}_{shape_id}_{'multi' if multi_pod else 'single'}.hlo.gz"
+        with gzip.open(os.path.join(hlo_dir, fname), "wt") as f:
+            f.write(hlo)
+        res["hlo_file"] = fname
+    if keep_hlo:
+        res["hlo"] = hlo
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    for arch in archs:
+        for shape_id in shapes:
+            for mp in meshes:
+                key = (arch, shape_id, "multi" if mp else "single")
+                if key in done:
+                    print(f"[skip-done] {key}", flush=True)
+                    continue
+                print(f"[run] {key}", flush=True)
+                try:
+                    res = run_cell(arch, shape_id, mp)
+                except Exception as e:
+                    res = {"arch": arch, "shape": shape_id,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                line = json.dumps(res)
+                print(f"[res] {res['status']} {key} "
+                      f"compile={res.get('compile_s', '-')}s", flush=True)
+                if res["status"] == "error":
+                    print(res["traceback"], flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+                else:
+                    print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""whisper-style encoder-decoder backbone.
+
+The conv/log-mel audio frontend is a STUB per the brief: ``input_specs``
+provides precomputed frame embeddings (B, enc_seq, d_model).  Positions
+are sinusoidal (adaptation: whisper-tiny's learned decoder positions cap
+at 448; the assigned synthetic stress shapes need arbitrary lengths).
+
+Decoder layers: causal self-attention (KV cache) + cross-attention to the
+encoder output (cross-KV computed once at prefill and cached) + MLP.
+Whisper predates SwiGLU; we keep GELU MLPs for the family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+
+def _sinusoid(positions, d):
+    """positions: (...,) -> (..., d) sinusoidal embeddings."""
+    half = d // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_defs(cfg, Lx, st, prefix=""):
+    d, hd = cfg.d_model, cfg.the_head_dim()
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    return {
+        prefix + "norm": ParamDef(Lx + (d,), st + (None,), init="zeros"),
+        prefix + "wq": ParamDef(Lx + (d, H * hd), st + ("fsdp", "tp")),
+        prefix + "wk": ParamDef(Lx + (d, K * hd), st + ("fsdp", "tp")),
+        prefix + "wv": ParamDef(Lx + (d, K * hd), st + ("fsdp", "tp")),
+        prefix + "wo": ParamDef(Lx + (H * hd, d), st + ("tp", "fsdp")),
+    }
+
+
+def _mlp_defs(cfg, Lx, st):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mlp_norm": ParamDef(Lx + (d,), st + (None,), init="zeros"),
+        "w1": ParamDef(Lx + (d, f), st + ("fsdp", "tp")),
+        "w2": ParamDef(Lx + (f, d), st + ("tp", "fsdp")),
+    }
+
+
+def param_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    Le, Ld = (cfg.n_enc_layers,), (cfg.n_layers,)
+    st = (None,)
+    enc_blocks = {**_attn_defs(cfg, Le, st), **_mlp_defs(cfg, Le, st)}
+    dec_blocks = {**_attn_defs(cfg, Ld, st),
+                  **_attn_defs(cfg, Ld, st, prefix="x_"),
+                  **_mlp_defs(cfg, Ld, st)}
+    return {
+        "embed": ParamDef((cfg.vocab_size, d), ("tp", "fsdp")),
+        "enc_blocks": enc_blocks,
+        "enc_norm": ParamDef((d,), (None,), init="zeros"),
+        "dec_blocks": dec_blocks,
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+        "unembed": ParamDef((d, cfg.vocab_size), ("fsdp", "tp")),
+    }
+
+
+def _mha(cfg, p, x, kv_src, *, prefix="", causal, cache=None, pos=None,
+         q_positions=None):
+    """Generic attention sub-block.  kv_src: tensor to project K/V from."""
+    dt0 = x.dtype
+    d, hd = cfg.d_model, cfg.the_head_dim()
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    h = L.rms_norm(x, p[prefix + "norm"], cfg.norm_eps)
+    B, S, _ = h.shape
+    q = (h @ p[prefix + "wq"].astype(dt0)).reshape(B, S, H, hd)
+    if cache is not None and prefix == "x_":
+        k, v = cache  # precomputed cross-KV
+        out = L.attend_full(q[:, :1] if S == 1 else q, k, v, causal=False) \
+            if S == 1 else L.attend(q, k, v, causal=False)
+        y = out.reshape(B, S, H * hd) @ p[prefix + "wo"].astype(dt0)
+        return x + y, cache
+    kv = L.rms_norm(kv_src, p[prefix + "norm"], cfg.norm_eps) \
+        if kv_src is not x else h
+    Skv = kv.shape[1]
+    k = (kv @ p[prefix + "wk"].astype(dt0)).reshape(B, Skv, K, hd)
+    v = (kv @ p[prefix + "wv"].astype(dt0)).reshape(B, Skv, K, hd)
+    if cache is not None:  # decode self-attention
+        kc, vc = cache
+        kc = L.scatter_kv(kc, k[:, 0], pos)
+        vc = L.scatter_kv(vc, v[:, 0], pos)
+        out = L.attend_decode(q[:, 0], kc, vc, pos)[:, None]
+        new_cache = (kc, vc)
+    else:
+        out = L.attend(q, k, v, causal=causal)
+        new_cache = (k, v)
+    y = out.reshape(B, S, H * hd) @ p[prefix + "wo"].astype(dt0)
+    return x + y, new_cache
+
+
+def _mlp(cfg, p, x):
+    dt0 = x.dtype
+    h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + L.gelu_mlp(h, p["w1"].astype(dt0), p["w2"].astype(dt0))
+
+
+def encode(cfg, params, frames):
+    """frames: (B, enc_seq, d) stub embeddings -> encoder output."""
+    dt0 = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt0) + _sinusoid(jnp.arange(frames.shape[1]),
+                                       cfg.d_model).astype(dt0)[None]
+
+    def body(x, p):
+        y, _ = _mha(cfg, p, x, x, causal=False)
+        y = _mlp(cfg, p, y)
+        return y, None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg, params, tokens, *, frames=None, mesh=None, remat=True,
+            patches=None, return_hidden=False):
+    """Training forward: frames + teacher-forced tokens -> logits."""
+    dt0 = jnp.dtype(cfg.dtype)
+    enc = encode(cfg, params, frames)
+    S = tokens.shape[1]
+    x = params["embed"].astype(dt0)[tokens]
+    x = x + _sinusoid(jnp.arange(S), cfg.d_model).astype(dt0)[None]
+
+    def body(x, p):
+        y, _ = _mha(cfg, p, x, x, causal=True)
+        y, _ = _mha(cfg, p, y, enc, prefix="x_", causal=False)
+        y = _mlp(cfg, p, y)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = x @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def init_cache_abstract(cfg, batch: int, cache_len: int):
+    hd = cfg.the_head_dim()
+    dt0 = jnp.dtype(cfg.dtype)
+    Lr = cfg.n_layers
+    kv = jax.ShapeDtypeStruct((Lr, batch, cache_len, cfg.n_kv_heads, hd), dt0)
+    xkv = jax.ShapeDtypeStruct((Lr, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dt0)
+    return (kv, kv, xkv, xkv)
+
+
+def cache_logical_spec(cfg, tp_size: int):
+    if cfg.n_kv_heads and tp_size and cfg.n_kv_heads % tp_size == 0:
+        kv = (None, "batch", None, "tp", None)
+        xkv = (None, "batch", None, "tp", None)
+    else:
+        kv = (None, "batch", "seq", None, None)
+        xkv = (None, "batch", None, None, None)
+    return (kv, kv, xkv, xkv)
+
+
+def prefill(cfg, params, tokens, cache_len: int, *, frames=None, mesh=None,
+            patches=None):
+    dt0 = jnp.dtype(cfg.dtype)
+    enc = encode(cfg, params, frames)
+    S = tokens.shape[1]
+    x = params["embed"].astype(dt0)[tokens]
+    x = x + _sinusoid(jnp.arange(S), cfg.d_model).astype(dt0)[None]
+    hd = cfg.the_head_dim()
+    K = cfg.n_kv_heads
+    B = tokens.shape[0]
+
+    def body(x, p):
+        y, (k, v) = _mha(cfg, p, x, x, causal=True)
+        # cross-KV computed once here, cached for decode
+        kvn = L.rms_norm(enc, p["x_norm"], cfg.norm_eps)
+        xk = (kvn @ p["x_wk"].astype(dt0)).reshape(B, -1, K, hd)
+        xv = (kvn @ p["x_wv"].astype(dt0)).reshape(B, -1, K, hd)
+        y, _ = _mha(cfg, p, y, enc, prefix="x_", causal=False)
+        y = _mlp(cfg, p, y)
+        pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        return y, (jnp.pad(k, pad), jnp.pad(v, pad), xk, xv)
+
+    x, (kc, vc, xk, xv) = lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), (kc, vc, xk, xv)
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, mesh=None):
+    dt0 = jnp.dtype(cfg.dtype)
+    kc, vc, xk, xv = cache
+    x = params["embed"].astype(dt0)[tokens[:, None]]
+    x = x + _sinusoid(pos, cfg.d_model).astype(dt0)[:, None]
+
+    def body(x, inp):
+        p, kci, vci, xki, xvi = inp
+        y, (kci, vci) = _mha(cfg, p, x, x, causal=True, cache=(kci, vci),
+                             pos=pos)
+        y, _ = _mha(cfg, p, y, None, prefix="x_", causal=False,
+                    cache=(xki, xvi))
+        y = _mlp(cfg, p, y)
+        return y, (kci, vci)
+
+    x, (kc, vc) = lax.scan(body, x, (params["dec_blocks"], kc, vc, xk, xv))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), (kc, vc, xk, xv)

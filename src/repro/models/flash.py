@@ -1,0 +1,192 @@
+"""Flash attention with a custom VJP (pure JAX, TPU-shaped blocks).
+
+The forward is double-blocked online softmax; the backward *recomputes*
+block scores instead of saving them (saved residuals: q, k, v, out, m, l
+— O(S) memory, never O(S^2)).  Without this, the backward of the nested
+scans would stash every block's probabilities and reconstruct the full
+attention matrix in fp32.
+
+Supports GQA (q heads grouped over kv heads), causal masking, sliding
+windows (traced per-layer scalar — gemma2 local/global), and gemma2-style
+score softcap (tanh), whose derivative is handled analytically in bwd.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def _mask(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    w = jnp.asarray(window)
+    m &= (w <= 0) | (qpos[:, None] - kpos[None, :] < w)
+    return m
+
+
+def _fwd_impl(q, k, v, window, causal, softcap, block_q, block_kv):
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    nq, nkv = Sq // block_q, Skv // block_kv
+    scale = hd ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, K, G, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nkv, block_kv, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nkv, block_kv, K, hd), 1, 0)
+
+    def one_q(inp):
+        qblk, iq = inp
+        qg = qblk.astype(F32)
+        qpos = iq * block_q + jnp.arange(block_q)
+
+        def body(carry, inp2):
+            m, l, acc = carry
+            kblk, vblk, jk = inp2
+            kpos = jk * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kblk.astype(F32)) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
+                          s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vblk.astype(F32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, block_q), -1e30, F32)
+        l0 = jnp.zeros((B, K, G, block_q), F32)
+        a0 = jnp.zeros((B, K, G, block_q, hd), F32)
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nkv)))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(o, (1, 2), (2, 3)), m, l  # (B,bq,K,G,hd), ...
+
+    out, m, l = lax.map(one_q, (qb, jnp.arange(nq)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+    m = jnp.moveaxis(m, 0, 3).reshape(B, K, G, Sq)  # (nq,B,K,G,bq)->(B,K,G,nq*bq)
+    l = jnp.moveaxis(l, 0, 3).reshape(B, K, G, Sq)
+    return out, m, l
+
+
+def _bwd_impl(q, k, v, out, m, l, dout, window, causal, softcap,
+              block_q, block_kv):
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    nq, nkv = Sq // block_q, Skv // block_kv
+    scale = hd ** -0.5
+    do = dout.astype(F32).reshape(B, Sq, K, G, hd)
+    of = out.astype(F32).reshape(B, Sq, K, G, hd)
+    D = jnp.einsum("bskgh,bskgh->bkgs", do, of)  # (B,K,G,Sq)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, K, G, hd), 1, 0)
+    dob = jnp.moveaxis(do.reshape(B, nq, block_q, K, G, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nkv, block_kv, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nkv, block_kv, K, hd), 1, 0)
+    mb = jnp.moveaxis(m.reshape(B, K, G, nq, block_q), 3, 0)
+    lb = jnp.moveaxis(l.reshape(B, K, G, nq, block_q), 3, 0)
+    Db = jnp.moveaxis(D.reshape(B, K, G, nq, block_q), 3, 0)
+
+    def q_loop(carry, inp):
+        dk_all, dv_all = carry  # (B, Skv, K, hd) f32 each
+        qi, doi, mi, li, Di, iq = inp
+        qg = qi.astype(F32)
+        qpos = iq * block_q + jnp.arange(block_q)
+        li_safe = jnp.maximum(li, 1e-30)
+
+        def kv_loop(c2, inp2):
+            dq_i, dk_all, dv_all = c2
+            kj, vj, jk = inp2
+            kpos = jk * block_kv + jnp.arange(block_kv)
+            kjf, vjf = kj.astype(F32), vj.astype(F32)
+            s_raw = jnp.einsum("bqkgh,bskh->bkgqs", qg, kjf) * scale
+            if softcap:
+                t = jnp.tanh(s_raw / softcap)
+                s = t * softcap
+            else:
+                s = s_raw
+            msk = _mask(qpos, kpos, causal, window)[None, None, None]
+            s = jnp.where(msk, s, -1e30)
+            p = jnp.exp(s - mi[..., None]) / li_safe[..., None]
+            dp = jnp.einsum("bqkgh,bskh->bkgqs", doi, vjf)
+            dc = p * (dp - Di[..., None])
+            if softcap:
+                ds = dc * (1.0 - t * t)
+            else:
+                ds = dc
+            ds = jnp.where(msk, ds, 0.0)
+            dq_i = dq_i + jnp.einsum("bkgqs,bskh->bqkgh", ds, kjf) * scale
+            dk_j = jnp.einsum("bkgqs,bqkgh->bskh", ds, qg) * scale
+            dv_j = jnp.einsum("bkgqs,bqkgh->bskh", p, doi)
+            sl = (0, jk * block_kv, 0, 0)
+            dk_all = lax.dynamic_update_slice(
+                dk_all, lax.dynamic_slice(dk_all, sl, dk_j.shape) + dk_j, sl)
+            dv_all = lax.dynamic_update_slice(
+                dv_all, lax.dynamic_slice(dv_all, sl, dv_j.shape) + dv_j, sl)
+            return (dq_i, dk_all, dv_all), None
+
+        dq0 = jnp.zeros((B, block_q, K, G, hd), F32)
+        (dq_i, dk_all, dv_all), _ = lax.scan(
+            kv_loop, (dq0, dk_all, dv_all), (kb, vb, jnp.arange(nkv)))
+        return (dk_all, dv_all), dq_i
+
+    dk0 = jnp.zeros((B, Skv, K, hd), F32)
+    dv0 = jnp.zeros((B, Skv, K, hd), F32)
+    (dk, dv), dqs = lax.scan(q_loop, (dk0, dv0),
+                             (qb, dob, mb, lb, Db, jnp.arange(nq)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, window, causal, softcap, block_q, block_kv):
+    out, _, _ = _fwd_impl(q, k, v, window, causal, softcap, block_q, block_kv)
+    return out
+
+
+def _fa_fwd(q, k, v, window, causal, softcap, block_q, block_kv):
+    out, m, l = _fwd_impl(q, k, v, window, causal, softcap, block_q, block_kv)
+    return out, (q, k, v, out, m, l, window)
+
+
+def _fa_bwd(causal, softcap, block_q, block_kv, res, dout):
+    q, k, v, out, m, l, window = res
+    dq, dk, dv = _bwd_impl(q, k, v, out, m, l, dout, window, causal,
+                           softcap, block_q, block_kv)
+    return dq, dk, dv, jnp.zeros_like(window)
+
+
+_flash.defvjp(_fa_fwd, _fa_bwd)
+
+
+def _pick_block(s: int, target: int) -> int:
+    if s <= target:
+        return s
+    for b in range(target, 127, -1):
+        if s % b == 0:
+            return b
+    return 0  # no usable block size
+
+
+def flash_attention(q, k, v, *, window=0, causal=True, softcap=0.0,
+                    block_q=512, block_kv=1024):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, K, hd); window: traced scalar or
+    int (<=0 disables).  Returns (B, Sq, H, hd)."""
+    bq = _pick_block(q.shape[1], block_q)
+    bkv = _pick_block(k.shape[1], block_kv)
+    if not bq or not bkv:
+        raise ValueError(f"no block size for Sq={q.shape[1]} Skv={k.shape[1]}")
+    w = jnp.asarray(window, F32)
+    return _flash(q, k, v, w, causal, softcap, bq, bkv)
+
+
+def flash_ok(q_len: int, kv_len: int) -> bool:
+    return bool(_pick_block(q_len, 512)) and bool(_pick_block(kv_len, 1024))

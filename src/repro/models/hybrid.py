@@ -1,0 +1,157 @@
+"""zamba2-style hybrid: Mamba-2 backbone + ONE shared attention block
+applied every ``attn_every`` mamba layers (weights tied across all uses,
+as in Zamba2 — the memory win of the architecture).
+
+Layer stack = n_uses groups of [attn_every x mamba2, shared-attn+MLP].
+The mamba layers scan (stacked params reshaped (n_uses, attn_every, ...));
+the shared block is a single unstacked param set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models import transformer as tfm
+from repro.models.params import ParamDef
+
+
+def n_uses(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "embed": ParamDef((cfg.vocab_size, d), ("tp", "fsdp")),
+        "blocks": mamba2.mixer_param_defs(cfg, (cfg.n_layers,), (None,)),
+        "shared_attn": tfm.block_param_defs(
+            cfg.replace(family="dense"), 0, stacked=False),
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+        "unembed": ParamDef((d, cfg.vocab_size), ("fsdp", "tp")),
+    }
+
+
+def _group_params(params, cfg):
+    """Reshape stacked (L, ...) mamba params to (n_uses, attn_every, ...)."""
+    u, k = n_uses(cfg), cfg.attn_every
+    return jax.tree.map(lambda a: a.reshape((u, k) + a.shape[1:]),
+                        params["blocks"])
+
+
+def forward(cfg, params, tokens, *, mesh=None, remat=True, patches=None,
+            return_hidden=False):
+    dt0 = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt0)[tokens]
+    grouped = _group_params(params, cfg)
+    dense_cfg = cfg.replace(family="dense")
+
+    def mamba_body(x, p):
+        y, _ = mamba2.mixer(cfg, p, x, mode="train")
+        return y, None
+
+    def attn_body(x):
+        y, _, _ = tfm.block(dense_cfg, params["shared_attn"], x,
+                            jnp.int32(0), mode="train", mesh=mesh)
+        return y
+
+    if remat:
+        mamba_body = jax.checkpoint(
+            mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+        attn_body = jax.checkpoint(
+            attn_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    for u in range(n_uses(cfg)):
+        p_u = jax.tree.map(lambda a: a[u], grouped)
+        x, _ = lax.scan(mamba_body, x, p_u)
+        x = attn_body(x)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = x @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def init_cache_abstract(cfg, batch: int, cache_len: int):
+    mcache = mamba2.init_cache_abstract(cfg, batch, cache_len)
+    hd = cfg.the_head_dim()
+    u = n_uses(cfg)
+    kv = jax.ShapeDtypeStruct((u, batch, cache_len, cfg.n_kv_heads, hd),
+                              jnp.dtype(cfg.dtype))
+    return mcache + (kv, kv)
+
+
+def cache_logical_spec(cfg, tp_size: int):
+    mspec = mamba2.cache_logical_spec(cfg, tp_size)
+    if cfg.n_kv_heads and tp_size and cfg.n_kv_heads % tp_size == 0:
+        kv = (None, "batch", None, "tp", None)
+    else:
+        kv = (None, "batch", "seq", None, None)
+    return mspec + (kv, kv)
+
+
+def prefill(cfg, params, tokens, cache_len: int, *, mesh=None, patches=None):
+    dt0 = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt0)[tokens]
+    S = x.shape[1]
+    grouped = _group_params(params, cfg)
+    dense_cfg = cfg.replace(family="dense")
+
+    def mamba_body(x, p):
+        y, c = mamba2.mixer(cfg, p, x, mode="prefill")
+        return y, c
+
+    mcaches, kcaches, vcaches = [], [], []
+    for u in range(n_uses(cfg)):
+        p_u = jax.tree.map(lambda a: a[u], grouped)
+        x, c = lax.scan(mamba_body, x, p_u)
+        mcaches.append(c)
+        x, (k, v), _ = tfm.block(dense_cfg, params["shared_attn"], x,
+                                 jnp.int32(0), mode="prefill", mesh=mesh)
+        pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        kcaches.append(jnp.pad(k, pad))
+        vcaches.append(jnp.pad(v, pad))
+    # mcaches are (attn_every, ...) per group -> concat to (L, ...)
+    mcache = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *mcaches)
+    kc = jnp.stack(kcaches)
+    vc = jnp.stack(vcaches)
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), tuple(mcache) + (kc, vc)
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, mesh=None):
+    dt0 = jnp.dtype(cfg.dtype)
+    cx, cbc, cs, kc, vc = cache
+    x = params["embed"].astype(dt0)[tokens[:, None]]
+    u, k = n_uses(cfg), cfg.attn_every
+    grouped = _group_params(params, cfg)
+    g_cx = cx.reshape((u, k) + cx.shape[1:])
+    g_cbc = cbc.reshape((u, k) + cbc.shape[1:])
+    g_cs = cs.reshape((u, k) + cs.shape[1:])
+    dense_cfg = cfg.replace(family="dense")
+
+    def mamba_body(x, inp):
+        p, c0, c1, c2 = inp
+        y, c = mamba2.mixer(cfg, p, x, mode="decode", cache=(c0, c1, c2))
+        return y, c
+
+    new_m, new_k, new_v = [], [], []
+    for ui in range(u):
+        p_u = jax.tree.map(lambda a: a[ui], grouped)
+        x, c = lax.scan(mamba_body, x, (p_u, g_cx[ui], g_cbc[ui], g_cs[ui]))
+        new_m.append(c)
+        x, (kci, vci), _ = tfm.block(dense_cfg, params["shared_attn"], x,
+                                     jnp.int32(0), mode="decode",
+                                     cache=(kc[ui], vc[ui]), pos=pos, mesh=mesh)
+        new_k.append(kci)
+        new_v.append(vci)
+    mcache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_m)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), tuple(mcache) + (jnp.stack(new_k),
+                                                        jnp.stack(new_v))

@@ -1,0 +1,281 @@
+"""Mamba-2 (SSD — state-space duality) mixer + full LM.
+
+Training/prefill run the chunked SSD algorithm (quadratic within Q-token
+chunks on the MXU, linear recurrence across chunks via ``lax.scan``);
+decode is the O(1) recurrent update.  Projections follow the mamba2
+reference: in_proj -> (z, x, B, C, dt), depthwise causal conv over
+(x, B, C), gated RMSNorm before out_proj.
+
+TP sharding: the z/x/dt projections and conv channels are head-sharded
+over ``model``; the (small, group-shared) B/C projections are replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+CHUNK = 256
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mixer_param_defs(cfg: ModelConfig, Lx, st):
+    d = cfg.d_model
+    d_in, nh, g, N, hp = dims(cfg)
+    w = cfg.ssm_conv
+    return {
+        "norm": ParamDef(Lx + (d,), st + (None,), init="zeros"),
+        "in_zx": ParamDef(Lx + (d, 2 * d_in), st + ("fsdp", "tp")),
+        "in_bc": ParamDef(Lx + (d, 2 * g * N), st + ("fsdp", None)),
+        "in_dt": ParamDef(Lx + (d, nh), st + ("fsdp", "tp")),
+        "conv_x": ParamDef(Lx + (d_in, w), st + ("tp", None), scale=0.5),
+        "conv_bc": ParamDef(Lx + (2 * g * N, w), st + (None, None), scale=0.5),
+        "dt_bias": ParamDef(Lx + (nh,), st + (None,), init="zeros"),
+        "A_log": ParamDef(Lx + (nh,), st + (None,), init="zeros"),
+        "Dskip": ParamDef(Lx + (nh,), st + (None,), init="ones"),
+        "gnorm": ParamDef(Lx + (d_in,), st + ("tp",), init="zeros"),
+        "out_proj": ParamDef(Lx + (d_in, d), st + ("tp", "fsdp")),
+    }
+
+
+def param_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "embed": ParamDef((cfg.vocab_size, d), ("tp", "fsdp")),
+        "blocks": mixer_param_defs(cfg, (cfg.n_layers,), (None,)),
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+        "unembed": ParamDef((d, cfg.vocab_size), ("fsdp", "tp")),
+    }
+
+
+# ------------------------------------------------------------- conv
+
+def causal_depthwise_conv(x, w, state=None):
+    """x: (B, S, C), w: (C, W).  Returns (y, new_state (B, C, W-1))."""
+    B, S, C = x.shape
+    W = w.shape[1]
+    xt = x.swapaxes(1, 2)  # (B, C, S)
+    if state is None:
+        pad = jnp.zeros((B, C, W - 1), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    full = jnp.concatenate([pad, xt], axis=-1)  # (B, C, S+W-1)
+    idx = jnp.arange(S)[:, None] + jnp.arange(W)[None, :]  # (S, W)
+    windows = full[:, :, idx]  # (B, C, S, W)
+    y = jnp.einsum("bcsw,cw->bsc", windows, w.astype(x.dtype))
+    new_state = full[:, :, -(W - 1):] if W > 1 else jnp.zeros((B, C, 0), x.dtype)
+    return y, new_state
+
+
+# ------------------------------------------------------------- SSD core
+
+def _segsum(cs):
+    """cs: (..., Q) cumulative sums -> (..., Q, Q) with [i,j]=cs[i]-cs[j],
+    -inf above the diagonal."""
+    Q = cs.shape[-1]
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, init_state=None, chunk=CHUNK):
+    """Chunked SSD scan.
+
+    x: (B, S, nh, hp); dt: (B, S, nh); A: (nh,) (negative);
+    Bm/Cm: (B, S, nh, N) (already group-expanded).
+    Returns (y (B, S, nh, hp), final_state (B, nh, hp, N)).
+    """
+    Bb, S, nh, hp = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    f32 = jnp.float32
+    xr = x.reshape(Bb, nc, Q, nh, hp).astype(f32)
+    dtr = dt.reshape(Bb, nc, Q, nh).astype(f32)
+    Br = Bm.reshape(Bb, nc, Q, nh, N).astype(f32)
+    Cr = Cm.reshape(Bb, nc, Q, nh, N).astype(f32)
+    dA = dtr * A.astype(f32)  # (B, nc, Q, nh)
+    cs = jnp.cumsum(dA, axis=2)
+    Lmat = jnp.exp(_segsum(cs.swapaxes(2, 3)))  # (B, nc, nh, Q, Q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cr, Br)
+    xdt = xr * dtr[..., None]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", CB * Lmat, xdt)
+    # per-chunk new state contribution
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (B, nc, Q, nh)
+    S_c = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Br, decay_to_end * dtr, xr)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B, nc, nh)
+
+    def scan_body(state, inp):
+        s_c, cd = inp  # (B, nh, hp, N), (B, nh)
+        state_in = state
+        state = state * cd[:, :, None, None] + s_c
+        return state, state_in
+
+    if init_state is None:
+        init_state = jnp.zeros((Bb, nh, hp, N), f32)
+    final_state, states_in = lax.scan(
+        scan_body, init_state.astype(f32),
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (B, nc, nh, hp, N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Cr * jnp.exp(cs)[..., None],
+                         states_in)
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hp)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode(x, dt, A, Bm, Cm, state):
+    """Single-token recurrence.  x: (B, nh, hp); dt: (B, nh);
+    Bm/Cm: (B, nh, N); state: (B, nh, hp, N)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))  # (B, nh)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(f32), x.astype(f32),
+                     Bm.astype(f32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm.astype(f32))
+    return y.astype(x.dtype), state
+
+
+# ------------------------------------------------------------- mixer
+
+def _project(cfg, p, h):
+    d_in, nh, g, N, hp = dims(cfg)
+    dt0 = h.dtype
+    zx = h @ p["in_zx"].astype(dt0)
+    z, xs = jnp.split(zx, 2, axis=-1)
+    bc = h @ p["in_bc"].astype(dt0)
+    dtv = h @ p["in_dt"].astype(dt0)
+    return z, xs, bc, dtv
+
+
+def _expand_groups(bc, cfg):
+    d_in, nh, g, N, hp = dims(cfg)
+    B, S = bc.shape[:2]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    Bm = Bm.reshape(B, S, g, N)
+    Cm = Cm.reshape(B, S, g, N)
+    rep = nh // g
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    return Bm, Cm
+
+
+def mixer(cfg, p, x, *, mode, cache=None):
+    """x: (B, S, d).  cache = (conv_x_state, conv_bc_state, ssm_state)."""
+    d_in, nh, g, N, hp = dims(cfg)
+    dt0 = x.dtype
+    B, S, _ = x.shape
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xs, bc, dtv = _project(cfg, p, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dtv.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if mode == "decode":
+        conv_x_st, conv_bc_st, ssm_st = cache
+        xs_c, conv_x_st = causal_depthwise_conv(xs, p["conv_x"], conv_x_st)
+        bc_c, conv_bc_st = causal_depthwise_conv(bc, p["conv_bc"], conv_bc_st)
+        xs_c, bc_c = jax.nn.silu(xs_c), jax.nn.silu(bc_c)
+        Bm, Cm = _expand_groups(bc_c, cfg)
+        y, ssm_st = ssd_decode(
+            xs_c[:, 0].reshape(B, nh, hp), dt[:, 0],
+            A, Bm[:, 0], Cm[:, 0], ssm_st)
+        y = y.reshape(B, 1, nh, hp)
+        xs_res = xs_c.reshape(B, 1, nh, hp)
+        new_cache = (conv_x_st, conv_bc_st, ssm_st)
+    else:
+        xs_c, conv_x_st = causal_depthwise_conv(xs, p["conv_x"])
+        bc_c, conv_bc_st = causal_depthwise_conv(bc, p["conv_bc"])
+        xs_c, bc_c = jax.nn.silu(xs_c), jax.nn.silu(bc_c)
+        Bm, Cm = _expand_groups(bc_c, cfg)
+        y, ssm_st = ssd_chunked(xs_c.reshape(B, S, nh, hp), dt, A, Bm, Cm)
+        xs_res = xs_c.reshape(B, S, nh, hp)
+        new_cache = (conv_x_st, conv_bc_st, ssm_st) if mode == "prefill" else None
+
+    y = y + xs_res * p["Dskip"].astype(dt0)[None, None, :, None]
+    y = y.reshape(B, -1, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt0),
+                   p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt0)
+    return x + out, new_cache
+
+
+# ------------------------------------------------------------- full LM
+
+def forward(cfg, params, tokens, *, mesh=None, remat=True, patches=None,
+            return_hidden=False):
+    dt0 = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt0)[tokens]
+
+    def body(x, p):
+        y, _ = mixer(cfg, p, x, mode="train")
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = x @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def init_cache_abstract(cfg, batch: int, cache_len: int):
+    """SSM 'cache' is O(1): conv tails + state (cache_len-independent)."""
+    d_in, nh, g, N, hp = dims(cfg)
+    w = cfg.ssm_conv
+    dt0 = jnp.dtype(cfg.dtype)
+    Lr = cfg.n_layers
+    return (
+        jax.ShapeDtypeStruct((Lr, batch, d_in, w - 1), dt0),
+        jax.ShapeDtypeStruct((Lr, batch, 2 * g * N, w - 1), dt0),
+        jax.ShapeDtypeStruct((Lr, batch, nh, hp, N), jnp.float32),
+    )
+
+
+def cache_logical_spec(cfg, tp_size: int):
+    return (
+        (None, "batch", "tp", None),
+        (None, "batch", None, None),
+        (None, "batch", "tp", None, None),
+    )
+
+
+def prefill(cfg, params, tokens, cache_len: int, *, mesh=None, patches=None):
+    dt0 = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt0)[tokens]
+
+    def body(x, p):
+        y, cache = mixer(cfg, p, x, mode="prefill")
+        return y, cache
+
+    x, caches = lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, mesh=None):
+    dt0 = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt0)[tokens[:, None]]
+
+    def body(x, inp):
+        p, cx, cbc, cs = inp
+        y, new_cache = mixer(cfg, p, x, mode="decode", cache=(cx, cbc, cs))
+        return y, new_cache
+
+    x, new_cache = lax.scan(body, x, (params["blocks"],) + tuple(cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["unembed"].astype(dt0)
+    return logits.astype(jnp.float32), new_cache

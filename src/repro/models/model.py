@@ -1,0 +1,138 @@
+"""Family dispatcher + abstract inputs for dry-runs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given (arch x input-shape) cell — weak-type-correct,
+shardable, zero allocation — exactly what ``jax.jit(...).lower(**specs)``
+needs.  Modality frontends are stubs per the brief: whisper gets frame
+embeddings, pixtral gets patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, hybrid, mamba2
+from repro.models import transformer as tfm
+from repro.models.params import (ParamDef, abstract_params, count_params,
+                                 init_params, param_pspecs, param_shardings)
+
+_FAMS = {
+    "dense": tfm, "moe": tfm, "vlm": tfm,
+    "ssm": mamba2, "hybrid": hybrid, "encdec": encdec,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMS[cfg.family]
+
+
+def param_defs(cfg: ModelConfig):
+    return family_module(cfg).param_defs(cfg)
+
+
+def serve_param_defs(cfg: ModelConfig):
+    """Serving stores bf16 weights, TP-sharded only (no per-token FSDP
+    gathers at decode)."""
+    def conv(d: ParamDef) -> ParamDef:
+        logical = tuple(None if ax == "fsdp" else ax for ax in d.logical)
+        return ParamDef(d.shape, logical, d.init, d.scale, jnp.bfloat16)
+    return jax.tree.map(conv, param_defs(cfg),
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def forward(cfg, params, batch: dict, *, mesh=None, remat=True,
+            return_hidden=False):
+    mod = family_module(cfg)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["frames"] = batch["frames"]
+    if cfg.family == "vlm":
+        kw["patches"] = batch.get("patches")
+    return mod.forward(cfg, params, batch["tokens"], mesh=mesh, remat=remat,
+                       return_hidden=return_hidden, **kw)
+
+
+def prefill(cfg, params, batch: dict, cache_len: int, *, mesh=None):
+    mod = family_module(cfg)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["frames"] = batch["frames"]
+    if cfg.family == "vlm":
+        kw["patches"] = batch.get("patches")
+    return mod.prefill(cfg, params, batch["tokens"], cache_len, mesh=mesh,
+                       **kw)
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, mesh=None):
+    return family_module(cfg).decode_step(cfg, params, cache, tokens, pos,
+                                          mesh=mesh)
+
+
+def init_cache_abstract(cfg, batch: int, cache_len: int):
+    return family_module(cfg).init_cache_abstract(cfg, batch, cache_len)
+
+
+def cache_logical_spec(cfg, tp_size: int):
+    return family_module(cfg).cache_logical_spec(cfg, tp_size)
+
+
+# --------------------------------------------------------------- inputs
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract model inputs for one cell.  Keys depend on shape.kind."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    out: dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((B, S), i32)
+        out["labels"] = sds((B, S), i32)
+        if cfg.family == "encdec":
+            out["frames"] = sds((B, cfg.enc_seq, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            out["patches"] = sds((B, cfg.n_patches, cfg.d_model), f32)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S), i32)
+        if cfg.family == "encdec":
+            out["frames"] = sds((B, cfg.enc_seq, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            out["patches"] = sds((B, cfg.n_patches, cfg.d_model), f32)
+    else:  # decode: one new token against a cache of length S
+        out["tokens"] = sds((B,), i32)
+        out["pos"] = sds((B,), i32)
+    return out
+
+
+def input_logical_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Logical partition specs matching input_specs."""
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": ("batch", None)}
+        if shape.kind == "train":
+            out["labels"] = ("batch", None)
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", None, None)
+        if cfg.family == "vlm":
+            out["patches"] = ("batch", None, None)
+        return out
+    return {"tokens": ("batch",), "pos": ("batch",)}
+
+
+# --------------------------------------------------------------- flops
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D = batch
+    tokens (one step).  Training counts fwd+bwd (x3 of 2ND)."""
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    # exclude unembed? standard 6ND includes all matmul params; keep all.
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,141 @@
+"""Parameter definition + logical-axis sharding machinery.
+
+Params are nested dicts of arrays.  Each leaf is declared once as a
+``ParamDef`` carrying shape, dtype, init scale and a *logical* partition
+spec (axis names like "fsdp"/"tp"); ``resolve_specs`` maps logical names
+onto whatever mesh axes actually exist ("data", "model", optionally
+"pod"), dropping axes that don't divide the dimension (GSPMD could pad,
+but exact shards keep memory analysis honest).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis name -> function(mesh axis names) -> physical axis (or None)
+_LOGICAL = {
+    "batch": lambda names: tuple(a for a in ("pod", "data") if a in names) or None,
+    "fsdp": lambda names: "data" if "data" in names else None,
+    "tp": lambda names: "model" if "model" in names else None,
+    "seq": lambda names: "model" if "model" in names else None,
+    "pod": lambda names: "pod" if "pod" in names else None,
+    None: lambda names: None,
+}
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        return int(np.prod([mesh.shape[a] for a in phys]))
+    return mesh.shape[phys]
+
+
+def resolve_spec(logical: tuple, shape: tuple, mesh: Optional[Mesh]) -> P:
+    """Logical spec -> PartitionSpec valid on `mesh` (divisibility-checked)."""
+    if mesh is None:
+        return P()
+    names = mesh.axis_names
+    out = []
+    for dim, log in zip(shape, logical):
+        phys = _LOGICAL[log](names) if log in _LOGICAL else None
+        if phys is not None and dim % _axis_size(mesh, phys) == 0 and dim > 0:
+            out.append(phys)
+        else:
+            out.append(None)
+    # trailing Nones are implicit
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(mesh: Optional[Mesh], logical: tuple, shape: tuple):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh))
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    logical: tuple  # logical partition spec, one entry per dim (None ok)
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def abstract(self):
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def init_leaf(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, d.shape)).astype(d.dtype)
+
+
+def init_params(defs, key) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [init_leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(defs) -> Any:
+    return jax.tree.map(lambda d: d.abstract(), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_shardings(defs, mesh: Optional[Mesh]) -> Any:
+    return jax.tree.map(
+        lambda d: named_sharding(mesh, d.logical, d.shape),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_pspecs(defs, mesh: Optional[Mesh]) -> Any:
+    return jax.tree.map(
+        lambda d: resolve_spec(d.logical, d.shape, mesh),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def seq_shard(x, mesh):
+    """Megatron-style sequence-parallel constraint on (B, S, d) residual
+    activations: shard S over the `model` axis so per-layer saved
+    activations are 1/tp the size.  XLA inserts the all-gather before
+    attention/MoE and the reduce-scatter after (SP collectives)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    if mesh.shape["model"] <= 1 or x.ndim < 3 or x.shape[1] % mesh.shape["model"]:
+        return x
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names) or None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(batch_axes, "model", None)))
+
+
+def shard_heads(t, mesh):
+    """Constraint for (B, S, H, hd) attention tensors: batch over
+    data(/pod), heads over model when divisible (TP attention)."""
+    if mesh is None or t.ndim != 4:
+        return t
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names) or None
+    tp = mesh.shape["model"] if "model" in names else 1
+    head_ax = "model" if (tp > 1 and t.shape[2] % tp == 0) else None
+    if batch_axes is None and head_ax is None:
+        return t
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, P(batch_axes, None, head_ax, None)))
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(int(np.prod(d.shape)) for d in leaves)

@@ -1,0 +1,258 @@
+"""Dense decoder-only transformer (also the backbone for moe / vlm).
+
+Layers are stacked on a leading L axis and driven by ``lax.scan`` so the
+HLO is depth-independent; the scan body is ``jax.checkpoint``-ed for
+training (remat).  Per-layer heterogeneity (gemma2 local/global windows)
+rides along as scan xs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.params import ParamDef
+
+# ------------------------------------------------------------------ defs
+
+def block_param_defs(cfg: ModelConfig, n_layers: int, stacked: bool = True):
+    d, hd = cfg.d_model, cfg.the_head_dim()
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    Lx = (n_layers,) if stacked else ()
+    st = (None,) if stacked else ()
+    defs = {
+        "attn_norm": ParamDef(Lx + (d,), st + (None,), init="zeros"),
+        "wq": ParamDef(Lx + (d, H * hd), st + ("fsdp", "tp")),
+        "wk": ParamDef(Lx + (d, K * hd), st + ("fsdp", "tp")),
+        "wv": ParamDef(Lx + (d, K * hd), st + ("fsdp", "tp")),
+        "wo": ParamDef(Lx + (H * hd, d), st + ("tp", "fsdp")),
+        "mlp_norm": ParamDef(Lx + (d,), st + (None,), init="zeros"),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef(Lx + (hd,), st + (None,), init="zeros")
+        defs["k_norm"] = ParamDef(Lx + (hd,), st + (None,), init="zeros")
+    if cfg.family == "moe":
+        defs.update(moe_lib.moe_param_defs(cfg, Lx, st))
+        if cfg.shared_expert:
+            defs.update({
+                "se_wg": ParamDef(Lx + (d, cfg.d_ff), st + ("fsdp", "tp")),
+                "se_wu": ParamDef(Lx + (d, cfg.d_ff), st + ("fsdp", "tp")),
+                "se_wd": ParamDef(Lx + (cfg.d_ff, d), st + ("tp", "fsdp")),
+            })
+    else:
+        defs.update({
+            "wg": ParamDef(Lx + (d, cfg.d_ff), st + ("fsdp", "tp")),
+            "wu": ParamDef(Lx + (d, cfg.d_ff), st + ("fsdp", "tp")),
+            "wd": ParamDef(Lx + (cfg.d_ff, d), st + ("tp", "fsdp")),
+        })
+    return defs
+
+
+def param_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    defs = {
+        "embed": ParamDef((cfg.vocab_size, d), ("tp", "fsdp"), scale=1.0),
+        "blocks": block_param_defs(cfg, cfg.n_layers),
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+        "unembed": ParamDef((d, cfg.vocab_size), ("fsdp", "tp")),
+    }
+    if cfg.family == "vlm":
+        defs["patch_proj"] = ParamDef((d, d), ("fsdp", "tp"))
+    return defs
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding-window sizes (0 = global)."""
+    if cfg.local_global_pattern:
+        w = np.zeros(cfg.n_layers, np.int32)
+        w[::2] = cfg.local_window  # even layers local, odd global (gemma2)
+        return w
+    return np.full(cfg.n_layers, cfg.local_window, np.int32)
+
+
+# ------------------------------------------------------------------ blocks
+
+def _attn_block(cfg: ModelConfig, p, x, window, *, mode, cache=None,
+                pos=None, mesh=None):
+    """x: (B, S, d) for train/prefill; (B, 1, d) for decode."""
+    from repro.models.params import shard_heads
+    dt = x.dtype
+    hd = cfg.the_head_dim()
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    B, S, _ = h.shape
+    q = (h @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (h @ p["wk"].astype(dt)).reshape(B, S, K, hd)
+    v = (h @ p["wv"].astype(dt)).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = L.l2_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.l2_head_norm(k, p["k_norm"], cfg.norm_eps)
+    if mode == "decode":
+        positions = pos[:, None]  # (B, 1)
+    else:
+        positions = jnp.arange(S)[None, :]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if mode != "decode":
+        q, k, v = (shard_heads(t, mesh) for t in (q, k, v))
+
+    def _attend_tp(q, k, v):
+        """Attention with TP-friendly head padding: when H doesn't divide
+        the model axis (llama4: 40 heads on tp=16), pad the GQA group dim
+        so K*G' divides tp, shard the padded heads, slice back after."""
+        tp = (mesh.shape["model"]
+              if mesh is not None and "model" in mesh.axis_names else 1)
+        if tp <= 1 or H % tp == 0 or H <= tp:
+            out = L.attend(q, k, v, causal=True, window=window,
+                           softcap=cfg.attn_softcap)
+            return shard_heads(out, mesh)
+        G = H // K
+        Gp = G
+        while (K * Gp) % tp:
+            Gp += 1
+        qg = q.reshape(B, S, K, G, hd)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, Gp - G), (0, 0)))
+        qp = shard_heads(qg.reshape(B, S, K * Gp, hd), mesh)
+        out = L.attend(qp, k, v, causal=True, window=window,
+                       softcap=cfg.attn_softcap)
+        out = shard_heads(out, mesh)
+        out = out.reshape(B, S, K, Gp, hd)[:, :, :, :G]
+        return out.reshape(B, S, H, hd)
+
+    if mode == "decode":
+        kc, vc = cache  # (B, Smax, K, hd)
+        kc = L.scatter_kv(kc, k[:, 0], pos)
+        vc = L.scatter_kv(vc, v[:, 0], pos)
+        out = L.attend_decode(q[:, 0], kc, vc, pos, window=window,
+                              softcap=cfg.attn_softcap)[:, None]
+        new_cache = (kc, vc)
+    else:
+        out = _attend_tp(q, k, v)
+        new_cache = (k, v) if mode == "prefill" else None
+    y = out.reshape(B, S, H * hd) @ p["wo"].astype(dt)
+    return x + y, new_cache
+
+
+def _mlp_block(cfg: ModelConfig, p, x, mesh=None):
+    dt = x.dtype
+    h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = moe_lib.moe_ffn(cfg, p, h, mesh=mesh)
+        if cfg.shared_expert:
+            y = y + L.swiglu(h, p["se_wg"].astype(dt), p["se_wu"].astype(dt),
+                             p["se_wd"].astype(dt))
+    else:
+        y = L.swiglu(h, p["wg"].astype(dt), p["wu"].astype(dt),
+                     p["wd"].astype(dt))
+    return x + y, aux
+
+
+def block(cfg: ModelConfig, p, x, window, *, mode, cache=None, pos=None,
+          mesh=None):
+    x, new_cache = _attn_block(cfg, p, x, window, mode=mode, cache=cache,
+                               pos=pos, mesh=mesh)
+    x, aux = _mlp_block(cfg, p, x, mesh=mesh)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ model
+
+def embed_tokens(cfg, params, tokens, patches=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.family == "vlm" and patches is not None:
+        pe = (patches.astype(dt) @ params["patch_proj"].astype(dt))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, *, patches=None, mesh=None,
+            remat=True, return_hidden=False):
+    """Full-sequence forward -> (logits (B, S_total, V), moe aux loss).
+    With return_hidden=True, returns the final normed hidden instead of
+    logits (training path: the loss does chunked CE)."""
+    from repro.models.params import seq_shard
+    x = embed_tokens(cfg, params, tokens, patches)
+    x = seq_shard(x, mesh)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, inp):
+        x, aux_sum = carry
+        p, w = inp
+        y, _, aux = block(cfg, p, x, w, mode="train", mesh=mesh)
+        return (seq_shard(y, mesh), aux_sum + aux), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           (params["blocks"], windows))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = aux / max(cfg.n_layers, 1)
+    if return_hidden:
+        return x, aux
+    logits = x @ params["unembed"].astype(x.dtype)
+    logits = L.softcap_logits(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, aux
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int, *,
+            patches=None, mesh=None):
+    """Prefill: returns (last-token logits, populated KV cache)."""
+    x = embed_tokens(cfg, params, tokens, patches)
+    S = x.shape[1]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, inp):
+        p, w = inp
+        y, kv, _ = block(cfg, p, x, w, mode="prefill", mesh=mesh)
+        k, v = kv
+        pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        return y, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    x, caches = lax.scan(body, x, (params["blocks"], windows))
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(x.dtype)
+    return L.softcap_logits(logits.astype(jnp.float32), cfg.logit_softcap), caches
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *, mesh=None):
+    """One decode step.  tokens: (B,), pos: (B,) write positions.
+    cache: (k, v) each (L, B, Smax, K, hd).  Returns (logits, new_cache)."""
+    x = embed_tokens(cfg, params, tokens[:, None])
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, inp):
+        p, w, kc, vc = inp
+        y, (kc, vc), _ = block(cfg, p, x, w, mode="decode", cache=(kc, vc),
+                               pos=pos, mesh=mesh)
+        return y, (kc, vc)
+
+    x, new_cache = lax.scan(body, x, (params["blocks"], windows,
+                                      cache[0], cache[1]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["unembed"].astype(x.dtype)
+    return L.softcap_logits(logits.astype(jnp.float32), cfg.logit_softcap), new_cache
+
+
+def init_cache_abstract(cfg: ModelConfig, batch: int, cache_len: int):
+    hd = cfg.the_head_dim()
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    dt = jnp.dtype(cfg.dtype)
+    return (jax.ShapeDtypeStruct(shape, dt), jax.ShapeDtypeStruct(shape, dt))
+
+
+def cache_logical_spec(cfg: ModelConfig, tp_size: int):
+    """(L, B, S, K, hd): shard K over tp when divisible, else shard S."""
+    if cfg.n_kv_heads and tp_size and cfg.n_kv_heads % tp_size == 0:
+        spec = (None, "batch", None, "tp", None)
+    else:
+        spec = (None, "batch", "seq", None, None)
+    return (spec, spec)  # (k, v)

@@ -1,0 +1,73 @@
+"""AdamW with cosine schedule + global-norm clipping (pure JAX pytrees).
+
+Optimizer state shards exactly like the params (same logical specs), so
+FSDP covers m/v for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32), jax.tree.map(z, params),
+                      jax.tree.map(z, params))
+
+
+def abstract_state(abstract_param_tree) -> AdamWState:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                      jax.tree.map(z, abstract_param_tree),
+                      jax.tree.map(z, abstract_param_tree))
+
+
+def cosine_lr(step, *, peak=3e-4, warmup=100, total=10_000, floor=0.1):
+    warm = peak * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(grads, state: AdamWState, params, *, lr_fn=cosine_lr,
+           b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip=1.0):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if clip:
+        grads, gnorm = clip_by_global_norm(grads, clip)
+    else:
+        gnorm = jnp.zeros(())
+    step = state.step + 1
+    lr = lr_fn(step)
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        p32 = p.astype(jnp.float32)
+        newp = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, AdamWState(step, m, v), {"lr": lr, "grad_norm": gnorm}

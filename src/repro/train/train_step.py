@@ -1,0 +1,183 @@
+"""train/prefill/decode step factories with sharding annotations.
+
+``make_train_step(cfg, mesh)`` returns (fn, in_shardings, out_shardings,
+abstract-args) ready for ``jax.jit(...).lower(...)`` — the dry-run path —
+or for direct execution on real devices.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.params import (abstract_params, named_sharding,
+                                 param_shardings, resolve_spec)
+from repro.train import adamw
+
+
+def _shard(mesh, logical, shape):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh))
+
+
+def loss_fn(cfg, params, batch, mesh=None, aux_weight=0.01):
+    hidden, aux = M.forward(cfg, params, batch, mesh=mesh, return_hidden=True)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patches" in batch and batch["patches"] is not None:
+        # loss only over the text positions (patches are prepended)
+        npatch = batch["patches"].shape[1]
+        hidden = hidden[:, npatch:]
+    unembed = params["unembed"]
+    if mesh is not None and os.environ.get("REPRO_LOSS_UNEMBED_TP"):
+        # §Perf cell C: the unembed is stored (fsdp, tp)-sharded; using
+        # it per CE chunk with a data-sharded contracting dim makes the
+        # partitioner reshard activations/logits with large permutes.
+        # Constrain the LOSS-path copy to vocab(TP)-only: ONE small
+        # all-gather of the fsdp axis, then clean local chunk matmuls.
+        unembed = lax.with_sharding_constraint(
+            unembed, NamedSharding(mesh, resolve_spec(
+                (None, "tp"), unembed.shape, mesh)))
+    loss = L.chunked_cross_entropy(hidden, unembed, labels,
+                                   softcap=cfg.logit_softcap, mesh=mesh)
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, shape: InputShape,
+                    mesh: Optional[Mesh] = None, micro_steps: int = 1):
+    """micro_steps > 1 enables gradient accumulation: the global batch is
+    split into microbatches scanned sequentially, with fp32 grads
+    accumulated in param sharding.  Peak activation memory scales ~1/m,
+    and the per-microbatch grad reductions overlap with the next
+    microbatch's compute (XLA async collectives)."""
+    defs = M.param_defs(cfg)
+    abs_params = abstract_params(defs)
+    abs_opt = adamw.abstract_state(abs_params)
+    p_shardings = param_shardings(defs, mesh)
+    opt_shardings = adamw.AdamWState(
+        _shard(mesh, (), ()), p_shardings, p_shardings)
+    in_sds = M.input_specs(cfg, shape)
+    in_logical = M.input_logical_specs(cfg, shape)
+    batch_shardings = {k: _shard(mesh, in_logical[k], in_sds[k].shape)
+                       for k in in_sds}
+
+    # beyond-paper collective optimization (§Perf cell B): cast f32
+    # master params to the compute dtype ONCE at the top of the step, so
+    # the FSDP all-gathers move bf16 (half the wire) instead of f32 with
+    # a convert after the gather.  Grads still flow to the f32 masters
+    # (grad of convert = convert).  Opt-in: REPRO_CAST_PARAMS_ONCE=1.
+    cast_once = bool(os.environ.get("REPRO_CAST_PARAMS_ONCE"))
+    comp_dt = jnp.dtype(cfg.dtype)
+
+    def cast_tree(p):
+        if not cast_once:
+            return p
+        return jax.tree.map(
+            lambda x: x.astype(comp_dt)
+            if (x.dtype == jnp.float32 and x.ndim >= 2) else x, p)
+
+    def grads_of(params, batch):
+        grad_fn = jax.value_and_grad(
+            lambda p: loss_fn(cfg, cast_tree(p), batch, mesh=mesh),
+            has_aux=True)
+        (_, metrics), grads = grad_fn(params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if micro_steps <= 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            micro = {k: v.reshape((micro_steps, v.shape[0] // micro_steps)
+                                  + v.shape[1:])
+                     for k, v in batch.items()}
+
+            def body(acc, mb):
+                g, metrics = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / micro_steps, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        params, opt_state, opt_metrics = adamw.update(grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    in_shardings = (p_shardings, opt_shardings, batch_shardings)
+    out_shardings = (p_shardings, opt_shardings, None)
+    abstract_args = (abs_params, abs_opt, in_sds)
+    return train_step, in_shardings, out_shardings, abstract_args
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape,
+                      mesh: Optional[Mesh] = None):
+    defs = M.serve_param_defs(cfg)
+    abs_params = abstract_params(defs)
+    p_shardings = param_shardings(defs, mesh)
+    in_sds = M.input_specs(cfg, shape)
+    in_logical = M.input_logical_specs(cfg, shape)
+    batch_shardings = {k: _shard(mesh, in_logical[k], in_sds[k].shape)
+                       for k in in_sds}
+    cache_len = shape.seq_len
+    if cfg.family == "vlm":
+        cache_len += cfg.n_patches
+
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, cache_len, mesh=mesh)
+
+    tp = mesh.shape["model"] if mesh is not None and "model" in mesh.axis_names else 1
+    cache_abs = M.init_cache_abstract(cfg, shape.global_batch, cache_len)
+    cache_logical = M.cache_logical_spec(cfg, tp)
+    cache_shardings = _cache_shardings(mesh, cache_abs, cache_logical)
+    in_shardings = (p_shardings, batch_shardings)
+    out_shardings = (None, cache_shardings)
+    return prefill_step, in_shardings, out_shardings, (abs_params, in_sds)
+
+
+def _cache_shardings(mesh, cache_abs, cache_logical):
+    if mesh is None:
+        return None
+    return tuple(_shard(mesh, lg, a.shape)
+                 for a, lg in zip(cache_abs, cache_logical))
+
+
+def make_decode_step(cfg: ModelConfig, shape: InputShape,
+                     mesh: Optional[Mesh] = None):
+    defs = M.serve_param_defs(cfg)
+    abs_params = abstract_params(defs)
+    p_shardings = param_shardings(defs, mesh)
+    in_sds = M.input_specs(cfg, shape)
+    cache_len = shape.seq_len
+    tp = mesh.shape["model"] if mesh is not None and "model" in mesh.axis_names else 1
+    cache_abs = M.init_cache_abstract(cfg, shape.global_batch, cache_len)
+    cache_logical = M.cache_logical_spec(cfg, tp)
+    cache_shardings = _cache_shardings(mesh, cache_abs, cache_logical)
+    tok_sh = _shard(mesh, ("batch",), in_sds["tokens"].shape)
+    pos_sh = _shard(mesh, ("batch",), in_sds["pos"].shape)
+
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos, mesh=mesh)
+
+    in_shardings = (p_shardings, cache_shardings, tok_sh, pos_sh)
+    out_shardings = (None, cache_shardings)
+    abstract_args = (abs_params, cache_abs, in_sds["tokens"], in_sds["pos"])
+    return decode_step, in_shardings, out_shardings, abstract_args
+
+
+def make_step(cfg, shape, mesh=None, micro_steps: int = 1):
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, mesh, micro_steps=micro_steps)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh)
+    return make_decode_step(cfg, shape, mesh)

@@ -1,0 +1,66 @@
+"""Training driver: data -> step -> metrics -> checkpoint, restartable.
+
+Thin composition of the pieces built elsewhere: step factory
+(train_step.py), AdamW (adamw.py), atomic checkpoints (checkpoint.py),
+and the supervised restart loop (distributed/fault_tolerance.py).  Used
+by examples/train_lm.py and the smoke/integration tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.models.params import init_params
+from repro.train import adamw
+from repro.train import checkpoint as CKPT
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainReport:
+    losses: list
+    step_times: list
+    final_step: int
+
+
+def fit(cfg: ModelConfig, shape: InputShape, batches: Iterable[dict],
+        n_steps: int, *, mesh=None, seed: int = 0,
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+        log_every: int = 10, micro_steps: int = 1) -> TrainReport:
+    step_fn, in_sh, out_sh, _ = make_train_step(cfg, shape, mesh,
+                                                micro_steps=micro_steps)
+    jit_step = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(0, 1))
+    defs = M.param_defs(cfg)
+    params = init_params(defs, jax.random.key(seed))
+    opt = adamw.init(params)
+
+    start = 0
+    if ckpt_dir and CKPT.latest_step(ckpt_dir) is not None:
+        (params, opt), start = CKPT.restore(ckpt_dir, (params, opt))
+
+    losses, times = [], []
+    it = iter(batches)
+    for step in range(start, n_steps):
+        batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        params, opt, metrics = jit_step(params, opt, batch)
+        loss = float(jax.block_until_ready(metrics["loss"]))
+        times.append(time.perf_counter() - t0)
+        losses.append(loss)
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"{times[-1]*1e3:.0f} ms", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            CKPT.save(ckpt_dir, step + 1, (params, opt))
+    if ckpt_dir:
+        CKPT.save(ckpt_dir, n_steps, (params, opt))
+    return TrainReport(losses, times, n_steps)

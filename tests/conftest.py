@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device
+(the dry-run alone fakes 512); multi-device tests spawn subprocesses."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def sift_small():
+    from repro.data.synthetic import sift_like
+    return sift_like(n=4000, n_queries=64, seed=7)
+
+
+@pytest.fixture(scope="session")
+def gist_small():
+    from repro.data.synthetic import gist_like
+    return gist_like(n=1500, n_queries=32, seed=7)
+
+
+@pytest.fixture(scope="session")
+def built_engine(sift_small):
+    """One shared full-mode engine (graph search) over sift_small."""
+    from repro.core import DHNSWEngine, EngineConfig
+    eng = DHNSWEngine(EngineConfig(mode="full", search_mode="graph",
+                                   n_rep=32, b=4, ef=48, cache_frac=0.25,
+                                   seed=3))
+    return eng.build(sift_small.data)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,79 @@
+"""Host HNSW: recall vs brute force, bulk L0 build, graph invariants."""
+import numpy as np
+import pytest
+
+from repro.core.hnsw import (HNSW, HNSWParams, brute_force_knn,
+                             bulk_l0_graph, recall_at_k)
+
+
+def test_brute_force_is_exact(rng):
+    data = rng.standard_normal((500, 16)).astype(np.float32)
+    q = rng.standard_normal((7, 16)).astype(np.float32)
+    d, i = brute_force_knn(data, q, 5)
+    # exhaustively check one query
+    full = np.sum((data - q[0]) ** 2, axis=1)
+    assert set(i[0].tolist()) == set(np.argsort(full)[:5].tolist())
+    assert np.all(np.diff(d, axis=1) >= -1e-5)  # sorted ascending
+
+
+def test_hnsw_recall_beats_random(rng):
+    data = rng.standard_normal((2000, 32)).astype(np.float32)
+    queries = data[:50] + 0.01 * rng.standard_normal((50, 32)).astype(np.float32)
+    _, gt = brute_force_knn(data, queries, 10)
+    h = HNSW(32, HNSWParams(M=8, M0=16, ef_construction=64)).build(data)
+    pred = np.array([[i for _, i in h.search(q, 10, ef=64)] for q in queries])
+    rec = recall_at_k(pred, gt)
+    assert rec >= 0.9, rec
+
+
+def test_hnsw_recall_monotone_in_ef(rng):
+    data = rng.standard_normal((1500, 24)).astype(np.float32)
+    queries = data[:40] + 0.01 * rng.standard_normal((40, 24)).astype(np.float32)
+    _, gt = brute_force_knn(data, queries, 10)
+    h = HNSW(24, HNSWParams(M=8, M0=16, ef_construction=48)).build(data)
+    recs = []
+    for ef in (10, 32, 96):
+        pred = np.array([[i for _, i in h.search(q, 10, ef=ef)]
+                         for q in queries])
+        recs.append(recall_at_k(pred, gt))
+    assert recs[-1] >= recs[0] - 0.02, recs  # allow tiny noise
+    assert recs[-1] >= 0.85
+
+
+def test_export_shapes(rng):
+    data = rng.standard_normal((300, 8)).astype(np.float32)
+    h = HNSW(8, HNSWParams(M=4, M0=8)).build(data)
+    g = h.export()
+    assert g.vectors.shape == (300, 8)
+    assert g.adjacency.shape[1] == 300 and g.adjacency.shape[2] == 8
+    assert g.adjacency.min() >= -1 and g.adjacency.max() < 300
+    # every live node has at least one neighbor at L0
+    deg = (g.adjacency[0] >= 0).sum(1)
+    assert (deg[1:] > 0).all()
+
+
+def test_bulk_l0_graph_properties(rng):
+    v = rng.standard_normal((400, 16)).astype(np.float32)
+    adj = bulk_l0_graph(v, 8)
+    assert adj.shape == (400, 8)
+    assert adj.max() < 400
+    # no self-edges, padded with -1 only at the tail of each row
+    for i in range(0, 400, 37):
+        row = adj[i]
+        live = row[row >= 0]
+        assert i not in live
+        assert len(set(live.tolist())) == len(live)
+
+
+def test_bulk_graph_greedy_search_recall(rng):
+    """Beam search over the bulk graph reaches true neighbors."""
+    import jax.numpy as jnp
+    from repro.core.search import batched_beam_search
+    v = rng.standard_normal((800, 16)).astype(np.float32)
+    adj = bulk_l0_graph(v, 12)
+    queries = v[:30] + 0.01 * rng.standard_normal((30, 16)).astype(np.float32)
+    _, gt = brute_force_knn(v, queries, 5)
+    d, i = batched_beam_search(jnp.asarray(v), jnp.asarray(adj[None]),
+                               jnp.asarray(queries), 0, ef=48)
+    rec = recall_at_k(np.asarray(i)[:, :5], gt)
+    assert rec >= 0.85, rec

@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.distance_topk.ops import distance_topk
+from repro.kernels.distance_topk.ref import distance_topk_ref
+from repro.kernels.gather_blocks.ops import gather_blocks
+
+
+# ------------------------------------------------------------ distance_topk
+
+@pytest.mark.parametrize("B,N,D,k", [
+    (1, 100, 16, 1), (7, 333, 128, 10), (37, 1000, 960, 5),
+    (128, 256, 64, 16), (130, 513, 32, 3),
+])
+def test_distance_topk_sweep(rng, B, N, D, k):
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    d, i = distance_topk(jnp.asarray(q), jnp.asarray(x), k)
+    dr, ir = distance_topk_ref(jnp.asarray(q), jnp.asarray(x), k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr),
+                               atol=1e-2, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n_valid", [1, 50, 255, 256])
+def test_distance_topk_masking(rng, n_valid):
+    q = rng.standard_normal((5, 32)).astype(np.float32)
+    x = rng.standard_normal((256, 32)).astype(np.float32)
+    d, i = distance_topk(jnp.asarray(q), jnp.asarray(x), 8, n_valid=n_valid)
+    dr, ir = distance_topk_ref(jnp.asarray(q), jnp.asarray(x), 8,
+                               n_valid=n_valid)
+    live = np.asarray(i) >= 0
+    assert (np.asarray(i)[live] < n_valid).all()
+    np.testing.assert_array_equal(np.asarray(i)[live],
+                                  np.asarray(ir)[live])
+    if n_valid < 8:  # padding semantics: inf/-1 tail
+        assert np.isinf(np.asarray(d)[:, n_valid:]).all()
+
+
+def test_distance_topk_bf16_inputs(rng):
+    q = jnp.asarray(rng.standard_normal((9, 64)), jnp.bfloat16)
+    x = jnp.asarray(rng.standard_normal((300, 64)), jnp.bfloat16)
+    d, i = distance_topk(q, x, 5)
+    dr, ir = distance_topk_ref(q, x, 5)
+    # bf16 ties can reorder; compare sets and values loosely
+    same = np.mean([len(set(a.tolist()) & set(b.tolist())) / 5
+                    for a, b in zip(np.asarray(i), np.asarray(ir))])
+    assert same >= 0.95
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), atol=0.1,
+                               rtol=0.02)
+
+
+# ------------------------------------------------------------ gather_blocks
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("m", [1, 5, 64])
+def test_gather_blocks_sweep(rng, dtype, m):
+    buf = (rng.standard_normal((40, 192)) * 100).astype(dtype)
+    ids = rng.integers(0, 40, m).astype(np.int32)
+    out = gather_blocks(jnp.asarray(buf), jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(out), buf[ids])
+
+
+def test_gather_blocks_repeated_ids(rng):
+    buf = rng.standard_normal((16, 64)).astype(np.float32)
+    ids = np.array([3, 3, 3, 0, 15, 3], np.int32)
+    out = gather_blocks(jnp.asarray(buf), jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(out), buf[ids])
+
+
+# --------------------------------------------------------- decode_attention
+
+@pytest.mark.parametrize("B,S,K,G,hd", [
+    (1, 256, 1, 1, 64), (3, 512, 4, 2, 64), (2, 1024, 2, 8, 128),
+    (5, 300, 6, 1, 32),
+])
+def test_decode_attention_sweep(rng, B, S, K, G, hd):
+    q = rng.standard_normal((B, K * G, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S, K, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, K, hd)).astype(np.float32)
+    pos = rng.integers(1, S + 1, B).astype(np.int32)
+    o = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         jnp.asarray(pos))
+    orf = decode_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_bf16(rng):
+    B, S, K, G, hd = 2, 256, 2, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, K * G, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.bfloat16)
+    pos = jnp.asarray([100, 256], jnp.int32)
+    o = decode_attention(q, k, v, pos)
+    orf = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(o, dtype=np.float32),
+                               np.asarray(orf, dtype=np.float32),
+                               atol=0.02, rtol=0.02)
+
+
+def test_decode_attention_pos_zero_edge(rng):
+    """pos=1: only the first cache entry attended."""
+    B, S, K, G, hd = 1, 256, 1, 1, 32
+    q = rng.standard_normal((B, K * G, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S, K, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, K, hd)).astype(np.float32)
+    pos = np.array([1], np.int32)
+    o = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(o)[0, 0], v[0, 0, 0], atol=1e-5)

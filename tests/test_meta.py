@@ -1,0 +1,51 @@
+"""Meta-HNSW (representative index) — paper §3.1 properties."""
+import numpy as np
+
+from repro.core.hnsw import brute_force_knn
+from repro.core.meta import balance_stats, build_meta
+
+
+def test_meta_structure(sift_small):
+    meta = build_meta(sift_small.data, 64, seed=0)
+    assert meta.n_partitions == 64
+    assert meta.graph.n_levels == 3            # paper: three-layer meta-HNSW
+    assert meta.graph.entry == 0               # fixed entry point in L2
+    assert meta.assignments.shape == (sift_small.data.shape[0],)
+    assert meta.assignments.min() >= 0 and meta.assignments.max() < 64
+
+
+def test_meta_is_lightweight(sift_small):
+    """Paper: 0.373 MB for SIFT1M@500 reps.  Scaled: tiny vs the data."""
+    meta = build_meta(sift_small.data, 64, seed=0)
+    assert meta.size_bytes() < 0.05 * sift_small.data.nbytes
+
+
+def test_assignment_is_nearest_rep(sift_small):
+    meta = build_meta(sift_small.data, 32, seed=1)
+    _, nn = brute_force_knn(meta.reps, sift_small.data[:200], 1)
+    assert np.array_equal(meta.assignments[:200], nn[:, 0].astype(np.int32))
+
+
+def test_partition_lists_partition_everything(sift_small):
+    meta = build_meta(sift_small.data, 32, seed=1)
+    lists = meta.partition_lists()
+    allids = np.sort(np.concatenate(lists))
+    assert np.array_equal(allids, np.arange(sift_small.data.shape[0]))
+    stats = balance_stats(meta)
+    assert stats["empty"] <= 2  # uniform sampling rarely leaves empties
+
+
+def test_meta_route_matches_exact_topb(sift_small):
+    import jax.numpy as jnp
+    from repro.core.search import meta_route
+    meta = build_meta(sift_small.data, 32, seed=1)
+    q = sift_small.queries[:32]
+    pids, _ = meta_route(jnp.asarray(meta.graph.vectors),
+                         jnp.asarray(meta.graph.adjacency),
+                         jnp.asarray(q), meta.graph.entry, b=4,
+                         n_levels=meta.graph.n_levels)
+    _, exact = brute_force_knn(meta.reps, q, 4)
+    overlap = np.mean([len(set(np.asarray(pids)[i].tolist())
+                           & set(exact[i].tolist())) / 4
+                       for i in range(len(q))])
+    assert overlap >= 0.95, overlap

@@ -1,0 +1,106 @@
+"""Query-aware batched loading — §3.3 invariants (+hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import LRUCacheState, naive_plan, plan_batch
+
+
+def _random_topb(rng, B, b, P):
+    out = np.zeros((B, b), np.int64)
+    for q in range(B):
+        out[q] = rng.choice(P, size=b, replace=False)
+    return out
+
+
+def test_each_partition_loaded_at_most_once():
+    """The paper's headline invariant: one load per partition per batch."""
+    rng = np.random.default_rng(0)
+    topb = _random_topb(rng, 50, 3, 40)
+    plan = plan_batch(topb, LRUCacheState(8), doorbell=4)
+    loads = plan.loads_per_partition()
+    assert all(v == 1 for v in loads.values()), loads
+    assert plan.n_fetches == len(plan.unique_pids)
+
+
+def test_resident_partitions_not_fetched():
+    rng = np.random.default_rng(1)
+    cache = LRUCacheState(16)
+    topb = _random_topb(rng, 30, 2, 20)
+    p1 = plan_batch(topb, cache, doorbell=4)
+    # same batch again: everything needed should be cache-hit or refetch
+    p2 = plan_batch(topb, cache, doorbell=4)
+    assert p2.n_fetches < p1.n_fetches  # warm cache saved transfers
+    assert p2.n_cache_hits > 0
+
+
+def test_every_query_served_for_every_needed_partition():
+    rng = np.random.default_rng(2)
+    topb = _random_topb(rng, 25, 3, 30)
+    plan = plan_batch(topb, LRUCacheState(6), doorbell=4)
+    served = set()
+    for rnd in plan.rounds:
+        for q, p in rnd.serve_pairs:
+            served.add((int(q), int(p)))
+    want = {(q, int(p)) for q in range(25) for p in topb[q]}
+    assert served == want
+
+
+def test_rounds_respect_cache_capacity():
+    rng = np.random.default_rng(3)
+    cap = 5
+    topb = _random_topb(rng, 40, 4, 60)
+    plan = plan_batch(topb, LRUCacheState(cap), doorbell=3)
+    for rnd in plan.rounds:
+        assert len(rnd.fetch_pids) <= cap
+        assert len(set(rnd.fetch_slots.tolist())) == len(rnd.fetch_pids)
+        for db in rnd.doorbells:
+            assert len(db) <= 3
+
+
+def test_naive_plan_counts_all_pairs():
+    rng = np.random.default_rng(4)
+    topb = _random_topb(rng, 10, 3, 50)
+    raw = naive_plan(topb)
+    assert len(raw) == 30  # no dedup across queries (only within)
+
+
+@given(B=st.integers(1, 40), b=st.integers(1, 5), P=st.integers(5, 64),
+       cap=st.integers(2, 20), doorbell=st.integers(1, 8),
+       seed=st.integers(0, 100))
+@settings(max_examples=80, deadline=None)
+def test_plan_invariants_property(B, b, P, cap, doorbell, seed):
+    rng = np.random.default_rng(seed)
+    b = min(b, P)
+    topb = _random_topb(rng, B, b, P)
+    cache = LRUCacheState(cap)
+    plan = plan_batch(topb, cache, doorbell=doorbell)
+    # 1. at most one load per partition
+    assert all(v == 1 for v in plan.loads_per_partition().values())
+    # 2. slots valid and unique within every round
+    for rnd in plan.rounds:
+        assert len(rnd.fetch_pids) <= cap
+        assert all(0 <= s < cap for s in rnd.fetch_slots)
+        assert len(set(rnd.fetch_slots.tolist())) == len(rnd.fetch_slots)
+        # pairs of a round reference partitions fetched-or-resident
+        # with the recorded slots
+        for (q, p), s in zip(rnd.serve_pairs, rnd.pair_slots):
+            assert 0 <= s < cap
+    # 3. every (query, needed-partition) pair served exactly once
+    served = [(int(q), int(p)) for rnd in plan.rounds
+              for q, p in rnd.serve_pairs]
+    want = sorted({(q, int(p)) for q in range(B) for p in topb[q]})
+    assert sorted(served) == want
+    # 4. cache never over-full after the batch
+    assert len(cache.resident()) <= cap
+
+
+def test_lru_eviction_order():
+    c = LRUCacheState(2)
+    c.admit(1)
+    c.admit(2)
+    c.touch(1)            # 2 is now LRU
+    slot, ev = c.admit(3)
+    assert ev == 2
+    assert c.resident() == {1, 3}

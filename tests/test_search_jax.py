@@ -1,0 +1,70 @@
+"""JAX fixed-shape search vs host HNSW semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hnsw import HNSW, HNSWParams, brute_force_knn, recall_at_k
+from repro.core.search import (batched_beam_search, beam_search,
+                               greedy_descent, merge_topk, scan_partition)
+
+
+@pytest.fixture(scope="module")
+def graph(rng=None):
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal((1200, 24)).astype(np.float32)
+    h = HNSW(24, HNSWParams(M=8, M0=16, ef_construction=64)).build(data)
+    return h, h.export(), data
+
+
+def test_jax_beam_matches_host_recall(graph):
+    h, g, data = graph
+    rng = np.random.default_rng(4)
+    q = data[:40] + 0.01 * rng.standard_normal((40, 24)).astype(np.float32)
+    _, gt = brute_force_knn(data, q, 10)
+    d, i = batched_beam_search(jnp.asarray(g.vectors),
+                               jnp.asarray(g.adjacency), jnp.asarray(q),
+                               g.entry, ef=64, n_levels=g.n_levels)
+    rec_jax = recall_at_k(np.asarray(i)[:, :10], gt)
+    pred = np.array([[n for _, n in h.search(x, 10, 64)] for x in q])
+    rec_host = recall_at_k(pred, gt)
+    assert rec_jax >= rec_host - 0.05, (rec_jax, rec_host)
+    assert rec_jax >= 0.85
+
+
+def test_beam_results_sorted_and_deduped(graph):
+    _, g, data = graph
+    q = data[7] + 0.01
+    d, i = beam_search(jnp.asarray(g.vectors), jnp.asarray(g.adjacency),
+                       jnp.asarray(q), g.entry, ef=32, n_levels=g.n_levels)
+    d, i = np.asarray(d), np.asarray(i)
+    live = i >= 0
+    assert (np.diff(d[live[: live.sum()]]) >= -1e-6).all()
+    ids = i[live]
+    assert len(set(ids.tolist())) == len(ids)
+
+
+def test_greedy_descent_improves(graph):
+    _, g, data = graph
+    q = jnp.asarray(data[100] + 0.001)
+    u, du = greedy_descent(jnp.asarray(g.vectors), jnp.asarray(g.adjacency),
+                           q, g.entry, g.n_levels)
+    d_entry = float(jnp.sum(jnp.square(jnp.asarray(g.vectors)[g.entry] - q)))
+    assert float(du) <= d_entry + 1e-6
+
+
+def test_scan_partition_exact(rng):
+    v = rng.standard_normal((100, 8)).astype(np.float32)
+    q = rng.standard_normal(8).astype(np.float32)
+    d, i = scan_partition(jnp.asarray(v), jnp.asarray(q), 5, n_valid=60)
+    full = np.sum((v[:60] - q) ** 2, 1)
+    assert set(np.asarray(i).tolist()) == set(np.argsort(full)[:5].tolist())
+
+
+def test_merge_topk(rng):
+    da = jnp.asarray([[0.1, 0.5, jnp.inf]])
+    ia = jnp.asarray([[3, 9, -1]])
+    db = jnp.asarray([[0.2, 0.3, 0.9]])
+    ib = jnp.asarray([[7, 8, 11]])
+    d, i = merge_topk(da, ia, db, ib, 3)
+    assert np.allclose(np.asarray(d)[0], [0.1, 0.2, 0.3])
+    assert np.asarray(i)[0].tolist() == [3, 7, 8]

@@ -1,0 +1,81 @@
+"""End-to-end system behaviour: the paper's pipeline on one box.
+
+build -> route -> plan -> doorbell fetch (Pallas gather) -> sub search
+-> merge, across all three schemes, plus the Pallas-kernel engine path
+and the latency-breakdown accounting the paper's §4 tables report.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DHNSWEngine, EngineConfig, recall_at_k
+from repro.core.cost_model import RDMA_100G, TPU_ICI
+
+
+def test_pipeline_with_pallas_gather(sift_small):
+    """use_gather_kernel=True routes fetches through the doorbell
+    Pallas kernel (interpret on CPU) — results must be identical."""
+    common = dict(mode="full", search_mode="scan", n_rep=32, b=4, ef=48,
+                  cache_frac=0.25, seed=3)
+    a = DHNSWEngine(EngineConfig(use_gather_kernel=False, **common)).build(
+        sift_small.data)
+    b = DHNSWEngine(EngineConfig(use_gather_kernel=True, **common)).build(
+        sift_small.data)
+    _, ga, _ = a.search(sift_small.queries[:16], k=10)
+    _, gb, _ = b.search(sift_small.queries[:16], k=10)
+    assert np.array_equal(ga, gb)
+
+
+def test_latency_breakdown_accounting(built_engine, sift_small):
+    """The three components of the paper's Tables 1-2 are all reported
+    and the network term responds to the fabric constants."""
+    _, _, st = built_engine.search(sift_small.queries, k=10)
+    assert st["meta_s"] >= 0 and st["sub_s"] >= 0
+    net = st["net"]
+    assert net["latency_s"] > 0
+    assert net["bytes"] > 0
+    # same plan on the RDMA fabric prices differently
+    eng = DHNSWEngine(EngineConfig(mode="full", search_mode="graph",
+                                   n_rep=32, b=4, ef=48, cache_frac=0.25,
+                                   seed=3, fabric=RDMA_100G)).build(
+        sift_small.data)
+    _, _, st2 = eng.search(sift_small.queries, k=10)
+    assert st2["net"]["fabric"] == "rdma-100g"
+
+
+def test_paper_scheme_ordering_rdma(sift_small):
+    """Naive >> no_doorbell > full network latency on the RDMA fabric
+    with a large batch — the shape of the paper's Fig. 6 / Table 1."""
+    lat = {}
+    rt = {}
+    for mode in ("naive", "no_doorbell", "full"):
+        eng = DHNSWEngine(EngineConfig(
+            mode=mode, search_mode="scan", n_rep=64, b=4, ef=48,
+            cache_frac=0.10, doorbell=16, seed=3,
+            fabric=RDMA_100G)).build(sift_small.data)
+        _, g, st = eng.search(sift_small.queries, k=10)
+        lat[mode] = st["net"]["latency_s"]
+        rt[mode] = st["net"]["round_trips"]
+    assert lat["naive"] > lat["no_doorbell"] >= lat["full"]
+    assert rt["naive"] / max(rt["full"], 1) > 10   # >=10x fewer trips
+    # bytes saved by dedup: naive moved strictly more
+    assert lat["naive"] / lat["full"] > 2
+
+
+def test_recall_efsearch_sweep_shape(sift_small):
+    """Monotone-ish latency-recall curve (Fig. 6): recall grows with
+    efSearch and saturates below the partition-coverage ceiling."""
+    eng = DHNSWEngine(EngineConfig(mode="full", search_mode="graph",
+                                   n_rep=32, b=4, ef=48, cache_frac=0.25,
+                                   seed=3)).build(sift_small.data)
+    scan = DHNSWEngine(EngineConfig(mode="full", search_mode="scan",
+                                    n_rep=32, b=4, ef=48, cache_frac=0.25,
+                                    seed=3)).build(sift_small.data)
+    _, gc, _ = scan.search(sift_small.queries, k=10)
+    ceiling = recall_at_k(gc, sift_small.gt_ids[:, :10])
+    recs = []
+    for ef in (4, 16, 48):
+        _, g, _ = eng.search(sift_small.queries, k=10, ef=ef)
+        recs.append(recall_at_k(g, sift_small.gt_ids[:, :10]))
+    assert recs[0] <= recs[1] <= recs[2] + 0.02
+    assert recs[-1] <= ceiling + 1e-9
+    assert recs[-1] >= ceiling - 0.05  # ef=48 ~saturates (paper's knee)

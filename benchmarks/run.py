@@ -3,16 +3,18 @@
     PYTHONPATH=src python -m benchmarks.run [suite ...]
 
 Suites: fig6 (latency-recall), tables (breakdown), throughput, insert,
-roofline.  Default: all.  Prints ``name,us_per_call,key=val...`` CSV.
+roofline, serving (offered-load sweep -> BENCH_serving.json).
+Default: all.  Prints ``name,us_per_call,key=val...`` CSV.
 Scale via REPRO_BENCH_SCALE={quick,full} (see benchmarks/common.py).
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
 
-SUITES = ["fig6", "tables", "throughput", "insert", "roofline"]
+SUITES = ["fig6", "tables", "throughput", "insert", "roofline", "serving"]
 
 
 def main() -> None:
@@ -38,6 +40,10 @@ def main() -> None:
             elif suite == "roofline":
                 from benchmarks.roofline import main as rl
                 rl()
+            elif suite == "serving":
+                from benchmarks.serving import run as sv
+                sv(smoke=os.environ.get("REPRO_BENCH_SCALE",
+                                        "quick") == "quick")
             else:
                 print(f"# unknown suite {suite}")
                 continue

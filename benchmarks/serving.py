@@ -1,0 +1,151 @@
+"""Offered-load sweep: serial per-request submission vs micro-batched.
+
+For each scheme (naive / no_doorbell / full) and concurrency level C,
+C closed-loop client threads each issue single-query requests:
+
+  * ``serial``  — every request is its own ``engine.search`` call
+                  (lock-serialized; the engine is single-writer).  This
+                  is what a serving tier WITHOUT cross-request batching
+                  does: no partition dedup across users, fixed
+                  route/plan/dispatch overheads paid per request.
+  * ``batched`` — requests go through ``serve.MicroBatcher``; concurrent
+                  requests fuse into one engine batch, so §3.3 dedup,
+                  doorbell grouping, and cache reuse amortize across
+                  requesters.
+
+Emits throughput + latency percentiles per (mode, C, impl) and writes
+``BENCH_serving.json`` for the perf-trajectory file.  ``--smoke`` runs a
+tiny CI-sized config whose only job is to exercise the path end-to-end
+(fails on crash, never on perf).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G
+from repro.data.synthetic import sift_like
+from repro.serve.batcher import BatchPolicy, MicroBatcher
+
+
+def build_engine(mode: str, data: np.ndarray, n_rep: int) -> DHNSWEngine:
+    cfg = EngineConfig(mode=mode, search_mode="scan", b=3, ef=32,
+                       n_rep=n_rep, cache_frac=0.15, doorbell=16,
+                       fabric=RDMA_100G, seed=0)
+    return DHNSWEngine(cfg).build(data)
+
+
+def _percentiles(lat: list[float]) -> dict:
+    arr = np.asarray(lat, np.float64) * 1e3
+    return {f"p{p}_ms": round(float(np.percentile(arr, p)), 3)
+            for p in (50, 95, 99)}
+
+
+def run_clients(n_clients: int, per_client: int, queries: np.ndarray,
+                call) -> dict:
+    """Closed loop: each client thread issues its requests back-to-back."""
+    lat: list[list[float]] = [[] for _ in range(n_clients)]
+    errs: list[BaseException] = []
+
+    def client(cid: int):
+        rng = np.random.default_rng(cid)
+        try:
+            for _ in range(per_client):
+                q = queries[rng.integers(0, len(queries))]
+                t0 = time.perf_counter()
+                call(q)
+                lat[cid].append(time.perf_counter() - t0)
+        except BaseException as e:      # surface, don't hang the join
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    flat = [x for l in lat for x in l]
+    return {"qps": round(len(flat) / wall, 1), "wall_s": round(wall, 3),
+            **_percentiles(flat)}
+
+
+def sweep(mode: str, data, queries, *, n_rep: int, clients: tuple[int, ...],
+          per_client: int, k: int) -> list[dict]:
+    eng = build_engine(mode, data, n_rep)
+    lock = threading.Lock()
+
+    def serial_call(q):
+        with lock:
+            eng.search(q[None], k=k)
+
+    rows = []
+    warm = max(2, per_client // 3)
+    for C in clients:
+        # steady-state measurement: the jitted engine stages specialize on
+        # (fused batch, round pad, merge lanes) shapes, so drive enough
+        # warmup traffic through BOTH paths that measured windows reuse
+        # compiled code, as a long-running server does
+        run_clients(C, warm, queries, serial_call)
+        serial = run_clients(C, per_client, queries, serial_call)
+        with MicroBatcher(eng, BatchPolicy(max_batch=max(64, 2 * C),
+                                           max_wait_s=4e-3)) as mb:
+            run_clients(C, 2 * warm, queries, lambda q: mb.search(q, k=k))
+            batched = run_clients(C, per_client, queries,
+                                  lambda q: mb.search(q, k=k))
+            fused = mb.metrics.snapshot()["mean_fused_batch"]
+        speedup = round(batched["qps"] / max(serial["qps"], 1e-9), 2)
+        for impl, res in (("serial", serial), ("batched", batched)):
+            rows.append({"mode": mode, "clients": C, "impl": impl, **res})
+        rows[-1]["mean_fused_batch"] = round(fused, 2)
+        rows[-1]["speedup_vs_serial"] = speedup
+        print(f"{mode:12s} C={C:3d}  serial {serial['qps']:8.1f} qps "
+              f"(p95 {serial['p95_ms']:7.1f} ms) | batched "
+              f"{batched['qps']:8.1f} qps (p95 {batched['p95_ms']:7.1f} ms) "
+              f"| fused~{fused:.1f}  speedup x{speedup}", flush=True)
+    return rows
+
+
+def run(*, smoke: bool = False, out: str = "BENCH_serving.json",
+        modes=("naive", "no_doorbell", "full")) -> list[dict]:
+    if smoke:
+        n, n_rep, clients, per_client = 2000, 16, (1, 4), 4
+        modes = ["full"]
+    else:
+        n, n_rep, clients, per_client = 20_000, 64, (1, 4, 8, 16), 25
+    ds = sift_like(n=n, n_queries=64, seed=0)
+
+    rows = []
+    for mode in modes:
+        rows.extend(sweep(mode, ds.data, ds.queries, n_rep=n_rep,
+                          clients=clients, per_client=per_client, k=10))
+
+    blob = {"bench": "serving", "smoke": smoke, "n": n,
+            "clients": list(clients), "per_client": per_client, "rows": rows}
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=2)
+    print(f"wrote {out} ({len(rows)} rows)")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config; crash-check only")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--modes", nargs="*",
+                    default=["naive", "no_doorbell", "full"])
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out, modes=args.modes)
+
+
+if __name__ == "__main__":
+    main()

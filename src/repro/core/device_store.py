@@ -95,18 +95,36 @@ def search_decoded_graph(part: DecodedPartition, q, k: int, ef: int):
     return S.merge_topk(base_d, base_i, -od, jnp.where(jnp.isfinite(-od), og, -1), k)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "k", "ef", "mode"))
-def serve_pairs(spec: LayoutSpec, cache_g, cache_v, meta_rows, slot_ids,
-                queries, pair_valid, *, k: int, ef: int, mode: str):
-    """Serve one round: for each (query, resident-slot) pair, top-k inside
-    that partition.
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "k", "ef", "mode", "n_lanes"),
+                   donate_argnums=(5, 6))
+def serve_and_merge(spec: LayoutSpec, cache_g, cache_v, meta_table, queries,
+                    run_d, run_g, pair_qi, pair_pids, pair_slots, pair_ranks,
+                    pair_valid, *, k: int, ef: int, mode: str, n_lanes: int):
+    """One round, fused: per-pair top-k inside the pair's partition, then a
+    single vectorized scatter-merge into the batch's running top-k.
 
-    cache_g: (c, fetch_blocks, gblk); cache_v: (c, fetch_blocks, vblk)
-    meta_rows: (n_pairs, META_COLS) — metadata of each pair's partition
-    slot_ids:  (n_pairs,) cache slot holding the partition
-    queries:   (n_pairs, D); pair_valid: (n_pairs,) padding mask
-    Returns (dists, gids): (n_pairs, k), inf/-1 where invalid.
+    Replaces the host loop that merged each pair's ``(k,)`` list into its
+    query's running list one ``np.argsort`` at a time.  All staging is
+    device-side gathers from arrays resident since batch start:
+
+    meta_table: (n_partitions, META_COLS) — the whole cached table; each
+                pair gathers its own row (no per-round host rebuild)
+    queries:    (B, D) — the full query batch; gathered by ``pair_qi``
+    run_d/run_g:(B, k) running top-k carried across rounds (donated)
+    pair_qi:    (n_pairs,) query index; padding lanes point at row B so
+                the ``(B+1, n_lanes, k)`` scatter drops them
+    pair_ranks: (n_pairs,) merge lane — occurrence index of the pair's
+                query within this round (unique per (query, round))
+    Returns the updated (run_d, run_g): (B, k) each.
+
+    Merge semantics are identical to folding the pairs in order through a
+    stable sort (stable argsort over [running | lane 0 | lane 1 | ...] is
+    associative with the sequential stable merges the host loop did), so
+    results are bit-identical to the old path.
     """
+    rows = meta_table[pair_pids]
+    qs = queries[pair_qi]          # padding qi == B clamps; masked below
 
     def one(slot, row, q, ok):
         part = decode_span(spec, cache_g[slot], cache_v[slot], row)
@@ -116,7 +134,31 @@ def serve_pairs(spec: LayoutSpec, cache_g, cache_v, meta_rows, slot_ids,
             d, g = search_decoded_scan(part, q, k)
         return jnp.where(ok, d, jnp.inf), jnp.where(ok, g, -1)
 
-    return jax.vmap(one)(slot_ids, meta_rows, queries, pair_valid)
+    d, g = jax.vmap(one)(pair_slots, rows, qs, pair_valid)
+    return merge_ranked(run_d, run_g, pair_qi, pair_ranks, d, g,
+                        n_lanes=n_lanes)
+
+
+@functools.partial(jax.jit, static_argnames=("n_lanes",))
+def merge_ranked(run_d, run_g, pair_qi, pair_ranks, d, g, *, n_lanes: int):
+    """Scatter-merge per-pair top-k lists into the running per-query top-k.
+
+    Each pair lands in merge lane ``(pair_qi, pair_ranks)`` of a
+    ``(B+1, n_lanes, k)`` buffer (row B is the dump row for padding pairs),
+    then one stable argsort per query takes the new top-k.  Equivalent to
+    folding the pairs through sequential stable merges.
+    """
+    k = run_d.shape[1]
+    B = run_d.shape[0]
+    buf_d = jnp.full((B + 1, n_lanes, k), jnp.inf, run_d.dtype)
+    buf_g = jnp.full((B + 1, n_lanes, k), -1, run_g.dtype)
+    buf_d = buf_d.at[pair_qi, pair_ranks].set(d)
+    buf_g = buf_g.at[pair_qi, pair_ranks].set(g.astype(run_g.dtype))
+    all_d = jnp.concatenate([run_d, buf_d[:B].reshape(B, n_lanes * k)], axis=1)
+    all_g = jnp.concatenate([run_g, buf_g[:B].reshape(B, n_lanes * k)], axis=1)
+    order = jnp.argsort(all_d, axis=1, stable=True)[:, :k]
+    return (jnp.take_along_axis(all_d, order, axis=1),
+            jnp.take_along_axis(all_g, order, axis=1))
 
 
 @functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1, 2))

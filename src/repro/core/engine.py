@@ -44,7 +44,10 @@ from repro.core.hnsw import HNSWParams
 MODES = ("naive", "no_doorbell", "full")
 
 
-def _pow2_pad(n: int, lo: int = 8) -> int:
+def pow2_pad(n: int, lo: int = 8) -> int:
+    """Next power of two >= n (floor ``lo``) — the shape-bucketing rule
+    shared by the engine's round padding and the serve tier's fused-batch
+    padding, so jitted stages see a bounded set of shapes."""
     m = lo
     while m < n:
         m *= 2
@@ -113,6 +116,17 @@ class DHNSWEngine:
         self._meta_vecs = jnp.asarray(self.meta.graph.vectors)
         self._meta_adj = jnp.asarray(self.meta.graph.adjacency)
         self._meta_entry = int(self.meta.graph.entry)
+        self._mt_dev = jnp.asarray(self.store.meta_table)
+        self._mt_dirty = False
+
+    def _meta_table_dev(self):
+        """Device copy of the metadata table, restaged lazily after
+        inserts touch the host counters (search gathers per-pair rows
+        from this array instead of rebuilding numpy rows every round)."""
+        if self._mt_dirty:
+            self._mt_dev = jnp.asarray(self.store.meta_table)
+            self._mt_dirty = False
+        return self._mt_dev
 
     def _lookup(self, gids: np.ndarray) -> np.ndarray:
         out = np.zeros((len(gids), self.store.spec.dim), np.float32)
@@ -186,9 +200,12 @@ class DHNSWEngine:
                                     descriptors=len(db))
         stats["plan_s"] = time.perf_counter() - t0
 
-        # 3. rounds: fetch -> serve -> merge
-        run_d = np.full((B, k), np.inf, np.float32)
-        run_g = np.full((B, k), -1, np.int64)
+        # 3. rounds: fetch -> serve -> merge (all device-side; the running
+        # top-k is carried as (B, k) device arrays and each round folds in
+        # with ONE fused scatter-merge — no host loop over pairs)
+        mt_dev = self._meta_table_dev()
+        run_d = jnp.full((B, k), jnp.inf, jnp.float32)
+        run_g = jnp.full((B, k), -1, jnp.int32)
         cache_state = cache if cfg.mode == "naive" else self.cache
         if cfg.mode == "naive":
             cache_g = jnp.full((cache_state.capacity, spec.fetch_blocks,
@@ -210,35 +227,25 @@ class DHNSWEngine:
             if not len(rnd.serve_pairs):
                 continue
             t0 = time.perf_counter()
-            qi = rnd.serve_pairs[:, 0]
-            pi = rnd.serve_pairs[:, 1]
-            n = len(qi)
-            npad = _pow2_pad(n)
-            pad = npad - n
-            slot_ids = np.concatenate([rnd.pair_slots,
-                                       np.zeros(pad, np.int64)]).astype(np.int32)
-            rows = np.concatenate([self.store.meta_table[pi],
-                                   np.zeros((pad, LA.META_COLS), np.int32)])
-            qs = np.concatenate([queries[qi],
-                                 np.zeros((pad, spec.dim), np.float32)])
-            valid = np.arange(npad) < n
-            d, g = DS.serve_pairs(spec, cache_g, cache_v, jnp.asarray(rows),
-                                  jnp.asarray(slot_ids), jnp.asarray(qs),
-                                  jnp.asarray(valid), k=k, ef=ef,
-                                  mode=cfg.search_mode)
-            d = np.asarray(jax.block_until_ready(d))[:n]
-            g = np.asarray(g)[:n]
+            n = len(rnd.serve_pairs)
+            npad = pow2_pad(n)
+            qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
+            # n_lanes is fixed at b (a query never has more than b pairs
+            # in one round) so recompiles depend only on (B, npad); no
+            # per-round sync — rounds queue back-to-back on device and
+            # the single block below charges the pipeline to sub_s
+            run_d, run_g = DS.serve_and_merge(
+                spec, cache_g, cache_v, mt_dev, q_dev, run_d, run_g,
+                jnp.asarray(qi), jnp.asarray(ppid), jnp.asarray(pslot),
+                jnp.asarray(prank), jnp.asarray(valid), k=k, ef=ef,
+                mode=cfg.search_mode, n_lanes=b)
             stats["sub_s"] += time.perf_counter() - t0
             stats["n_pairs"] += n
-            # host merge into per-query running top-k (Fig. 5: results
-            # "temporarily stored for further computation and comparison")
-            for j in range(n):
-                q = int(qi[j])
-                md = np.concatenate([run_d[q], d[j]])
-                mg = np.concatenate([run_g[q], g[j]])
-                order = np.argsort(md, kind="stable")[:k]
-                run_d[q], run_g[q] = md[order], mg[order]
 
+        t0 = time.perf_counter()
+        run_d = np.asarray(jax.block_until_ready(run_d))
+        run_g = np.asarray(run_g).astype(np.int64)
+        stats["sub_s"] += time.perf_counter() - t0
         if cfg.mode != "naive":
             self._cache_g, self._cache_v = cache_g, cache_v
         stats["net"] = ledger.as_dict()
@@ -287,6 +294,7 @@ class DHNSWEngine:
                 co["gid_block"], co["gid_off"])
             ledger.write(spec.dim * 4 + 8, descriptors=1)
             self._invalidate_pid(int(pid))
+        self._mt_dirty = True       # host overflow counters moved
         self._last_insert_net = ledger.as_dict()
         return gids
 

@@ -38,6 +38,38 @@ class Round:
     evict_pids: np.ndarray          # evicted before the fetch (LRU)
     serve_pairs: np.ndarray         # (n, 2) [query_idx, pid] served this round
     pair_slots: np.ndarray          # (n,) slot holding each pair's partition
+    pair_ranks: np.ndarray = None   # (n,) occurrence index of the pair's
+                                    # query within this round (0-based) —
+                                    # the merge "lane" the pair lands in
+
+    @property
+    def n_lanes(self) -> int:
+        """Merge lanes this round needs: max pairs any one query has."""
+        if self.pair_ranks is None or not len(self.pair_ranks):
+            return 1
+        return int(self.pair_ranks.max()) + 1
+
+    def serve_tensors(self, pad_to: int, n_queries: int):
+        """Batch-major device feed for this round's serve pairs, padded
+        to ``pad_to`` lanes: ``(qi, pids, slots, ranks, valid)``.
+
+        Padding rows target the scatter dump row ``n_queries`` (one past
+        the real batch) so a fixed-shape ``(B+1, n_lanes, k)`` scatter can
+        drop them without a gather/where pass; pid/slot/rank padding is 0
+        and masked by ``valid``.
+        """
+        n = len(self.serve_pairs)
+        qi = np.full(pad_to, n_queries, np.int32)
+        pids = np.zeros(pad_to, np.int32)
+        slots = np.zeros(pad_to, np.int32)
+        ranks = np.zeros(pad_to, np.int32)
+        if n:
+            qi[:n] = self.serve_pairs[:, 0]
+            pids[:n] = self.serve_pairs[:, 1]
+            slots[:n] = self.pair_slots
+            ranks[:n] = self.pair_ranks
+        valid = np.arange(pad_to) < n
+        return qi, pids, slots, ranks, valid
 
 
 @dataclass
@@ -95,6 +127,20 @@ class LRUCacheState:
         return slot, evicted
 
 
+def _pair_ranks(pairs: np.ndarray) -> np.ndarray:
+    """Occurrence index of each pair's query within its round (0-based).
+
+    A query served against m partitions in one round occupies merge lanes
+    0..m-1; the device merge scatters lane-major and tops-k once."""
+    counts: dict[int, int] = {}
+    ranks = np.zeros(len(pairs), np.int64)
+    for j, (q, _) in enumerate(pairs):
+        r = counts.get(int(q), 0)
+        ranks[j] = r
+        counts[int(q)] = r + 1
+    return ranks
+
+
 def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
                doorbell: int = 8) -> Plan:
     """Build the round schedule for one query batch.
@@ -131,7 +177,8 @@ def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
         for p in hits:
             cache.touch(p)
         rounds.append(Round(np.array([], np.int64), np.array([], np.int64),
-                            [], np.array([], np.int64), pairs, pslots))
+                            [], np.array([], np.int64), pairs, pslots,
+                            _pair_ranks(pairs)))
 
     i = 0
     while i < len(missing):
@@ -149,7 +196,8 @@ def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
         fetch = np.array(take, np.int64)
         doorbells = [fetch[j:j + doorbell] for j in range(0, len(fetch), doorbell)]
         rounds.append(Round(fetch, np.array(slots, np.int64), doorbells,
-                            np.array(evicted, np.int64), pairs, pslots))
+                            np.array(evicted, np.int64), pairs, pslots,
+                            _pair_ranks(pairs)))
 
     return Plan(rounds=rounds, unique_pids=unique,
                 n_cache_hits=n_cache_hits, n_fetches=len(missing))

@@ -1,0 +1,355 @@
+"""Dynamic micro-batching front-end for the d-HNSW engine.
+
+The paper's throughput wins (§3.3 batched query-aware loading, §3.2
+doorbell batching) all trigger on the *batch* handed to the engine: one
+load per needed partition per batch, many span reads per round trip, and
+LRU reuse across the batch.  A serving tier that forwards each user
+request as its own ``engine.search`` call forfeits every one of those —
+two concurrent users needing the same partition pay two fetches, and
+each call eats the fixed meta-route/plan/dispatch overhead alone.
+
+``MicroBatcher`` restores the paper's invariant under live traffic: it
+queues concurrent single-query (or small-batch) requests, coalesces them
+under a policy (max batch size, max wait, token-bucket admission), and
+dispatches ONE fused ``DHNSWEngine.search`` per window.  Cross-request
+coalescing is therefore exactly the paper's batched query-aware loading
+with the "batch" assembled from independent requesters instead of one
+caller: partition dedup, doorbell grouping, and cache reuse all amortize
+across users.  Results are scattered back per request together with a
+queue/route/plan/fetch/serve latency breakdown, and the batcher keeps
+rolling p50/p95/p99 service metrics.
+
+Requests preserve arrival order: a window is drained as consecutive
+same-kind runs (search / insert), so a search submitted after an insert
+observes the inserted vectors.
+"""
+from __future__ import annotations
+
+import copy
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import pow2_pad
+
+
+class AdmissionError(RuntimeError):
+    """Token-bucket admission rejected a request (over offered-load cap)."""
+
+
+@dataclass
+class BatchPolicy:
+    """Coalescing policy for one batcher.
+
+    A window opens when the queue goes non-empty and closes when either
+    ``max_batch`` query rows are pending or the oldest request has waited
+    ``max_wait_s``.  ``rate``/``burst`` bound admission (0 = unlimited).
+    """
+
+    max_batch: int = 64         # query rows fused into one engine call
+    max_wait_s: float = 2e-3    # oldest request's max queue time
+    rate: float = 0.0           # admission tokens/s (0 disables the bucket)
+    burst: int = 64             # bucket depth
+    admission_block: bool = True  # block when out of tokens (else raise)
+
+
+class TokenBucket:
+    """Classic token bucket; thread-safe; ``rate<=0`` admits everything."""
+
+    def __init__(self, rate: float, burst: int):
+        self.rate = float(rate)
+        self.burst = max(int(burst), 1)
+        self._tokens = float(self.burst)
+        self._t = time.monotonic()
+        self._lock = threading.Lock()
+
+    def acquire(self, n: int = 1, *, block: bool = True) -> bool:
+        if self.rate <= 0:
+            return True
+        # a request larger than the bucket depth drains the whole bucket
+        # (n > burst could otherwise never be satisfied and would spin)
+        n = min(n, self.burst)
+        while True:
+            with self._lock:
+                now = time.monotonic()
+                self._tokens = min(self.burst,
+                                   self._tokens + (now - self._t) * self.rate)
+                self._t = now
+                if self._tokens >= n:
+                    self._tokens -= n
+                    return True
+                need = (n - self._tokens) / self.rate
+            if not block:
+                return False
+            time.sleep(min(need, 0.05))
+
+
+@dataclass
+class _Request:
+    kind: str                   # "search" | "insert"
+    vecs: np.ndarray            # (m, D)
+    k: int
+    t_submit: float
+    future: Future = field(default_factory=Future)
+
+
+class ServeMetrics:
+    """Rolling per-request latency + stage breakdown (thread-safe)."""
+
+    WINDOW = 8192               # per-request latencies kept for percentiles
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._lat = deque(maxlen=self.WINDOW)
+        self.n_requests = 0
+        self.n_queries = 0
+        self.n_fused_calls = 0
+        self.n_rejected = 0
+        self.fused_sizes = deque(maxlen=self.WINDOW)
+        self.breakdown = {"queue_s": 0.0, "route_s": 0.0, "plan_s": 0.0,
+                          "fetch_s": 0.0, "serve_s": 0.0}
+
+    def record_call(self, batch: int, n_queries: int = 0):
+        with self._lock:
+            self.n_fused_calls += 1
+            self.fused_sizes.append(batch)
+            self.n_queries += n_queries
+
+    def record_rejected(self):
+        with self._lock:
+            self.n_rejected += 1
+
+    def record_request(self, total_s: float, breakdown: dict):
+        with self._lock:
+            self.n_requests += 1
+            self._lat.append(total_s)
+            for key in self.breakdown:
+                self.breakdown[key] += breakdown.get(key, 0.0)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            lat = np.asarray(self._lat, np.float64)
+            sizes = np.asarray(self.fused_sizes, np.float64)
+            out = {
+                "n_requests": self.n_requests,
+                "n_queries": self.n_queries,
+                "n_fused_calls": self.n_fused_calls,
+                "n_rejected": self.n_rejected,
+                "mean_fused_batch": float(sizes.mean()) if len(sizes) else 0.0,
+                "breakdown_s": dict(self.breakdown),
+            }
+            for p in (50, 95, 99):
+                out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
+                                   if len(lat) else 0.0)
+            return out
+
+
+class MicroBatcher:
+    """Queue + dispatcher thread around one ``DHNSWEngine``.
+
+    ``submit_search``/``submit_insert`` enqueue and return a ``Future``;
+    the dispatcher coalesces pending requests into fused engine calls.
+    The engine is only ever touched from the dispatcher thread, so the
+    (not thread-safe) engine needs no internal locking.
+    """
+
+    def __init__(self, engine, policy: Optional[BatchPolicy] = None, *,
+                 autostart: bool = True):
+        self.engine = engine
+        self.policy = policy or BatchPolicy()
+        self.metrics = ServeMetrics()
+        self._bucket = TokenBucket(self.policy.rate, self.policy.burst)
+        self._queue: deque[_Request] = deque()
+        self._cv = threading.Condition()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> "MicroBatcher":
+        if self._thread is None or not self._thread.is_alive():
+            # one live dispatcher per engine: the engine is not
+            # thread-safe, and two batchers racing it would corrupt the
+            # LRU/cache state the serialization exists to protect
+            owner = getattr(self.engine, "_dispatcher", None)
+            if (owner is not None and owner is not self
+                    and owner._thread is not None
+                    and owner._thread.is_alive()):
+                raise RuntimeError(
+                    "engine already has a live MicroBatcher; stop it first")
+            if self.engine is not None:
+                self.engine._dispatcher = self
+            self._stop = False
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="dhnsw-batcher")
+            self._thread.start()
+        return self
+
+    def stop(self, *, flush: bool = True):
+        """Stop the dispatcher; by default drain queued requests first."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            # unbounded join: an in-flight fused call (e.g. a cold XLA
+            # compile) can exceed any timeout, and draining or handing
+            # the engine to a new batcher while the dispatcher is still
+            # inside it would break the single-thread engine invariant
+            self._thread.join()
+        if flush:
+            self._drain_all()
+        if getattr(self.engine, "_dispatcher", None) is self:
+            self.engine._dispatcher = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # ------------------------------------------------------------ submit
+
+    def submit_search(self, vecs: np.ndarray, k: int = 10) -> Future:
+        vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        if not self._bucket.acquire(vecs.shape[0],
+                                    block=self.policy.admission_block):
+            self.metrics.record_rejected()
+            raise AdmissionError("token bucket empty (offered load over cap)")
+        return self._enqueue(_Request("search", vecs, int(k),
+                                      time.perf_counter()))
+
+    def submit_insert(self, vecs: np.ndarray) -> Future:
+        vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        return self._enqueue(_Request("insert", vecs, 0, time.perf_counter()))
+
+    def search(self, vecs: np.ndarray, k: int = 10):
+        """Blocking convenience: returns (dists, gids, stats)."""
+        return self.submit_search(vecs, k).result()
+
+    def insert(self, vecs: np.ndarray) -> np.ndarray:
+        return self.submit_insert(vecs).result()
+
+    def _enqueue(self, req: _Request) -> Future:
+        with self._cv:
+            if self._stop and self._thread is not None:
+                raise RuntimeError("batcher is stopped")
+            self._queue.append(req)
+            self._cv.notify_all()
+        return req.future
+
+    # ------------------------------------------------------------ dispatcher
+
+    def _run(self):
+        pol = self.policy
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait(timeout=0.1)
+                if self._stop:
+                    return
+                # window: open at the oldest pending request; close on
+                # max_batch rows queued or the oldest hitting max_wait
+                deadline = self._queue[0].t_submit + pol.max_wait_s
+                while (sum(r.vecs.shape[0] for r in self._queue)
+                       < pol.max_batch):
+                    left = deadline - time.perf_counter()
+                    if left <= 0 or self._stop:
+                        break
+                    self._cv.wait(timeout=left)
+                window = self._take_window()
+            self._dispatch_window(window)
+
+    def _take_window(self) -> list[_Request]:
+        """Pop up to max_batch query rows, preserving arrival order."""
+        out, rows = [], 0
+        while self._queue and rows < self.policy.max_batch:
+            rows += self._queue[0].vecs.shape[0]
+            out.append(self._queue.popleft())
+        return out
+
+    def _drain_all(self):
+        while True:
+            with self._cv:
+                window = self._take_window()
+            if not window:
+                return
+            self._dispatch_window(window)
+
+    def _dispatch_window(self, window: list[_Request]):
+        """Split the window into consecutive same-kind runs (preserving
+        submission order for insert/search interleave) and fuse each."""
+        i = 0
+        while i < len(window):
+            j = i
+            while j < len(window) and window[j].kind == window[i].kind:
+                j += 1
+            group = window[i:j]
+            try:
+                if group[0].kind == "search":
+                    self._dispatch_search(group)
+                else:
+                    self._dispatch_insert(group)
+            except BaseException as e:  # deliver, don't kill the thread
+                for r in group:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+            i = j
+
+    def _dispatch_search(self, group: list[_Request]):
+        t_disp = time.perf_counter()
+        fused = np.concatenate([r.vecs for r in group])
+        # one engine call at the max requested k: top-k lists are
+        # prefix-consistent, so each request slices its own k back out
+        k = max(r.k for r in group)
+        B = fused.shape[0]
+        # bucket the fused batch to a power of two so jitted engine
+        # stages see a bounded set of shapes (each distinct B is its own
+        # XLA compile); pad rows duplicate query 0, which §3.3 dedup
+        # makes free on the fetch path
+        Bpad = pow2_pad(B, lo=1)
+        if Bpad > B:
+            fused = np.concatenate(
+                [fused, np.repeat(fused[:1], Bpad - B, axis=0)])
+        d, g, est = self.engine.search(fused, k=k)
+        d, g = d[:B], g[:B]
+        t_done = time.perf_counter()
+        self.metrics.record_call(B, n_queries=B)
+        off = 0
+        for r in group:
+            m = r.vecs.shape[0]
+            stats = copy.deepcopy(est)   # each request owns its stats
+                                         # (est nests the net dict)
+            stats["queue_s"] = t_disp - r.t_submit
+            stats["route_s"] = est["meta_s"]
+            stats["fetch_s"] = est["net"]["latency_s"]
+            stats["serve_s"] = est["sub_s"]
+            stats["fused_batch"] = B
+            stats["total_s"] = t_done - r.t_submit
+            self.metrics.record_request(stats["total_s"], {
+                "queue_s": stats["queue_s"], "route_s": est["meta_s"],
+                "plan_s": est["plan_s"], "fetch_s": stats["fetch_s"],
+                "serve_s": est["sub_s"]})
+            r.future.set_result((d[off:off + m, :r.k],
+                                 g[off:off + m, :r.k], stats))
+            off += m
+
+    def _dispatch_insert(self, group: list[_Request]):
+        t_disp = time.perf_counter()
+        fused = np.concatenate([r.vecs for r in group])
+        gids = self.engine.insert(fused)
+        t_done = time.perf_counter()
+        self.metrics.record_call(fused.shape[0])
+        off = 0
+        for r in group:
+            m = r.vecs.shape[0]
+            self.metrics.record_request(t_done - r.t_submit,
+                                        {"queue_s": t_disp - r.t_submit})
+            r.future.set_result(np.asarray(gids[off:off + m]))
+            off += m

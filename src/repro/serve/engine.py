@@ -24,6 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.core.engine import DHNSWEngine
 from repro.models import model as M
 from repro.models.params import init_params
+from repro.serve.server import SearchServer
 
 
 @dataclass
@@ -43,14 +44,24 @@ class ServeStats:
 
 
 class RagServeEngine:
-    """build -> serve(prompts) -> generated tokens."""
+    """build -> serve(prompts) -> generated tokens.
 
-    def __init__(self, cfg: ModelConfig, retriever: DHNSWEngine,
+    Retrieval goes through a ``SearchServer`` (micro-batching tier), so
+    concurrent ``serve`` callers — or any other client of the same server
+    — coalesce into fused d-HNSW batches.  Passing a bare ``DHNSWEngine``
+    wraps it in a private server.
+    """
+
+    def __init__(self, cfg: ModelConfig,
+                 retriever: "DHNSWEngine | SearchServer",
                  docs: DocStore, *, max_new_tokens: int = 16,
                  docs_per_query: int = 2,
                  embed_fn: Optional[Callable] = None, seed: int = 0):
         self.cfg = cfg
-        self.retriever = retriever
+        self._own_server = not isinstance(retriever, SearchServer)
+        self.server = (SearchServer(retriever) if self._own_server
+                       else retriever)
+        self.retriever = self.server.engine
         self.docs = docs
         self.max_new_tokens = max_new_tokens
         self.docs_per_query = docs_per_query
@@ -62,6 +73,17 @@ class RagServeEngine:
             static_argnums=(2,))
         self._decode = jax.jit(
             lambda p, cache, toks, pos: M.decode_step(cfg, p, cache, toks, pos))
+
+    def close(self):
+        """Stop the private batcher thread (no-op for an adopted server)."""
+        if self._own_server:
+            self.server.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     def _default_embed(self, tokens: np.ndarray) -> np.ndarray:
         emb = np.asarray(self.params["embed"])
@@ -76,10 +98,11 @@ class RagServeEngine:
         stats = ServeStats()
         B, Sp = prompts.shape
 
-        # 1. retrieve (the paper's tier: batched, deduped, doorbell'd)
+        # 1. retrieve through the micro-batching tier (the paper's tier:
+        # batched, deduped, doorbell'd — fused across concurrent callers)
         t0 = time.perf_counter()
         q = self._embed(prompts)
-        _, doc_ids, rstats = self.retriever.search(q, k=self.docs_per_query)
+        _, doc_ids, rstats = self.server.search(q, k=self.docs_per_query)
         stats.retrieval = rstats
         stats.retrieve_s = time.perf_counter() - t0
 

@@ -1,0 +1,65 @@
+"""Serving front-end: one ``DHNSWEngine`` behind a ``MicroBatcher``.
+
+``SearchServer`` is the process-level object a deployment embeds: it owns
+the engine and the batching policy, exposes blocking and async
+search/insert, and reports rolling service metrics (throughput,
+p50/p95/p99, stage breakdown).  Many client threads may call it
+concurrently; all engine access is serialized through the batcher's
+dispatcher thread, which is also what makes concurrent requests fuse
+into the paper's batched query-aware loads.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import DHNSWEngine
+from repro.serve.batcher import BatchPolicy, MicroBatcher
+
+
+class SearchServer:
+    """build-or-adopt an engine -> ``with SearchServer(eng) as srv: ...``."""
+
+    def __init__(self, engine: DHNSWEngine,
+                 policy: Optional[BatchPolicy] = None, *,
+                 autostart: bool = True):
+        self.engine = engine
+        self.batcher = MicroBatcher(engine, policy, autostart=autostart)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> "SearchServer":
+        self.batcher.start()
+        return self
+
+    def stop(self):
+        self.batcher.stop()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # ------------------------------------------------------------ requests
+
+    def search(self, vecs: np.ndarray, k: int = 10):
+        """Blocking: (dists (m, k), gids (m, k), per-request stats)."""
+        return self.batcher.search(vecs, k)
+
+    def search_async(self, vecs: np.ndarray, k: int = 10) -> Future:
+        return self.batcher.submit_search(vecs, k)
+
+    def insert(self, vecs: np.ndarray) -> np.ndarray:
+        return self.batcher.insert(vecs)
+
+    def insert_async(self, vecs: np.ndarray) -> Future:
+        return self.batcher.submit_insert(vecs)
+
+    # ------------------------------------------------------------ metrics
+
+    def stats(self) -> dict:
+        """Rolling service metrics (the /stats endpoint payload)."""
+        return self.batcher.metrics.snapshot()

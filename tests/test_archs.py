@@ -12,6 +12,9 @@ from repro.models.params import init_params
 from repro.train import adamw
 from repro.train.train_step import make_train_step
 
+# long-running tier: excluded from CI fast job (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 SHAPE = InputShape("smoke", seq_len=32, global_batch=2, kind="train")
 
 

@@ -3,6 +3,7 @@
 Multi-device cases run in a subprocess with fake host devices so the
 main test process keeps seeing exactly one device (brief requirement).
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -19,11 +20,15 @@ from repro.distributed.fault_tolerance import rebalance_partitions
 
 
 def _run_sub(code: str):
+    # JAX_PLATFORMS=cpu is load-bearing: without it, boxes with a libtpu
+    # install spin for minutes retrying TPU metadata fetches before the
+    # fake host devices ever come up
     res = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
              "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
              "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
     assert res.returncode == 0, res.stderr[-3000:]
     return res.stdout
@@ -82,6 +87,7 @@ def test_compressed_allreduce_multidevice():
     out = _run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core.distributed import shard_map_compat
         from repro.distributed.compression import (compressed_grad_reduce,
                                                    init_error_state)
         mesh = jax.make_mesh((8,), ("data",))
@@ -93,9 +99,8 @@ def test_compressed_allreduce_multidevice():
         def red(g, e):
             out, new = compressed_grad_reduce({"w": g[0]}, e, mesh)
             return out["w"], new
-        f = jax.jit(jax.shard_map(red, mesh=mesh,
-                    in_specs=(P("data"), P()), out_specs=P(),
-                    check_vma=False))
+        f = jax.jit(shard_map_compat(red, mesh=mesh,
+                    in_specs=(P("data"), P()), out_specs=P()))
         ghat, _ = f(grads["w"], err)
         # mean over replicas
         want = local.mean(0)

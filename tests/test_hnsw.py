@@ -5,6 +5,9 @@ import pytest
 from repro.core.hnsw import (HNSW, HNSWParams, brute_force_knn,
                              bulk_l0_graph, recall_at_k)
 
+# long-running tier: excluded from CI fast job (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 
 def test_brute_force_is_exact(rng):
     data = rng.standard_normal((500, 16)).astype(np.float32)

@@ -2,12 +2,18 @@
 
 Includes hypothesis property tests over the layout arithmetic (offsets
 never overlap, every span is in-bounds, both partners cover the shared
-overflow region).
+overflow region).  Without ``hypothesis`` installed the property tests
+skip cleanly (``pytest.importorskip``) and the rest of the module runs.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # CI fast tier / bare containers
+    HAVE_HYPOTHESIS = False
 
 from repro.core import layout as LA
 from repro.core.layout import LayoutSpec, build_store
@@ -23,50 +29,56 @@ def store_and_meta(sift_small):
 
 # ---------------------------------------------------------------- spec math
 
-@given(dim=st.integers(4, 512), deg=st.integers(2, 64),
-       np_max=st.integers(1, 3000), ov_cap=st.integers(4, 500),
-       slot_vecs=st.integers(1, 128), n_parts=st.integers(1, 600))
-@settings(max_examples=200, deadline=None)
-def test_spec_arithmetic_invariants(dim, deg, np_max, ov_cap, slot_vecs,
-                                    n_parts):
-    spec = LayoutSpec(dim=dim, deg=deg, np_max=np_max, ov_cap=ov_cap,
-                      slot_vecs=slot_vecs, n_partitions=n_parts)
-    # capacities: the data span must hold the padded sub-HNSW, the ov
-    # span the shared region, in BOTH buffers
-    assert spec.data_blocks * spec.gblk >= spec.np_max * (spec.deg + 1)
-    assert spec.data_blocks * spec.vblk >= spec.np_max * spec.dim
-    assert spec.ov_blocks * spec.gblk >= spec.ov_cap
-    assert spec.ov_blocks * spec.vblk >= spec.ov_cap * spec.dim
-    assert spec.group_blocks == 2 * spec.data_blocks + spec.ov_blocks
-    assert spec.n_blocks == spec.n_groups * spec.group_blocks
-    # fetch spans of a group's two partitions: in-bounds, both contain
-    # the shared overflow, data regions disjoint
-    for pid in (0, 1):
-        if pid >= n_parts:
-            continue
-        start = pid * spec.data_blocks  # side A: 0; side B: data_blocks
-        end = start + spec.fetch_blocks
-        assert end <= spec.group_blocks
-    ov_lo, ov_hi = spec.data_blocks, spec.data_blocks + spec.ov_blocks
-    a_span = range(0, spec.fetch_blocks)
-    b_span = range(spec.data_blocks, spec.group_blocks)
-    assert set(range(ov_lo, ov_hi)) <= set(a_span)
-    assert set(range(ov_lo, ov_hi)) <= set(b_span)
+if HAVE_HYPOTHESIS:
+    @given(dim=st.integers(4, 512), deg=st.integers(2, 64),
+           np_max=st.integers(1, 3000), ov_cap=st.integers(4, 500),
+           slot_vecs=st.integers(1, 128), n_parts=st.integers(1, 600))
+    @settings(max_examples=200, deadline=None)
+    def test_spec_arithmetic_invariants(dim, deg, np_max, ov_cap, slot_vecs,
+                                        n_parts):
+        spec = LayoutSpec(dim=dim, deg=deg, np_max=np_max, ov_cap=ov_cap,
+                          slot_vecs=slot_vecs, n_partitions=n_parts)
+        # capacities: the data span must hold the padded sub-HNSW, the ov
+        # span the shared region, in BOTH buffers
+        assert spec.data_blocks * spec.gblk >= spec.np_max * (spec.deg + 1)
+        assert spec.data_blocks * spec.vblk >= spec.np_max * spec.dim
+        assert spec.ov_blocks * spec.gblk >= spec.ov_cap
+        assert spec.ov_blocks * spec.vblk >= spec.ov_cap * spec.dim
+        assert spec.group_blocks == 2 * spec.data_blocks + spec.ov_blocks
+        assert spec.n_blocks == spec.n_groups * spec.group_blocks
+        # fetch spans of a group's two partitions: in-bounds, both contain
+        # the shared overflow, data regions disjoint
+        for pid in (0, 1):
+            if pid >= n_parts:
+                continue
+            start = pid * spec.data_blocks  # side A: 0; side B: data_blocks
+            end = start + spec.fetch_blocks
+            assert end <= spec.group_blocks
+        ov_lo, ov_hi = spec.data_blocks, spec.data_blocks + spec.ov_blocks
+        a_span = range(0, spec.fetch_blocks)
+        b_span = range(spec.data_blocks, spec.group_blocks)
+        assert set(range(ov_lo, ov_hi)) <= set(a_span)
+        assert set(range(ov_lo, ov_hi)) <= set(b_span)
 
+    @given(group=st.integers(0, 50), slot=st.integers(0, 199),
+           dim=st.integers(4, 256), slot_vecs=st.integers(1, 64))
+    @settings(max_examples=200, deadline=None)
+    def test_overflow_coords_in_ov_region(group, slot, dim, slot_vecs):
+        spec = LayoutSpec(dim=dim, deg=8, np_max=100, ov_cap=200,
+                          slot_vecs=slot_vecs, n_partitions=200)
+        co = LA.overflow_write_coords(spec, group, slot)
+        lo = group * spec.group_blocks + spec.data_blocks
+        hi = lo + spec.ov_blocks
+        assert lo <= co["vec_block"] < hi
+        assert lo <= co["gid_block"] < hi
+        # vector writes never straddle a block boundary (vblk % dim == 0)
+        assert co["vec_off"] + dim <= spec.vblk
+else:
+    def test_spec_arithmetic_invariants():
+        pytest.importorskip("hypothesis")
 
-@given(group=st.integers(0, 50), slot=st.integers(0, 199),
-       dim=st.integers(4, 256), slot_vecs=st.integers(1, 64))
-@settings(max_examples=200, deadline=None)
-def test_overflow_coords_in_ov_region(group, slot, dim, slot_vecs):
-    spec = LayoutSpec(dim=dim, deg=8, np_max=100, ov_cap=200,
-                      slot_vecs=slot_vecs, n_partitions=200)
-    co = LA.overflow_write_coords(spec, group, slot)
-    lo = group * spec.group_blocks + spec.data_blocks
-    hi = lo + spec.ov_blocks
-    assert lo <= co["vec_block"] < hi
-    assert lo <= co["gid_block"] < hi
-    # vector writes never straddle a block boundary (vblk % dim == 0)
-    assert co["vec_off"] + dim <= spec.vblk
+    def test_overflow_coords_in_ov_region():
+        pytest.importorskip("hypothesis")
 
 
 # ---------------------------------------------------------------- round-trip

@@ -1,8 +1,18 @@
-"""Query-aware batched loading — §3.3 invariants (+hypothesis)."""
+"""Query-aware batched loading — §3.3 invariants (+hypothesis).
+
+The property tests need ``hypothesis``; when it isn't installed they
+skip cleanly (``pytest.importorskip``) and the deterministic invariant
+tests still run.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # CI fast tier / bare containers
+    HAVE_HYPOTHESIS = False
 
 from repro.core.scheduler import LRUCacheState, naive_plan, plan_batch
 
@@ -66,34 +76,63 @@ def test_naive_plan_counts_all_pairs():
     assert len(raw) == 30  # no dedup across queries (only within)
 
 
-@given(B=st.integers(1, 40), b=st.integers(1, 5), P=st.integers(5, 64),
-       cap=st.integers(2, 20), doorbell=st.integers(1, 8),
-       seed=st.integers(0, 100))
-@settings(max_examples=80, deadline=None)
-def test_plan_invariants_property(B, b, P, cap, doorbell, seed):
-    rng = np.random.default_rng(seed)
-    b = min(b, P)
-    topb = _random_topb(rng, B, b, P)
-    cache = LRUCacheState(cap)
-    plan = plan_batch(topb, cache, doorbell=doorbell)
-    # 1. at most one load per partition
-    assert all(v == 1 for v in plan.loads_per_partition().values())
-    # 2. slots valid and unique within every round
+def test_serve_ranks_unique_per_query_per_round():
+    """The merge lanes the device scatter relies on: within a round, a
+    query's pairs occupy ranks 0..m-1 exactly once each."""
+    rng = np.random.default_rng(6)
+    topb = _random_topb(rng, 30, 4, 25)
+    plan = plan_batch(topb, LRUCacheState(6), doorbell=4)
     for rnd in plan.rounds:
-        assert len(rnd.fetch_pids) <= cap
-        assert all(0 <= s < cap for s in rnd.fetch_slots)
-        assert len(set(rnd.fetch_slots.tolist())) == len(rnd.fetch_slots)
-        # pairs of a round reference partitions fetched-or-resident
-        # with the recorded slots
-        for (q, p), s in zip(rnd.serve_pairs, rnd.pair_slots):
-            assert 0 <= s < cap
-    # 3. every (query, needed-partition) pair served exactly once
-    served = [(int(q), int(p)) for rnd in plan.rounds
-              for q, p in rnd.serve_pairs]
-    want = sorted({(q, int(p)) for q in range(B) for p in topb[q]})
-    assert sorted(served) == want
-    # 4. cache never over-full after the batch
-    assert len(cache.resident()) <= cap
+        assert len(rnd.pair_ranks) == len(rnd.serve_pairs)
+        per_q = {}
+        for (q, _), r in zip(rnd.serve_pairs, rnd.pair_ranks):
+            per_q.setdefault(int(q), []).append(int(r))
+        for ranks in per_q.values():
+            assert sorted(ranks) == list(range(len(ranks)))
+        assert rnd.n_lanes == max((len(v) for v in per_q.values()),
+                                  default=1)
+        # padded batch-major view round-trips
+        n = len(rnd.serve_pairs)
+        qi, pids, slots, ranks, valid = rnd.serve_tensors(n + 3, 30)
+        assert valid[:n].all() and not valid[n:].any()
+        assert (qi[n:] == 30).all()
+        assert np.array_equal(qi[:n], rnd.serve_pairs[:, 0])
+        assert np.array_equal(pids[:n], rnd.serve_pairs[:, 1])
+        assert np.array_equal(slots[:n], rnd.pair_slots)
+
+
+if HAVE_HYPOTHESIS:
+    @given(B=st.integers(1, 40), b=st.integers(1, 5), P=st.integers(5, 64),
+           cap=st.integers(2, 20), doorbell=st.integers(1, 8),
+           seed=st.integers(0, 100))
+    @settings(max_examples=80, deadline=None)
+    def test_plan_invariants_property(B, b, P, cap, doorbell, seed):
+        rng = np.random.default_rng(seed)
+        b = min(b, P)
+        topb = _random_topb(rng, B, b, P)
+        cache = LRUCacheState(cap)
+        plan = plan_batch(topb, cache, doorbell=doorbell)
+        # 1. at most one load per partition
+        assert all(v == 1 for v in plan.loads_per_partition().values())
+        # 2. slots valid and unique within every round
+        for rnd in plan.rounds:
+            assert len(rnd.fetch_pids) <= cap
+            assert all(0 <= s < cap for s in rnd.fetch_slots)
+            assert len(set(rnd.fetch_slots.tolist())) == len(rnd.fetch_slots)
+            # pairs of a round reference partitions fetched-or-resident
+            # with the recorded slots
+            for (q, p), s in zip(rnd.serve_pairs, rnd.pair_slots):
+                assert 0 <= s < cap
+        # 3. every (query, needed-partition) pair served exactly once
+        served = [(int(q), int(p)) for rnd in plan.rounds
+                  for q, p in rnd.serve_pairs]
+        want = sorted({(q, int(p)) for q in range(B) for p in topb[q]})
+        assert sorted(served) == want
+        # 4. cache never over-full after the batch
+        assert len(cache.resident()) <= cap
+else:
+    def test_plan_invariants_property():
+        pytest.importorskip("hypothesis")
 
 
 def test_lru_eviction_order():

@@ -10,6 +10,9 @@ import pytest
 from repro.core import DHNSWEngine, EngineConfig, recall_at_k
 from repro.core.cost_model import RDMA_100G, TPU_ICI
 
+# long-running tier: excluded from CI fast job (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 
 def test_pipeline_with_pallas_gather(sift_small):
     """use_gather_kernel=True routes fetches through the doorbell

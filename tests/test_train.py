@@ -17,6 +17,9 @@ from repro.train import adamw
 from repro.train import checkpoint as CKPT
 from repro.train.trainer import fit
 
+# long-running tier: excluded from CI fast job (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 SHAPE = InputShape("tiny", 32, 4, "train")
 
 
@@ -131,11 +134,14 @@ def test_perf_flags_numerics_equivalence():
     """
     losses = []
     for arg in ("off", "on"):
+        # JAX_PLATFORMS=cpu is load-bearing: without it, boxes with a
+        # libtpu install spin for minutes retrying TPU metadata fetches
         res = subprocess.run(
             [sys.executable, "-c", textwrap.dedent(code), arg],
             capture_output=True, text=True, timeout=600,
             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                  "HOME": "/root",
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
                  "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
         assert res.returncode == 0, res.stderr[-2000:]
         losses.append(float(res.stdout.strip().splitlines()[-1]))

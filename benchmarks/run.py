@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [suite ...]
 
 Suites: fig6 (latency-recall), tables (breakdown), throughput, insert,
-roofline, serving (offered-load sweep -> BENCH_serving.json).
+roofline, serving (offered-load sweep -> BENCH_serving.json), quant
+(recall-vs-bytes tier-split sweep -> BENCH_quant.json).
 Default: all.  Prints ``name,us_per_call,key=val...`` CSV.
 Scale via REPRO_BENCH_SCALE={quick,full} (see benchmarks/common.py).
 """
@@ -14,7 +15,8 @@ import sys
 import time
 import traceback
 
-SUITES = ["fig6", "tables", "throughput", "insert", "roofline", "serving"]
+SUITES = ["fig6", "tables", "throughput", "insert", "roofline", "serving",
+          "quant"]
 
 
 def main() -> None:
@@ -43,6 +45,10 @@ def main() -> None:
             elif suite == "serving":
                 from benchmarks.serving import run as sv
                 sv(smoke=os.environ.get("REPRO_BENCH_SCALE",
+                                        "quick") == "quick")
+            elif suite == "quant":
+                from benchmarks.quant import run as qr
+                qr(smoke=os.environ.get("REPRO_BENCH_SCALE",
                                         "quick") == "quick")
             else:
                 print(f"# unknown suite {suite}")

@@ -56,13 +56,18 @@ def main():
     ap.add_argument("--requests", type=int, default=20,
                     help="requests per client")
     ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--quant", action="store_true",
+                    help="serve through the int8 quantized tier "
+                         "(staged search; watch net.bytes_saved)")
     args = ap.parse_args()
 
     print(f"indexing {args.n} vectors...")
     ds = sift_like(n=args.n, n_queries=64, seed=0)
     eng = DHNSWEngine(EngineConfig(mode="full", search_mode="scan", b=3,
                                    ef=32, n_rep=64, cache_frac=0.15,
-                                   doorbell=16)).build(ds.data)
+                                   doorbell=16,
+                                   quant="int8" if args.quant else "none")
+                      ).build(ds.data)
     # warm the pow2 batch shapes the batcher will produce
     b = 1
     while b <= 2 * args.clients:
@@ -101,6 +106,11 @@ def main():
     total = sum(bd.values()) or 1.0
     print("  stage breakdown (share of request-seconds): " + "  ".join(
         f"{key[:-2]} {100 * v / total:.0f}%" for key, v in bd.items()))
+    net = snap["net"]
+    print(f"  network: {net['bytes_fetched'] / 1e6:.2f} MB fetched over "
+          f"{net['round_trips']:.0f} round trips"
+          + (f", {net['bytes_saved'] / 1e6:.2f} MB saved by the int8 tier"
+             if net["bytes_saved"] else ""))
 
 
 if __name__ == "__main__":

@@ -12,13 +12,14 @@ from repro.core.hnsw import (HNSW, HNSWParams, PaddedGraph, brute_force_knn,
                              recall_at_k)
 from repro.core.layout import LayoutSpec, Store, build_store
 from repro.core.meta import MetaIndex, build_meta
-from repro.core.scheduler import LRUCacheState, Plan, naive_plan, plan_batch
+from repro.core.scheduler import (LRUCacheState, Plan, TieredCacheState,
+                                  naive_plan, plan_batch)
 
 __all__ = [
     "DHNSWEngine", "EngineConfig", "MODES",
     "HNSW", "HNSWParams", "PaddedGraph", "brute_force_knn", "recall_at_k",
     "MetaIndex", "build_meta",
     "LayoutSpec", "Store", "build_store",
-    "LRUCacheState", "Plan", "plan_batch", "naive_plan",
+    "LRUCacheState", "TieredCacheState", "Plan", "plan_batch", "naive_plan",
     "Fabric", "NetLedger", "RDMA_100G", "TPU_ICI",
 ]

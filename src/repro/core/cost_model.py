@@ -44,6 +44,7 @@ class NetLedger:
     round_trips: float = 0.0
     descriptors: float = 0.0
     bytes: float = 0.0
+    bytes_saved: float = 0.0   # wire bytes avoided vs full-precision spans
     events: int = 0
 
     def read(self, n_bytes: float, *, descriptors: int = 1) -> None:
@@ -58,6 +59,11 @@ class NetLedger:
     def write(self, n_bytes: float, *, descriptors: int = 1) -> None:
         self.read(n_bytes, descriptors=descriptors)
 
+    def save(self, n_bytes: float) -> None:
+        """Record bytes the quantized tier / row re-rank kept OFF the
+        wire relative to fetching the same spans in full precision."""
+        self.bytes_saved += max(n_bytes, 0.0)
+
     def latency_s(self) -> float:
         f = self.fabric
         return (self.round_trips * f.rtt_s + self.descriptors * f.per_op_s
@@ -68,4 +74,5 @@ class NetLedger:
                 "round_trips": self.round_trips,
                 "descriptors": self.descriptors,
                 "bytes": self.bytes,
+                "bytes_saved": self.bytes_saved,
                 "latency_s": self.latency_s()}

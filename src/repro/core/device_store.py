@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import search as S
-from repro.core.layout import (LayoutSpec, MT_ENTRY, MT_N_BASE, MT_OV_A,
-                               MT_OV_B, MT_SIDE)
+from repro.core.layout import (LayoutSpec, MT_BLK_START, MT_ENTRY,
+                               MT_N_BASE, MT_OV_A, MT_OV_B, MT_SIDE)
 
 
 class DecodedPartition(NamedTuple):
@@ -159,6 +159,216 @@ def merge_ranked(run_d, run_g, pair_qi, pair_ranks, d, g, *, n_lanes: int):
     order = jnp.argsort(all_d, axis=1, stable=True)[:, :k]
     return (jnp.take_along_axis(all_d, order, axis=1),
             jnp.take_along_axis(all_g, order, axis=1))
+
+
+# ------------------------------------------------------------ quantized tier
+#
+# The staged (quant=int8) search path: stage 1 decodes QUANTIZED spans
+# resident in the large quantized tier into the same DecodedPartition
+# view (dequantize = one fused multiply) and pools per-query candidates
+# (distance, gid, exact-row address, pid); stage 2 gathers only the
+# candidate rows in full precision and re-ranks to the final top-k.
+# Everything below is additive — the full-precision serve path above is
+# untouched so quant="none" stays bit-identical.
+
+
+def decode_quant_span(spec: LayoutSpec, g_span, qv_span, qs_span, meta_row):
+    """Quantized twin of ``decode_span``.
+
+    g_span (fetch_blocks, gblk) i32; qv_span (fetch_blocks, vblk) int8;
+    qs_span (fetch_blocks, n_qgroups) f32.  Returns (DecodedPartition
+    with dequantized f32 vectors, rows (np_max + ov_cap,) i32) where
+    ``rows`` are exact-row addresses into ``vec_buf.reshape(-1, dim)``
+    — what stage 2 fetches for re-ranking.
+    """
+    g = spec.quant_group
+    side = meta_row[MT_SIDE]
+    n_base = meta_row[MT_N_BASE]
+    gflat = g_span.reshape(-1)
+    qvflat = qv_span.reshape(-1).astype(jnp.float32)
+    qsflat = qs_span.reshape(-1)
+
+    data_g = lax.dynamic_slice(gflat, (side * spec.ov_blocks * spec.gblk,),
+                               (spec.np_max * (spec.deg + 1),))
+    adjacency = data_g[: spec.np_max * spec.deg].reshape(spec.np_max, spec.deg)
+    base_gids = data_g[spec.np_max * spec.deg:]
+    ov_goff = (1 - side) * spec.data_blocks * spec.gblk
+    ov_gids = lax.dynamic_slice(gflat, (ov_goff,), (spec.ov_cap,))
+
+    def dequant(flat_off_floats, n_vecs):
+        codes = lax.dynamic_slice(qvflat, (flat_off_floats,),
+                                  (n_vecs * spec.dim,))
+        scales = lax.dynamic_slice(qsflat, (flat_off_floats // g,),
+                                   (n_vecs * spec.dim // g,))
+        x = codes.reshape(-1, g) * scales[:, None]
+        return x.reshape(n_vecs, spec.dim)
+
+    base_vecs = dequant(side * spec.ov_blocks * spec.vblk, spec.np_max)
+    ov_vecs = dequant((1 - side) * spec.data_blocks * spec.vblk, spec.ov_cap)
+
+    cnt_a, cnt_b = meta_row[MT_OV_A], meta_row[MT_OV_B]
+    ov_idx = jnp.arange(spec.ov_cap)
+    ov_mine = jnp.where(side == 0, ov_idx < cnt_a,
+                        ov_idx >= spec.ov_cap - cnt_b)
+    base_valid = jnp.arange(spec.np_max) < n_base
+
+    # exact-row addresses: vblk = slot_vecs * dim, so row r of the region
+    # lives at flat row index block * slot_vecs + local offset
+    blk_start = meta_row[MT_BLK_START]
+    data_row0 = (blk_start + side * spec.ov_blocks) * spec.slot_vecs
+    ov_row0 = (blk_start + (1 - side) * spec.data_blocks) * spec.slot_vecs
+    rows = jnp.concatenate([data_row0 + jnp.arange(spec.np_max),
+                            ov_row0 + jnp.arange(spec.ov_cap)]).astype(
+                                jnp.int32)
+
+    part = DecodedPartition(
+        vectors=jnp.concatenate([base_vecs, ov_vecs], axis=0),
+        adjacency=adjacency[None],
+        gids=jnp.concatenate([base_gids, ov_gids]),
+        valid=jnp.concatenate([base_valid, ov_mine]),
+        entry=meta_row[MT_ENTRY],
+    )
+    return part, rows
+
+
+def _pad_topk(d, i, k: int):
+    """Pad a (kk,) top list to (k,) with inf/-1 when kk < k."""
+    kk = d.shape[0]
+    if kk >= k:
+        return d[:k], i[:k]
+    pad = k - kk
+    return (jnp.concatenate([d, jnp.full((pad,), jnp.inf, d.dtype)]),
+            jnp.concatenate([i, jnp.full((pad,), -1, i.dtype)]))
+
+
+def search_decoded_scan_local(part: DecodedPartition, q, k: int):
+    """Like ``search_decoded_scan`` but returns LOCAL indices (the
+    candidate-pool path needs them to derive exact-row addresses)."""
+    n = part.vectors.shape[0]
+    d = jnp.sum(jnp.square(part.vectors - q[None, :]), axis=-1)
+    d = jnp.where(part.valid, d, jnp.inf)
+    nd, ni = lax.top_k(-d, min(k, n))
+    return _pad_topk(-nd, ni.astype(jnp.int32), k)
+
+
+def search_decoded_graph_local(part: DecodedPartition, q, k: int, ef: int):
+    """Like ``search_decoded_graph`` but returns LOCAL indices: beam walk
+    over the base graph + brute scan of the live overflow slice."""
+    np_max = part.adjacency.shape[1]
+    bd, bi = S.beam_search(part.vectors[:np_max], part.adjacency, q,
+                           part.entry, ef=max(ef, k), n_levels=1)
+    bd = jnp.where((bi >= 0) & part.valid[jnp.maximum(bi, 0)], bd, jnp.inf)
+    ov_d = jnp.sum(jnp.square(part.vectors[np_max:] - q[None, :]), axis=-1)
+    ov_d = jnp.where(part.valid[np_max:], ov_d, jnp.inf)
+    all_d = jnp.concatenate([bd, ov_d])
+    all_i = jnp.concatenate([bi.astype(jnp.int32),
+                             np_max + jnp.arange(ov_d.shape[0],
+                                                 dtype=jnp.int32)])
+    kk = min(k, all_d.shape[0])
+    nd, pos = lax.top_k(-all_d, kk)
+    return _pad_topk(-nd, all_i[pos], k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "m", "ef", "mode", "n_lanes"),
+                   donate_argnums=(6, 7))
+def serve_quant_pool(spec: LayoutSpec, cache_qg, cache_qv, cache_qs,
+                     meta_table, queries, pool_d, pool_p, pair_qi,
+                     pair_pids, pair_slots, pair_ranks, pair_valid, *,
+                     m: int, ef: int, mode: str, n_lanes: int):
+    """Stage-1 round, fused: per-pair top-m inside the pair's QUANTIZED
+    partition, then one scatter-merge into the batch's running candidate
+    pool.  ``pool_d`` (B, m) distances; ``pool_p`` (B, m, 3) int32
+    payload columns [gid, exact_row, pid] carried through the merge.
+    """
+    mrows = meta_table[pair_pids]
+    qs = queries[pair_qi]
+
+    def one(slot, mrow, q, ok, pid):
+        part, rows = decode_quant_span(spec, cache_qg[slot], cache_qv[slot],
+                                       cache_qs[slot], mrow)
+        if mode == "graph":
+            d, li = search_decoded_graph_local(part, q, m, ef)
+        else:
+            d, li = search_decoded_scan_local(part, q, m)
+        live = (li >= 0) & ok & jnp.isfinite(d)
+        safe = jnp.maximum(li, 0)
+        payload = jnp.stack([
+            jnp.where(live, part.gids[safe], -1),
+            jnp.where(live, rows[safe], -1),
+            jnp.where(live, pid, -1),
+        ], axis=-1).astype(jnp.int32)
+        return jnp.where(live, d, jnp.inf), payload
+
+    d, p = jax.vmap(one)(pair_slots, mrows, qs, pair_valid, pair_pids)
+    return merge_ranked_payload(pool_d, pool_p, pair_qi, pair_ranks, d, p,
+                                n_lanes=n_lanes)
+
+
+@functools.partial(jax.jit, static_argnames=("n_lanes",))
+def merge_ranked_payload(run_d, run_p, pair_qi, pair_ranks, d, p, *,
+                         n_lanes: int):
+    """``merge_ranked`` with an (…, P) int payload instead of a single id
+    column — same (B+1, n_lanes, m) scatter + one stable argsort per
+    query, so round grouping never changes the merged result."""
+    B, m = run_d.shape
+    P = run_p.shape[2]
+    buf_d = jnp.full((B + 1, n_lanes, m), jnp.inf, run_d.dtype)
+    buf_p = jnp.full((B + 1, n_lanes, m, P), -1, run_p.dtype)
+    buf_d = buf_d.at[pair_qi, pair_ranks].set(d)
+    buf_p = buf_p.at[pair_qi, pair_ranks].set(p.astype(run_p.dtype))
+    all_d = jnp.concatenate([run_d, buf_d[:B].reshape(B, n_lanes * m)],
+                            axis=1)
+    all_p = jnp.concatenate([run_p, buf_p[:B].reshape(B, n_lanes * m, P)],
+                            axis=1)
+    order = jnp.argsort(all_d, axis=1, stable=True)[:, :m]
+    return (jnp.take_along_axis(all_d, order, axis=1),
+            jnp.take_along_axis(all_p, order[:, :, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "k"))
+def rerank_exact(vec_buf, queries, rows, gids, *, dim: int, k: int):
+    """Stage 2: gather the candidate rows in FULL precision and re-rank.
+
+    vec_buf: the serialized region's (n_blocks, vblk) f32 buffer; rows
+    (B, m) exact-row addresses from stage 1 (-1 = empty lane); gids
+    (B, m).  Returns the final (dists (B, k), gids (B, k)).
+    """
+    vrows = vec_buf.reshape(-1, dim)[jnp.maximum(rows, 0)]     # (B, m, D)
+    d = jnp.sum(jnp.square(vrows - queries[:, None, :]), axis=-1)
+    d = jnp.where(rows >= 0, d, jnp.inf)
+    nd, ni = lax.top_k(-d, k)
+    g = jnp.take_along_axis(gids, ni, axis=1)
+    return -nd, jnp.where(jnp.isfinite(-nd), g, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",),
+                   donate_argnums=(1, 2, 3))
+def write_slots_quant(spec: LayoutSpec, cache_qg, cache_qv, cache_qs,
+                      slot_ids, g_blocks, qv_blocks, qs_blocks):
+    """Install fetched QUANTIZED spans into quant-tier slots."""
+    cache_qg = cache_qg.at[slot_ids].set(g_blocks)
+    cache_qv = cache_qv.at[slot_ids].set(qv_blocks)
+    cache_qs = cache_qs.at[slot_ids].set(qs_blocks)
+    return cache_qg, cache_qv, cache_qs
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def overflow_append_quant(spec: LayoutSpec, qvec_buf, qscale_buf, vec,
+                          vec_block, vec_off):
+    """Device twin of the quantized mirror update for one overflow
+    insert: quantize the row in place and scatter codes + codebook
+    scales (coords from ``layout.overflow_write_coords``)."""
+    from repro.quant.codec import quantize_row_jnp
+    g = spec.quant_group
+    codes, scales = quantize_row_jnp(vec, g)
+    row = lax.dynamic_update_slice(qvec_buf[vec_block], codes, (vec_off,))
+    qvec_buf = lax.dynamic_update_index_in_dim(qvec_buf, row, vec_block, 0)
+    srow = lax.dynamic_update_slice(qscale_buf[vec_block], scales,
+                                    (vec_off // g,))
+    qscale_buf = lax.dynamic_update_index_in_dim(qscale_buf, srow,
+                                                 vec_block, 0)
+    return qvec_buf, qscale_buf
 
 
 @functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1, 2))

@@ -69,6 +69,15 @@ class EngineConfig:
     sub_M0: int = 16
     ef_construction: int = 80
     seed: int = 0
+    # quantized resident tier (src/repro/quant): "none" keeps the exact
+    # single-tier path bit-identical; "int8" searches in two stages —
+    # quantized candidate generation over a LARGE int8 tier, then exact
+    # re-ranking of only the candidate rows
+    quant: str = "none"             # none | int8
+    quant_group: int = 32           # int8 codec group size (divides dim)
+    rerank_m: int = 0               # stage-2 candidate pool (0 = 2k)
+    exact_frac: float = 0.25        # share of the cache BYTE budget kept
+                                    # as full-precision (exact-tier) slots
 
 
 class DHNSWEngine:
@@ -77,8 +86,10 @@ class DHNSWEngine:
     def __init__(self, config: Optional[EngineConfig] = None, **kw):
         self.cfg = config or EngineConfig(**kw)
         assert self.cfg.mode in MODES, self.cfg.mode
+        assert self.cfg.quant in ("none", "int8"), self.cfg.quant
         self.meta: Optional[ME.MetaIndex] = None
         self.store: Optional[LA.Store] = None
+        self.tiers: Optional[SCH.TieredCacheState] = None
         self._extra: dict[int, np.ndarray] = {}   # inserted gid -> vector
         self._extra_pid: dict[int, int] = {}
         self._n0 = 0                              # base dataset size
@@ -100,13 +111,46 @@ class DHNSWEngine:
                                   seed=cfg.seed))
         self._device_put()
         cap = max(2, int(np.ceil(cfg.cache_frac * self.meta.n_partitions)))
-        self.cache = SCH.LRUCacheState(cap)
-        spec = self.store.spec
-        self._cache_g = jnp.full((cap, spec.fetch_blocks, spec.gblk), -1,
-                                 jnp.int32)
-        self._cache_v = jnp.zeros((cap, spec.fetch_blocks, spec.vblk),
-                                  jnp.float32)
+        self._cap0 = cap
+        if cfg.quant == "none":
+            self.cache = SCH.LRUCacheState(cap)
+            spec = self.store.spec
+            self._cache_g = jnp.full((cap, spec.fetch_blocks, spec.gblk), -1,
+                                     jnp.int32)
+            self._cache_v = jnp.zeros((cap, spec.fetch_blocks, spec.vblk),
+                                      jnp.float32)
+        else:
+            self._setup_quant(cap)
         return self
+
+    def _setup_quant(self, cap: int):
+        """Attach the int8 mirror and size the two device tiers from the
+        SAME byte budget a quant="none" engine would spend on ``cap``
+        full-precision slots: a small exact tier (``exact_frac`` of the
+        budget) plus a quantized tier filling the remainder — ~3-4x the
+        partitions per byte, so stage-1 hits replace remote reads."""
+        cfg = self.cfg
+        LA.attach_quant_mirror(self.store, cfg.quant_group)
+        spec = self.store.spec
+        self._qv_dev = jnp.asarray(self.store.qvec_buf)
+        self._qs_dev = jnp.asarray(self.store.qscale_buf)
+        pb = spec.partition_bytes()
+        qpb = spec.quant_partition_bytes(
+            include_graph=cfg.search_mode == "graph")
+        exact_cap = max(1, int(round(cap * cfg.exact_frac)))
+        quant_cap = max(2, int((cap - exact_cap) * pb // qpb))
+        self.tiers = SCH.TieredCacheState(quant_cap, exact_cap)
+        self.cache = self.tiers.exact   # legacy helpers see the exact tier
+        self._cache_g = jnp.full((exact_cap, spec.fetch_blocks, spec.gblk),
+                                 -1, jnp.int32)
+        self._cache_v = jnp.zeros((exact_cap, spec.fetch_blocks, spec.vblk),
+                                  jnp.float32)
+        self._cache_qg = jnp.full((quant_cap, spec.fetch_blocks, spec.gblk),
+                                  -1, jnp.int32)
+        self._cache_qv = jnp.zeros((quant_cap, spec.fetch_blocks, spec.vblk),
+                                   jnp.int8)
+        self._cache_qs = jnp.zeros(
+            (quant_cap, spec.fetch_blocks, spec.n_qgroups), jnp.float32)
 
     def _device_put(self):
         # memory pool (remote): the serialized region
@@ -118,6 +162,9 @@ class DHNSWEngine:
         self._meta_entry = int(self.meta.graph.entry)
         self._mt_dev = jnp.asarray(self.store.meta_table)
         self._mt_dirty = False
+        if self.store.qvec_buf is not None:   # quantized mirror (if attached)
+            self._qv_dev = jnp.asarray(self.store.qvec_buf)
+            self._qs_dev = jnp.asarray(self.store.qscale_buf)
 
     def _meta_table_dev(self):
         """Device copy of the metadata table, restaged lazily after
@@ -151,6 +198,25 @@ class DHNSWEngine:
         return (g.reshape(m, -1, self.store.spec.gblk),
                 v.reshape(m, -1, self.store.spec.vblk))
 
+    def _gather_quant(self, block_ids: np.ndarray):
+        """Quantized twin of ``_gather``: one doorbell batch pulling the
+        graph blocks plus the int8 codes + codebook-scale mirror.
+        block_ids: (m, fetch_blocks)."""
+        spec = self.store.spec
+        ids = jnp.asarray(block_ids.reshape(-1), jnp.int32)
+        if self.cfg.use_gather_kernel:
+            from repro.kernels.gather_blocks import ops as GO
+            g = GO.gather_blocks(self._g_dev, ids)
+            qv = GO.gather_blocks(self._qv_dev, ids)
+            qs = GO.gather_blocks(self._qs_dev, ids)
+        else:
+            g = jnp.take(self._g_dev, ids, axis=0)
+            qv = jnp.take(self._qv_dev, ids, axis=0)
+            qs = jnp.take(self._qs_dev, ids, axis=0)
+        m = block_ids.shape[0]
+        return (g.reshape(m, -1, spec.gblk), qv.reshape(m, -1, spec.vblk),
+                qs.reshape(m, -1, spec.n_qgroups))
+
     # ------------------------------------------------------------ search
 
     def search(self, queries: np.ndarray, k: int = 10,
@@ -159,6 +225,8 @@ class DHNSWEngine:
         cfg = self.cfg
         ef = ef or cfg.ef
         b = b or cfg.b
+        if cfg.quant != "none":
+            return self._search_quant(queries, k=k, ef=ef, b=b)
         spec = self.store.spec
         queries = np.asarray(queries, np.float32)
         B = queries.shape[0]
@@ -254,6 +322,188 @@ class DHNSWEngine:
         stats["n_fetches"] = plan.n_fetches
         return run_d, run_g, stats
 
+    # ------------------------------------------------------ staged search
+
+    def _search_quant(self, queries: np.ndarray, k: int, ef: int, b: int):
+        """Two-stage search over the quantized resident tier.
+
+        Stage 1 plans against the LARGE quantized tier (same §3.3 round
+        machinery, same doorbell batching — misses move int8 codes +
+        codebook blocks, ~1/3-1/4 the bytes of an exact span) and pools
+        per-query top-m candidates with their exact-row addresses.
+        Stage 2 fetches ONLY the candidate rows in full precision (rows
+        in exact-tier-resident partitions are free; the rest are row-
+        granular doorbell'd reads) and re-ranks to the final top-k.
+        ``NetLedger`` counts both the bytes moved and the bytes saved vs
+        fetching the same spans at full precision.
+        """
+        cfg = self.cfg
+        spec = self.store.spec
+        include_graph = cfg.search_mode == "graph"
+        pb = spec.partition_bytes()
+        qpb = spec.quant_partition_bytes(include_graph=include_graph)
+        row_b = spec.row_bytes()
+        m = max(int(cfg.rerank_m) or 2 * k, k)
+        queries = np.asarray(queries, np.float32)
+        B = queries.shape[0]
+        q_dev = jnp.asarray(queries)
+        ledger = NetLedger(cfg.fabric)
+        stats = {"meta_s": 0.0, "sub_s": 0.0, "plan_s": 0.0,
+                 "n_rounds": 0, "n_pairs": 0, "quant": cfg.quant,
+                 "rerank_m": m}
+
+        # 1. meta-HNSW routing (cached in the compute pool — no network)
+        t0 = time.perf_counter()
+        pids, _ = S.meta_route(self._meta_vecs, self._meta_adj, q_dev,
+                               self._meta_entry, b=b,
+                               n_levels=self.meta.graph.n_levels)
+        pids = np.asarray(jax.block_until_ready(pids))
+        stats["meta_s"] = time.perf_counter() - t0
+
+        # 2. stage-1 plan against the quantized tier.  A quantized span
+        # read moves the codes + codebook (and, in graph mode, the
+        # adjacency blocks); scan mode only adds the global-id tails.
+        t0 = time.perf_counter()
+        desc = 2     # data span + appended codebook span per descriptor
+        if cfg.mode == "naive":
+            raw = SCH.naive_plan(pids)
+            for _ in raw:
+                ledger.read(qpb, descriptors=desc)
+                ledger.save(pb - qpb)
+            uniq = sorted({p for _, p in raw})
+            tiers = SCH.TieredCacheState(max(len(uniq), 1), 1)
+            plan = SCH.plan_batch(pids, tiers.quant, doorbell=1)
+        else:
+            tiers = self.tiers
+            plan = SCH.plan_batch(pids, tiers.quant, doorbell=cfg.doorbell)
+            for rnd in plan.rounds:
+                if cfg.mode == "no_doorbell":
+                    for _ in rnd.fetch_pids:
+                        ledger.read(qpb, descriptors=desc)
+                        ledger.save(pb - qpb)
+                else:
+                    for db in rnd.doorbells:
+                        ledger.read(len(db) * qpb,
+                                    descriptors=desc * len(db))
+                        ledger.save(len(db) * (pb - qpb))
+        stats["plan_s"] = time.perf_counter() - t0
+
+        # 3. stage-1 rounds: fetch quantized spans -> pool candidates
+        mt_dev = self._meta_table_dev()
+        pool_d = jnp.full((B, m), jnp.inf, jnp.float32)
+        pool_p = jnp.full((B, m, 3), -1, jnp.int32)
+        if cfg.mode == "naive":
+            qcap = tiers.quant.capacity
+            cache_qg = jnp.full((qcap, spec.fetch_blocks, spec.gblk), -1,
+                                jnp.int32)
+            cache_qv = jnp.zeros((qcap, spec.fetch_blocks, spec.vblk),
+                                 jnp.int8)
+            cache_qs = jnp.zeros((qcap, spec.fetch_blocks, spec.n_qgroups),
+                                 jnp.float32)
+        else:
+            cache_qg, cache_qv, cache_qs = (self._cache_qg, self._cache_qv,
+                                            self._cache_qs)
+
+        for rnd in plan.rounds:
+            stats["n_rounds"] += 1
+            if len(rnd.fetch_pids):
+                ids = np.stack([self.store.span_block_ids(int(p))
+                                for p in rnd.fetch_pids])
+                g_blocks, qv_blocks, qs_blocks = self._gather_quant(ids)
+                slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
+                cache_qg, cache_qv, cache_qs = DS.write_slots_quant(
+                    spec, cache_qg, cache_qv, cache_qs, slots, g_blocks,
+                    qv_blocks, qs_blocks)
+            if not len(rnd.serve_pairs):
+                continue
+            t0 = time.perf_counter()
+            n = len(rnd.serve_pairs)
+            npad = pow2_pad(n)
+            qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
+            pool_d, pool_p = DS.serve_quant_pool(
+                spec, cache_qg, cache_qv, cache_qs, mt_dev, q_dev,
+                pool_d, pool_p, jnp.asarray(qi), jnp.asarray(ppid),
+                jnp.asarray(pslot), jnp.asarray(prank), jnp.asarray(valid),
+                m=m, ef=max(ef, m), mode=cfg.search_mode, n_lanes=b)
+            stats["sub_s"] += time.perf_counter() - t0
+            stats["n_pairs"] += n
+        if cfg.mode != "naive":
+            self._cache_qg, self._cache_qv, self._cache_qs = (
+                cache_qg, cache_qv, cache_qs)
+
+        # 4. stage-2 accounting: pool payload -> row fetch plan
+        t0 = time.perf_counter()
+        pool_p = jax.block_until_ready(pool_p)
+        stats["sub_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pool_h = np.asarray(pool_p)
+        live = pool_h[:, :, 1] >= 0
+        flat_rows = pool_h[:, :, 1][live]
+        flat_pids = pool_h[:, :, 2][live]
+        n_admitted = 0
+        if cfg.mode == "naive":
+            # every (query, row) need is its own remote read
+            for _ in range(len(flat_rows)):
+                ledger.read(row_b, descriptors=1)
+            stats["rerank_rows"] = int(len(flat_rows))
+            stats["rerank_hit_rows"] = 0
+        else:
+            # query-aware: each needed row moves at most once per batch
+            uniq_rows, first = np.unique(flat_rows, return_index=True)
+            uniq_pids = flat_pids[first]
+            resident = tiers.exact.resident()
+            hit = np.isin(uniq_pids, np.fromiter(resident, np.int64,
+                                                 len(resident)))
+            groups: dict[int, int] = {}
+            for p in uniq_pids[~hit].tolist():
+                groups[p] = groups.get(p, 0) + 1
+            items = sorted(groups.items())
+            if cfg.mode == "no_doorbell":
+                for p, cnt in items:
+                    ledger.read(cnt * row_b, descriptors=cnt)
+            else:
+                for j in range(0, len(items), cfg.doorbell):
+                    chunk = items[j:j + cfg.doorbell]
+                    ledger.read(sum(c for _, c in chunk) * row_b,
+                                descriptors=sum(c for _, c in chunk))
+            if items:
+                ledger.save(pb * len(items)
+                            - sum(c for _, c in items) * row_b)
+            for p in set(uniq_pids[hit].tolist()):
+                tiers.exact.touch(int(p))
+            # cost-based admission: a partition whose cumulative missed
+            # re-rank rows already outweigh one span fetch is promoted
+            for p, cnt in items:
+                tiers.note_rerank_miss(int(p), cnt)
+                if tiers.should_admit(int(p), row_b, pb):
+                    slot, _ = tiers.admit_exact(int(p))
+                    g_b, v_b = self._gather(
+                        self.store.span_block_ids(int(p))[None])
+                    self._cache_g, self._cache_v = DS.write_slots(
+                        spec, self._cache_g, self._cache_v,
+                        jnp.asarray([slot], jnp.int32), g_b, v_b)
+                    ledger.read(pb, descriptors=1)
+                    n_admitted += 1
+            stats["rerank_rows"] = int((~hit).sum())
+            stats["rerank_hit_rows"] = int(hit.sum())
+        stats["plan_s"] += time.perf_counter() - t0
+        stats["exact_admitted"] = n_admitted
+
+        # 5. stage-2 re-rank: exact distances over candidate rows only
+        t0 = time.perf_counter()
+        run_d, run_g = DS.rerank_exact(self._v_dev, q_dev,
+                                       pool_p[:, :, 1], pool_p[:, :, 0],
+                                       dim=spec.dim, k=k)
+        run_d = np.asarray(jax.block_until_ready(run_d))
+        run_g = np.asarray(run_g).astype(np.int64)
+        stats["sub_s"] += time.perf_counter() - t0
+
+        stats["net"] = ledger.as_dict()
+        stats["round_trips_per_query"] = ledger.round_trips / max(B, 1)
+        stats["cache_hits"] = plan.n_cache_hits
+        stats["n_fetches"] = plan.n_fetches
+        return run_d, run_g, stats
+
     # ------------------------------------------------------------ insert
 
     def insert(self, vecs: np.ndarray) -> np.ndarray:
@@ -280,6 +530,7 @@ class DHNSWEngine:
                 if not ok:
                     self._full_rebuild()
                 else:
+                    LA.refresh_quant_group(self.store, group)
                     self._device_put()       # re-register the region
                     self._invalidate_group(group)
                 slot = LA.insert_vector(self.store, vec, int(gid), int(pid))
@@ -292,7 +543,17 @@ class DHNSWEngine:
                 spec, self._g_dev, self._v_dev, jnp.asarray(vec),
                 jnp.int32(gid), co["vec_block"], co["vec_off"],
                 co["gid_block"], co["gid_off"])
-            ledger.write(spec.dim * 4 + 8, descriptors=1)
+            wire = spec.dim * 4 + 8
+            if self.tiers is not None:
+                # quantized-mirror twin: re-quantize the touched block on
+                # the host, scatter codes + codebook scales on device,
+                # and pay the extra one-sided WRITE on the wire
+                LA.refresh_quant_blocks(self.store, [co["vec_block"]])
+                self._qv_dev, self._qs_dev = DS.overflow_append_quant(
+                    spec, self._qv_dev, self._qs_dev, jnp.asarray(vec),
+                    co["vec_block"], co["vec_off"])
+                wire += spec.dim + (spec.dim // spec.quant_group) * 4
+            ledger.write(wire, descriptors=1)
             self._invalidate_pid(int(pid))
         self._mt_dirty = True       # host overflow counters moved
         self._last_insert_net = ledger.as_dict()
@@ -306,11 +567,9 @@ class DHNSWEngine:
     def _invalidate_group(self, group: int):
         for side in (0, 1):
             p = group * 2 + side
-            if p in self.cache.resident():
-                slot = self.cache.slot_of(p)
-                self.cache.slots[slot] = -1
-                if p in self.cache._recency:
-                    self.cache._recency.remove(p)
+            if self.tiers is not None:
+                self.tiers.invalidate(p)    # drops BOTH tiers
+            self.cache.drop(p)
 
     def _full_rebuild(self):
         """np_max exhausted: rebuild the whole region with a larger pad
@@ -336,11 +595,14 @@ class DHNSWEngine:
                                   M0=self.cfg.sub_M0,
                                   ef_construction=self.cfg.ef_construction))
         self._device_put()
-        cap = self.cache.capacity
-        self.cache = SCH.LRUCacheState(cap)
-        spec = self.store.spec
-        self._cache_g = jnp.full((cap, spec.fetch_blocks, spec.gblk), -1,
-                                 jnp.int32)
-        self._cache_v = jnp.zeros((cap, spec.fetch_blocks, spec.vblk),
-                                  jnp.float32)
+        if self.tiers is not None:
+            self._setup_quant(self._cap0)
+        else:
+            cap = self.cache.capacity
+            self.cache = SCH.LRUCacheState(cap)
+            spec = self.store.spec
+            self._cache_g = jnp.full((cap, spec.fetch_blocks, spec.gblk), -1,
+                                     jnp.int32)
+            self._cache_v = jnp.zeros((cap, spec.fetch_blocks, spec.vblk),
+                                      jnp.float32)
         del all_ids

@@ -55,6 +55,7 @@ class LayoutSpec:
     ov_cap: int            # overflow vector slots per group (shared)
     slot_vecs: int         # vectors per block (VBLK = slot_vecs * dim)
     n_partitions: int
+    quant_group: int = 0   # int8 codec group size (0 = no quantized mirror)
 
     @property
     def vblk(self) -> int:           # floats per vec block
@@ -99,6 +100,34 @@ class LayoutSpec:
     def partition_bytes(self) -> int:
         return self.fetch_blocks * self.block_bytes()
 
+    # ------------------------------------------------- quantized mirror
+
+    @property
+    def n_qgroups(self) -> int:      # codec groups per vec block
+        assert self.quant_group > 0
+        return self.vblk // self.quant_group
+
+    def quant_block_bytes(self, *, include_graph: bool = True) -> int:
+        """Wire bytes of one quantized block fetch: int8 codes + f32
+        codebook scales (+ the int32 graph block when the search mode
+        walks the sub-HNSW).  In scan mode only the global-id tail of the
+        graph span is needed, priced separately per span below."""
+        b = self.vblk * 1 + self.n_qgroups * 4
+        return b + (self.gblk * 4 if include_graph else 0)
+
+    def quant_partition_bytes(self, *, include_graph: bool = True) -> int:
+        """One quantized span fetch.  Without the graph, the span still
+        carries the global-id tails (np_max + ov_cap int32) so the
+        candidate pool can name real ids."""
+        b = self.fetch_blocks * self.quant_block_bytes(
+            include_graph=include_graph)
+        if not include_graph:
+            b += (self.np_max + self.ov_cap) * 4
+        return b
+
+    def row_bytes(self) -> int:      # one exact vector row (re-rank fetch)
+        return self.dim * 4
+
     def data_blk_off(self, side: int) -> int:
         return side * self.ov_blocks        # B's data sits after the overflow
 
@@ -115,6 +144,11 @@ class Store:
     vec_buf: np.ndarray     # (n_blocks, vblk) f32
     meta_table: np.ndarray  # (P, META_COLS) i32  ("global metadata block")
     n_base: np.ndarray      # (P,) convenience copy of MT_N_BASE
+    # quantized mirror (attach_quant_mirror): codebook blocks appended to
+    # the region with IDENTICAL block indexing, so every span helper above
+    # addresses both precisions
+    qvec_buf: Optional[np.ndarray] = None    # (n_blocks, vblk) int8
+    qscale_buf: Optional[np.ndarray] = None  # (n_blocks, n_qgroups) f32
 
     def total_bytes(self) -> int:
         return self.graph_buf.nbytes + self.vec_buf.nbytes
@@ -276,6 +310,50 @@ def overflow_gids(store: Store, pid: int) -> np.ndarray:
         return gflat[: int(row[MT_OV_A])].copy()
     cb = int(row[MT_OV_B])
     return gflat[spec.ov_cap - cb: spec.ov_cap][::-1].copy() if cb else gflat[:0]
+
+
+# ------------------------------------------------------ quantized mirror
+
+def attach_quant_mirror(store: Store, group: int = 32) -> Store:
+    """Build (or rebuild) the int8 mirror of ``vec_buf`` in place.
+
+    ``group`` must divide ``dim`` (codec groups never straddle vectors).
+    The mirror lives in the same registered region — quantized span
+    fetches reuse ``fetch_span``/``span_block_ids`` verbatim.
+    """
+    from repro.quant.codec import quantize_blocks
+    spec = store.spec
+    if spec.dim % group != 0:
+        raise ValueError(f"quant group {group} must divide dim {spec.dim}")
+    if spec.quant_group != group:
+        import dataclasses as DC
+        store.spec = DC.replace(spec, quant_group=group)
+    qb = quantize_blocks(store.vec_buf, group)
+    store.qvec_buf = qb.codes
+    store.qscale_buf = qb.scales
+    return store
+
+
+def refresh_quant_blocks(store: Store, block_ids) -> None:
+    """Re-quantize specific blocks after their vec rows changed (insert /
+    repack touched them).  No-op when no mirror is attached."""
+    if store.qvec_buf is None:
+        return
+    from repro.quant.codec import quantize_groups
+    ids = np.atleast_1d(np.asarray(block_ids, np.int64))
+    codes, scales = quantize_groups(store.vec_buf[ids],
+                                    store.spec.quant_group)
+    store.qvec_buf[ids] = codes
+    store.qscale_buf[ids] = scales
+
+
+def refresh_quant_group(store: Store, group: int) -> None:
+    """Re-quantize every block of one partition group (post-repack)."""
+    if store.qvec_buf is None:
+        return
+    spec = store.spec
+    start = group * spec.group_blocks
+    refresh_quant_blocks(store, np.arange(start, start + spec.group_blocks))
 
 
 def repack_group(store: Store, group: int, data_lookup,

@@ -126,6 +126,63 @@ class LRUCacheState:
         self.touch(pid)
         return slot, evicted
 
+    def drop(self, pid: int) -> None:
+        """Invalidate ``pid`` if resident (stale after an insert)."""
+        if pid in self.slots:
+            self.slots[self.slots.index(pid)] = -1
+        if pid in self._recency:
+            self._recency.remove(pid)
+
+
+class TieredCacheState:
+    """Two-tier compute-node cache for the quantized search path.
+
+    * ``quant`` — the LARGE tier: int8 spans + codebook blocks.  Stage-1
+      planning runs ``plan_batch`` against it, so a quantized hit avoids
+      the remote read entirely (the §3.3 invariant, at ~1/4 the bytes
+      per miss).
+    * ``exact`` — the SMALL tier: full-precision spans.  Stage-2 re-rank
+      rows that land in an exact-resident partition cost zero wire
+      bytes; everything else is fetched row-granular.
+
+    Admission to the exact tier is cost-based: ``note_rerank_miss``
+    accumulates each partition's missed re-rank rows and
+    ``should_admit`` fires once the cumulative missed bytes exceed one
+    full span fetch — i.e. only partitions whose re-rank traffic has
+    already paid for a span get promoted (a decayed counter, so cold
+    partitions age out instead of eventually all qualifying).
+    """
+
+    DECAY = 0.5          # eviction decay on the miss counter
+
+    def __init__(self, quant_cap: int, exact_cap: int):
+        self.quant = LRUCacheState(max(int(quant_cap), 1))
+        self.exact = LRUCacheState(max(int(exact_cap), 1))
+        self._miss_rows: dict[int, float] = {}   # pid -> missed rerank rows
+
+    def invalidate(self, pid: int) -> None:
+        self.quant.drop(pid)
+        self.exact.drop(pid)
+        self._miss_rows.pop(pid, None)
+
+    def note_rerank_miss(self, pid: int, n_rows: int) -> None:
+        self._miss_rows[pid] = self._miss_rows.get(pid, 0.0) + n_rows
+
+    def should_admit(self, pid: int, row_bytes: int, span_bytes: int) -> bool:
+        return (pid not in self.exact.resident()
+                and self._miss_rows.get(pid, 0.0) * row_bytes >= span_bytes)
+
+    def admit_exact(self, pid: int) -> tuple[int, int]:
+        """Promote ``pid`` (caller fetches + installs the exact span).
+        Returns (slot, evicted_pid or -1); the evictee's miss counter is
+        decayed, not erased — re-promotion needs fresh traffic."""
+        slot, evicted = self.exact.admit(pid)
+        self._miss_rows[pid] = 0.0
+        if evicted >= 0:
+            self._miss_rows[evicted] = (
+                self._miss_rows.get(evicted, 0.0) * self.DECAY)
+        return slot, evicted
+
 
 def _pair_ranks(pairs: np.ndarray) -> np.ndarray:
     """Occurrence index of each pair's query within its round (0-based).

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused int8 dequant+distance+top-k kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def dequantize_ref(codes, scales, group: int):
+    """codes (N, D) int8, scales (N, D // group) f32 -> (N, D) f32."""
+    n, d = codes.shape
+    x = codes.astype(jnp.float32).reshape(n, d // group, group)
+    return (x * scales[:, :, None]).reshape(n, d)
+
+
+def quant_topk_ref(queries, codes, scales, k: int, group: int,
+                   n_valid=None):
+    """Exact squared-L2 top-k over the dequantized database.
+
+    queries (B, D) f32; codes (N, D) int8; scales (N, D // group) f32
+    -> (dists (B, k), ids (B, k)), ascending.  ``n_valid`` masks padded
+    database rows.
+    """
+    q = queries.astype(jnp.float32)
+    x = dequantize_ref(codes, scales, group)
+    d = (jnp.sum(q * q, -1)[:, None] - 2.0 * q @ x.T
+         + jnp.sum(x * x, -1)[None, :])
+    if n_valid is not None:
+        d = jnp.where(jnp.arange(x.shape[0])[None, :] < n_valid, d, jnp.inf)
+    nd, ni = lax.top_k(-d, k)
+    return -nd, ni

@@ -1,0 +1,20 @@
+"""Quantized resident tier — per-partition int8 codecs + staged search.
+
+The compute pool's cache is small relative to the memory pool, and every
+miss costs bandwidth (paper §3.3).  This package shrinks the *bytes per
+fetched partition*: a symmetric int8 per-group codec (``codec.py``)
+mirrors each partition's vector payload, the engine keeps a large
+quantized tier next to the small exact tier, and search runs in two
+stages — quantized candidate generation, then exact re-ranking of only
+the candidate rows (AQR-HNSW-style multi-stage re-ranking adapted to the
+d-HNSW layout).
+"""
+from repro.quant.codec import (QuantizedBlocks, dequantize_groups,
+                               quantize_blocks, quantize_groups,
+                               quantize_row_jnp)
+
+__all__ = [
+    "QuantizedBlocks",
+    "quantize_blocks", "quantize_groups", "dequantize_groups",
+    "quantize_row_jnp",
+]

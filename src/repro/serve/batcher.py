@@ -48,14 +48,63 @@ class BatchPolicy:
 
     A window opens when the queue goes non-empty and closes when either
     ``max_batch`` query rows are pending or the oldest request has waited
-    ``max_wait_s``.  ``rate``/``burst`` bound admission (0 = unlimited).
+    the window's wait budget.  ``rate``/``burst`` bound admission
+    (0 = unlimited).
+
+    With ``adaptive_wait`` the budget scales with the OBSERVED arrival
+    rate instead of sitting at ``max_wait_s``: under load the queue
+    fills a batch quickly so holding the window only adds latency (the
+    budget shrinks toward ``min_wait_s``); when traffic is sparse a
+    longer window is the only way requests ever coalesce (the budget
+    grows toward ``max_wait_s``).  ``max_wait_s`` is always the cap.
     """
 
     max_batch: int = 64         # query rows fused into one engine call
-    max_wait_s: float = 2e-3    # oldest request's max queue time
+    max_wait_s: float = 2e-3    # wait cap (fixed budget when not adaptive)
     rate: float = 0.0           # admission tokens/s (0 disables the bucket)
     burst: int = 64             # bucket depth
     admission_block: bool = True  # block when out of tokens (else raise)
+    adaptive_wait: bool = False   # scale the window from arrival EWMA
+    min_wait_s: float = 1e-4      # adaptive floor
+    ewma_alpha: float = 0.2       # inter-arrival smoothing
+
+
+class ArrivalRateEWMA:
+    """EWMA of request inter-arrival time -> adaptive window budget.
+
+    The budget is the time it takes (at the observed rate) for half a
+    ``max_batch`` to queue up: enough to coalesce, never so long that a
+    full batch sits waiting on a timer.  Thread-safe; all methods take
+    an explicit ``now`` so tests can drive synthetic clocks.
+    """
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = float(alpha)
+        self._ewma: Optional[float] = None    # smoothed inter-arrival (s)
+        self._last: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def observe(self, now: float) -> None:
+        with self._lock:
+            if self._last is not None:
+                dt = max(now - self._last, 0.0)
+                self._ewma = (dt if self._ewma is None else
+                              self.alpha * dt + (1 - self.alpha) * self._ewma)
+            self._last = now
+
+    def interarrival_s(self) -> Optional[float]:
+        with self._lock:
+            return self._ewma
+
+    def wait_budget_s(self, policy: "BatchPolicy") -> float:
+        if not policy.adaptive_wait:
+            return policy.max_wait_s
+        with self._lock:
+            ewma = self._ewma
+        if ewma is None:                      # no signal yet: cap
+            return policy.max_wait_s
+        target = 0.5 * policy.max_batch * ewma
+        return float(min(max(target, policy.min_wait_s), policy.max_wait_s))
 
 
 class TokenBucket:
@@ -113,12 +162,22 @@ class ServeMetrics:
         self.fused_sizes = deque(maxlen=self.WINDOW)
         self.breakdown = {"queue_s": 0.0, "route_s": 0.0, "plan_s": 0.0,
                           "fetch_s": 0.0, "serve_s": 0.0}
+        # NetLedger roll-up, recorded once per fused CALL (every request
+        # in a window shares one engine call's network events)
+        self.net = {"bytes_fetched": 0.0, "bytes_saved": 0.0,
+                    "round_trips": 0.0, "descriptors": 0.0}
 
-    def record_call(self, batch: int, n_queries: int = 0):
+    def record_call(self, batch: int, n_queries: int = 0,
+                    net: Optional[dict] = None):
         with self._lock:
             self.n_fused_calls += 1
             self.fused_sizes.append(batch)
             self.n_queries += n_queries
+            if net:
+                self.net["bytes_fetched"] += net.get("bytes", 0.0)
+                self.net["bytes_saved"] += net.get("bytes_saved", 0.0)
+                self.net["round_trips"] += net.get("round_trips", 0.0)
+                self.net["descriptors"] += net.get("descriptors", 0.0)
 
     def record_rejected(self):
         with self._lock:
@@ -142,6 +201,7 @@ class ServeMetrics:
                 "n_rejected": self.n_rejected,
                 "mean_fused_batch": float(sizes.mean()) if len(sizes) else 0.0,
                 "breakdown_s": dict(self.breakdown),
+                "net": dict(self.net),
             }
             for p in (50, 95, 99):
                 out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
@@ -163,6 +223,7 @@ class MicroBatcher:
         self.engine = engine
         self.policy = policy or BatchPolicy()
         self.metrics = ServeMetrics()
+        self.arrivals = ArrivalRateEWMA(self.policy.ewma_alpha)
         self._bucket = TokenBucket(self.policy.rate, self.policy.burst)
         self._queue: deque[_Request] = deque()
         self._cv = threading.Condition()
@@ -237,6 +298,7 @@ class MicroBatcher:
         return self.submit_insert(vecs).result()
 
     def _enqueue(self, req: _Request) -> Future:
+        self.arrivals.observe(req.t_submit)
         with self._cv:
             if self._stop and self._thread is not None:
                 raise RuntimeError("batcher is stopped")
@@ -255,8 +317,10 @@ class MicroBatcher:
                 if self._stop:
                     return
                 # window: open at the oldest pending request; close on
-                # max_batch rows queued or the oldest hitting max_wait
-                deadline = self._queue[0].t_submit + pol.max_wait_s
+                # max_batch rows queued or the oldest exhausting the wait
+                # budget (arrival-rate-adaptive when the policy says so)
+                deadline = (self._queue[0].t_submit
+                            + self.arrivals.wait_budget_s(pol))
                 while (sum(r.vecs.shape[0] for r in self._queue)
                        < pol.max_batch):
                     left = deadline - time.perf_counter()
@@ -320,7 +384,7 @@ class MicroBatcher:
         d, g, est = self.engine.search(fused, k=k)
         d, g = d[:B], g[:B]
         t_done = time.perf_counter()
-        self.metrics.record_call(B, n_queries=B)
+        self.metrics.record_call(B, n_queries=B, net=est["net"])
         off = 0
         for r in group:
             m = r.vecs.shape[0]
@@ -345,7 +409,9 @@ class MicroBatcher:
         fused = np.concatenate([r.vecs for r in group])
         gids = self.engine.insert(fused)
         t_done = time.perf_counter()
-        self.metrics.record_call(fused.shape[0])
+        self.metrics.record_call(fused.shape[0],
+                                 net=getattr(self.engine,
+                                             "_last_insert_net", None))
         off = 0
         for r in group:
             m = r.vecs.shape[0]

@@ -61,5 +61,9 @@ class SearchServer:
     # ------------------------------------------------------------ metrics
 
     def stats(self) -> dict:
-        """Rolling service metrics (the /stats endpoint payload)."""
+        """Rolling service metrics (the /stats endpoint payload):
+        request/latency percentiles, stage breakdown, and the NetLedger
+        roll-up under ``net`` — bytes_fetched / bytes_saved (nonzero
+        when the engine serves through the quantized tier), round trips
+        and doorbell descriptors across all fused calls."""
         return self.batcher.metrics.snapshot()

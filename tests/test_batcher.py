@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import DHNSWEngine, EngineConfig
-from repro.serve.batcher import (AdmissionError, BatchPolicy, MicroBatcher,
-                                 TokenBucket)
+from repro.serve.batcher import (AdmissionError, ArrivalRateEWMA,
+                                 BatchPolicy, MicroBatcher, TokenBucket)
 from repro.serve.server import SearchServer
 
 CFG = dict(mode="full", search_mode="scan", n_rep=16, b=3, ef=32,
@@ -112,6 +112,52 @@ def test_token_bucket_admission():
     with pytest.raises(AdmissionError):
         mb.submit_search(np.zeros(8, np.float32), k=1)
     assert mb.metrics.n_rejected == 1
+
+
+def test_adaptive_wait_shrinks_under_load_grows_idle():
+    """The ROADMAP item: the window budget scales with the observed
+    arrival rate — tight under load, growing toward the cap when idle
+    (synthetic clocks, no threads)."""
+    pol = BatchPolicy(max_batch=64, max_wait_s=5e-3, adaptive_wait=True,
+                      min_wait_s=1e-4)
+
+    hot = ArrivalRateEWMA(alpha=0.2)
+    for i in range(200):                 # 20 us apart: heavy load
+        hot.observe(i * 2e-5)
+    idle = ArrivalRateEWMA(alpha=0.2)
+    for i in range(20):                  # 50 ms apart: sparse
+        idle.observe(i * 5e-2)
+
+    w_hot = hot.wait_budget_s(pol)
+    w_idle = idle.wait_budget_s(pol)
+    assert w_hot < w_idle                # shrinks under load
+    assert w_idle == pol.max_wait_s      # grows back to the cap when idle
+    assert pol.min_wait_s <= w_hot < pol.max_wait_s
+    # extreme load pins the floor
+    slam = ArrivalRateEWMA(alpha=0.2)
+    for i in range(500):
+        slam.observe(i * 1e-8)
+    assert slam.wait_budget_s(pol) == pol.min_wait_s
+    # non-adaptive policies are untouched
+    fixed = BatchPolicy(max_batch=64, max_wait_s=5e-3)
+    assert hot.wait_budget_s(fixed) == fixed.max_wait_s
+    # no signal yet -> conservative cap
+    assert ArrivalRateEWMA().wait_budget_s(pol) == pol.max_wait_s
+
+
+def test_adaptive_wait_live_batcher(engine, small_data):
+    """End-to-end: an adaptive batcher still coalesces and answers
+    correctly, and its observed EWMA reflects the submissions."""
+    _, queries = small_data
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=64, max_wait_s=0.05,
+                                          adaptive_wait=True),
+                      autostart=False)
+    futs = [mb.submit_search(queries[i], k=10) for i in range(6)]
+    mb.start()
+    res = [f.result(timeout=60) for f in futs]
+    mb.stop()
+    assert len(res) == 6 and all(r[1].shape == (1, 10) for r in res)
+    assert mb.arrivals.interarrival_s() is not None
 
 
 def test_server_stats_snapshot(engine, small_data):

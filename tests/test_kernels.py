@@ -54,6 +54,66 @@ def test_distance_topk_bf16_inputs(rng):
                                rtol=0.02)
 
 
+# ------------------------------------------------------------- quant_topk
+
+@pytest.mark.parametrize("B,N,D,group,k", [
+    (1, 100, 16, 16, 1), (7, 333, 128, 32, 10), (37, 500, 960, 64, 5),
+    (128, 256, 64, 32, 16), (130, 513, 32, 8, 3),
+])
+def test_quant_topk_sweep(rng, B, N, D, group, k):
+    from repro.kernels.quant_topk.ops import quant_topk
+    from repro.kernels.quant_topk.ref import quant_topk_ref
+    from repro.quant.codec import quantize_groups
+
+    q = rng.standard_normal((B, D)).astype(np.float32)
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    codes, scales = quantize_groups(x, group)
+    cj, sj = jnp.asarray(codes), jnp.asarray(scales)
+    d, i = quant_topk(jnp.asarray(q), cj, sj, k, group)
+    dr, ir = quant_topk_ref(jnp.asarray(q), cj, sj, k, group)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr),
+                               atol=1e-2, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n_valid", [1, 50, 255, 256])
+def test_quant_topk_masking(rng, n_valid):
+    from repro.kernels.quant_topk.ops import quant_topk
+    from repro.kernels.quant_topk.ref import quant_topk_ref
+    from repro.quant.codec import quantize_groups
+
+    q = rng.standard_normal((5, 32)).astype(np.float32)
+    x = rng.standard_normal((256, 32)).astype(np.float32)
+    codes, scales = quantize_groups(x, 8)
+    cj, sj = jnp.asarray(codes), jnp.asarray(scales)
+    d, i = quant_topk(jnp.asarray(q), cj, sj, 8, 8, n_valid=n_valid)
+    dr, ir = quant_topk_ref(jnp.asarray(q), cj, sj, 8, 8, n_valid=n_valid)
+    live = np.asarray(i) >= 0
+    assert (np.asarray(i)[live] < n_valid).all()
+    np.testing.assert_array_equal(np.asarray(i)[live], np.asarray(ir)[live])
+    if n_valid < 8:  # padding semantics: inf/-1 tail
+        assert np.isinf(np.asarray(d)[:, n_valid:]).all()
+
+
+def test_quant_topk_close_to_exact(rng):
+    """Dequantized distances track the f32 oracle within codec error."""
+    from repro.kernels.distance_topk.ref import distance_topk_ref
+    from repro.kernels.quant_topk.ops import quant_topk
+    from repro.quant.codec import quantize_groups
+
+    q = rng.standard_normal((16, 128)).astype(np.float32)
+    x = rng.standard_normal((400, 128)).astype(np.float32)
+    codes, scales = quantize_groups(x, 32)
+    d, i = quant_topk(jnp.asarray(q), jnp.asarray(codes),
+                      jnp.asarray(scales), 10, 32)
+    de, ie = distance_topk_ref(jnp.asarray(q), jnp.asarray(x), 10)
+    overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                       for a, b in zip(np.asarray(i), np.asarray(ie))])
+    assert overlap >= 0.9, overlap
+    np.testing.assert_allclose(np.asarray(d), np.asarray(de),
+                               rtol=0.05, atol=0.5)
+
+
 # ------------------------------------------------------------ gather_blocks
 
 @pytest.mark.parametrize("dtype", [np.float32, np.int32])

@@ -14,7 +14,8 @@ try:
 except ImportError:         # CI fast tier / bare containers
     HAVE_HYPOTHESIS = False
 
-from repro.core.scheduler import LRUCacheState, naive_plan, plan_batch
+from repro.core.scheduler import (LRUCacheState, TieredCacheState,
+                                  naive_plan, plan_batch)
 
 
 def _random_topb(rng, B, b, P):
@@ -143,3 +144,141 @@ def test_lru_eviction_order():
     slot, ev = c.admit(3)
     assert ev == 2
     assert c.resident() == {1, 3}
+
+
+def test_lru_capacity_one_thrash():
+    """cap=1 is pure thrash: every distinct admit evicts the previous
+    pid into the same slot, and planning still covers every pair."""
+    c = LRUCacheState(1)
+    s0, e0 = c.admit(7)
+    assert (s0, e0) == (0, -1)
+    s1, e1 = c.admit(9)
+    assert (s1, e1) == (0, 7)
+    s2, e2 = c.admit(9)          # re-admit resident: no eviction
+    assert (s2, e2) == (0, -1)
+    assert c.resident() == {9}
+
+    rng = np.random.default_rng(9)
+    topb = _random_topb(rng, 12, 3, 10)
+    plan = plan_batch(topb, LRUCacheState(1), doorbell=2)
+    served = {(int(q), int(p)) for r in plan.rounds for q, p in r.serve_pairs}
+    assert served == {(q, int(p)) for q in range(12) for p in topb[q]}
+    for rnd in plan.rounds:
+        assert len(rnd.fetch_pids) <= 1
+        assert all(s == 0 for s in rnd.fetch_slots)
+
+
+def test_lru_drop_then_readmit():
+    """drop() (the engine's insert invalidation) frees the slot and the
+    next plan refetches the pid into a valid slot."""
+    c = LRUCacheState(2)
+    c.admit(4)
+    c.admit(5)
+    c.drop(4)
+    assert c.resident() == {5}
+    assert 4 not in c._recency
+    c.drop(4)                    # idempotent on non-resident pids
+    slot, ev = c.admit(4)        # re-admit fills the freed slot
+    assert ev == -1 and c.resident() == {4, 5}
+    plan = plan_batch(np.array([[4], [5]]), c, doorbell=1)
+    assert plan.n_fetches == 0   # both resident again -> pure hits
+
+
+def test_engine_readmits_after_invalidate_pid(built_engine, sift_small):
+    """After an insert invalidates a cached partition, the next search
+    must refetch it (no stale serve) and return identical results."""
+    q = sift_small.queries[:8]
+    d0, g0, _ = built_engine.search(q, k=10)
+    _, _, warm = built_engine.search(q, k=10)
+    resident = sorted(built_engine.cache.resident())
+    assert resident, "warm cache expected"
+    built_engine._invalidate_pid(resident[0])
+    _, _, st = built_engine.search(q, k=10)
+    assert st["n_fetches"] >= 1          # the dropped pid was refetched
+    d1, g1, _ = built_engine.search(q, k=10)
+    assert np.array_equal(g0, g1)
+    assert np.array_equal(d0, d1)
+
+
+# ------------------------------------------------------------ tiered cache
+
+def test_tiered_cache_invalidate_drops_both_tiers():
+    t = TieredCacheState(4, 2)
+    t.quant.admit(3)
+    t.exact.admit(3)
+    t.note_rerank_miss(3, 100)
+    t.invalidate(3)
+    assert 3 not in t.quant.resident()
+    assert 3 not in t.exact.resident()
+    assert t._miss_rows.get(3) is None
+
+
+def test_tiered_cache_cost_based_admission():
+    t = TieredCacheState(4, 1)
+    row_b, span_b = 512, 10 * 512
+    t.note_rerank_miss(1, 4)
+    assert not t.should_admit(1, row_b, span_b)   # 4 rows < 10-row span
+    t.note_rerank_miss(1, 7)
+    assert t.should_admit(1, row_b, span_b)       # cumulative 11 >= 10
+    t.admit_exact(1)
+    assert not t.should_admit(1, row_b, span_b)   # resident: never again
+    # evicting 1 decays (not erases) its counter
+    t._miss_rows[1] = 6.0            # stale traffic from while resident
+    t.note_rerank_miss(2, 20)
+    _, ev = t.admit_exact(2)
+    assert ev == 1
+    assert t._miss_rows[1] == 6.0 * TieredCacheState.DECAY
+
+
+# ------------------------------------------- merge_ranked vs numpy oracle
+
+def _numpy_fold_merge(run_d, run_g, qi, d, g):
+    """The pre-vectorization semantics: fold each pair into its query's
+    running top-k through a sequential stable merge."""
+    want_d, want_g = run_d.copy(), run_g.copy()
+    k = run_d.shape[1]
+    for j in range(len(qi)):
+        q = int(qi[j])
+        md = np.concatenate([want_d[q], d[j]])
+        mg = np.concatenate([want_g[q], g[j]])
+        order = np.argsort(md, kind="stable")[:k]
+        want_d[q], want_g[q] = md[order], mg[order]
+    return want_d, want_g
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 10_000), B=st.just(9), k=st.just(8),
+           n=st.just(21))
+    @settings(max_examples=40, deadline=None)
+    def test_merge_ranked_matches_numpy_fold(seed, B, k, n):
+        """Property: the fused device scatter-merge == the numpy
+        sequential fold, ties included (fixed shapes -> one XLA compile
+        across all examples)."""
+        import jax.numpy as jnp
+
+        from repro.core.device_store import merge_ranked
+        from repro.core.scheduler import _pair_ranks
+
+        rng = np.random.default_rng(seed)
+        run_d = np.sort(rng.standard_normal((B, k)).astype(np.float32) ** 2,
+                        axis=1)
+        run_g = rng.integers(0, 1000, (B, k)).astype(np.int32)
+        qi = rng.integers(0, B, n)
+        d = np.sort(rng.standard_normal((n, k)).astype(np.float32) ** 2,
+                    axis=1)
+        if n and rng.random() < 0.5:     # force exact cross-list ties
+            d[0] = run_d[int(qi[0])]
+        g = rng.integers(1000, 2000, (n, k)).astype(np.int32)
+
+        want_d, want_g = _numpy_fold_merge(run_d, run_g, qi, d, g)
+        ranks = _pair_ranks(np.stack([qi, np.zeros(n, np.int64)], axis=1))
+        got_d, got_g = merge_ranked(
+            jnp.asarray(run_d), jnp.asarray(run_g),
+            jnp.asarray(qi, jnp.int32), jnp.asarray(ranks, jnp.int32),
+            jnp.asarray(d), jnp.asarray(g),
+            n_lanes=int(ranks.max()) + 1 if n else 1)
+        assert np.array_equal(np.asarray(got_d), want_d)
+        assert np.array_equal(np.asarray(got_g), want_g)
+else:
+    def test_merge_ranked_matches_numpy_fold():
+        pytest.importorskip("hypothesis")

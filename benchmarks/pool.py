@@ -1,0 +1,121 @@
+"""Memory-pool transport sweep: modeled latency vs network parameters.
+
+The point of the ``MemoryPool`` boundary is that the transport is a
+swappable, *measurable* component.  This sweep runs the same workload
+through ``SimulatedRDMAPool`` across a grid of fabric calibrations —
+round-trip time and payload bandwidth scaled around the paper's
+ConnectX-6 testbed — and reports, per scheme:
+
+  * counted verbs (round trips, doorbell descriptors, bytes/query);
+  * the pool's modeled wire time per query, with its per-verb breakdown
+    (span reads vs row reads vs appends);
+
+so the BENCH numbers reflect round trips and wire time under each
+fabric, not just event counts.  The quantized tier rides along to show
+the byte reduction translating into modeled time on slow fabrics.
+
+Writes ``BENCH_pool.json``.  ``--smoke`` is the CI crash check: tiny
+config, asserts nothing about perf.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G, Fabric
+from repro.data.synthetic import sift_like
+
+
+def fabric_grid(smoke: bool) -> list[Fabric]:
+    base = RDMA_100G
+    grid = [base]
+    rtt_scales = (5.0,) if smoke else (5.0, 25.0)
+    bw_scales = (0.25,) if smoke else (0.25, 0.0625)
+    for s in rtt_scales:
+        grid.append(Fabric(f"rtt-x{s:g}", rtt_s=base.rtt_s * s,
+                           bw_Bps=base.bw_Bps, per_op_s=base.per_op_s * s,
+                           max_doorbell=base.max_doorbell))
+    for s in bw_scales:
+        grid.append(Fabric(f"bw-x{s:g}", rtt_s=base.rtt_s,
+                           bw_Bps=base.bw_Bps * s, per_op_s=base.per_op_s,
+                           max_doorbell=base.max_doorbell))
+    return grid
+
+
+def run_cell(data, queries, *, mode: str, quant: str, fabric: Fabric,
+             n_rep: int, n_batches: int) -> dict:
+    cfg = EngineConfig(mode=mode, search_mode="scan", b=4, ef=48,
+                       n_rep=n_rep, cache_frac=0.25, doorbell=16,
+                       fabric=fabric, seed=0, quant=quant, pool="sim_rdma")
+    eng = DHNSWEngine(cfg).build(data)
+    per = max(len(queries) // n_batches, 1)
+    nq = 0
+    t0 = time.perf_counter()
+    for i in range(n_batches):
+        qb = queries[i * per:(i + 1) * per]
+        _, _, st = eng.search(qb, k=10)
+        nq += len(qb)
+    wall = time.perf_counter() - t0
+    snap = eng.pool.snapshot()
+    tot = snap["totals"]
+    return {"mode": mode, "quant": quant, "fabric": fabric.name,
+            "rtt_us": fabric.rtt_s * 1e6,
+            "bw_GBps": fabric.bw_Bps / 1e9,
+            "round_trips_per_q": round(tot["round_trips"] / nq, 3),
+            "descriptors_per_q": round(tot["descriptors"] / nq, 3),
+            "kb_per_q": round(tot["bytes"] / nq / 1e3, 2),
+            "sim_us_per_q": round(snap["sim_total_s"] / nq * 1e6, 3),
+            "sim_breakdown_us": {v: round(s * 1e6, 2)
+                                 for v, s in snap["sim_s"].items()},
+            "wall_s": round(wall, 2)}
+
+
+def run(*, smoke: bool = False, out: str = "BENCH_pool.json") -> dict:
+    if smoke:
+        n, n_rep, n_batches = 1500, 12, 2
+        modes = ("full",)
+        quants = ("none", "int8")
+    else:
+        n, n_rep, n_batches = 20_000, 64, 4
+        modes = ("naive", "no_doorbell", "full")
+        quants = ("none", "int8")
+    ds = sift_like(n=n, n_queries=256, seed=0)
+
+    rows = []
+    print(f"{'fabric':>10s} {'mode':>12s} {'quant':>5s} {'rt/q':>7s} "
+          f"{'KB/q':>9s} {'sim us/q':>9s}")
+    for fabric in fabric_grid(smoke):
+        for mode in modes:
+            for quant in quants:
+                row = run_cell(ds.data, ds.queries, mode=mode, quant=quant,
+                               fabric=fabric, n_rep=n_rep,
+                               n_batches=n_batches)
+                rows.append(row)
+                print(f"{row['fabric']:>10s} {mode:>12s} {quant:>5s} "
+                      f"{row['round_trips_per_q']:7.3f} "
+                      f"{row['kb_per_q']:9.2f} "
+                      f"{row['sim_us_per_q']:9.3f}", flush=True)
+
+    blob = {"bench": "pool", "smoke": smoke, "n": n, "n_rep": n_rep,
+            "n_batches": n_batches, "rows": rows}
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=2)
+    print(f"wrote {out} ({len(rows)} rows)")
+    return blob
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config; crash-check only")
+    ap.add_argument("--out", default="BENCH_pool.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,11 +34,13 @@ from repro.data.synthetic import sift_like
 
 
 def run_cell(data, queries, gt, *, quant: str, exact_frac: float,
-             rerank_m: int, n_rep: int, n_batches: int, k: int = 10) -> dict:
+             rerank_m: int, n_rep: int, n_batches: int, k: int = 10,
+             quant_kernel: str = "off", cache_frac: float = 0.25) -> dict:
     cfg = EngineConfig(mode="full", search_mode="scan", b=6, ef=48,
-                       n_rep=n_rep, cache_frac=0.25, doorbell=16,
+                       n_rep=n_rep, cache_frac=cache_frac, doorbell=16,
                        fabric=RDMA_100G, seed=0, quant=quant,
-                       exact_frac=exact_frac, rerank_m=rerank_m)
+                       exact_frac=exact_frac, rerank_m=rerank_m,
+                       quant_kernel=quant_kernel)
     eng = DHNSWEngine(cfg).build(data)
     per = max(len(queries) // n_batches, 1)
     tot_bytes = tot_saved = trips = 0.0
@@ -60,6 +62,9 @@ def run_cell(data, queries, gt, *, quant: str, exact_frac: float,
         row.update(exact_frac=exact_frac, rerank_m=rerank_m,
                    quant_slots=eng.tiers.quant.capacity,
                    exact_slots=eng.tiers.exact.capacity)
+    if quant_kernel != "off":
+        row.update(quant_kernel=quant_kernel,
+                   kernel_active=st.get("quant_kernel") == "flat")
     return row
 
 
@@ -121,6 +126,22 @@ def run(*, smoke: bool = False, out: str = "BENCH_quant.json") -> dict:
             print(f"{'int8':6s} {split:5.2f} {m:4d} {row['recall']:7.4f} "
                   f"{row['mbytes']:9.2f} {row['mbytes_saved']:9.2f} "
                   f"x{row['bytes_reduction']:8.2f}", flush=True)
+
+    # dense-resident flat stage-1 A/B: the quant_topk Pallas kernel over
+    # the whole resident int8 database vs the per-pair jnp staged path
+    # (cache budget raised so the quant tier holds every partition)
+    for qk in ("auto", "ref"):
+        row = run_cell(ds.data, ds.queries, ds.gt_ids, quant="int8",
+                       exact_frac=0.25, rerank_m=0, n_rep=n_rep,
+                       n_batches=n_batches, quant_kernel=qk,
+                       cache_frac=0.6)
+        row["bytes_reduction"] = round(base / max(row["mbytes"], 1e-9), 2)
+        rows.append(row)
+        tag = {"auto": "flatk", "ref": "flatr"}[qk]
+        print(f"{tag:6s} {0.25:5.2f} {0:4d} {row['recall']:7.4f} "
+              f"{row['mbytes']:9.2f} {row['mbytes_saved']:9.2f} "
+              f"x{row['bytes_reduction']:8.2f}  "
+              f"active={row['kernel_active']}", flush=True)
 
     print(f"kernel A/B: id_match {kab['id_match']:.3f}  "
           f"pallas {kab['pallas_us']} us vs ref {kab['ref_us']} us")

@@ -4,7 +4,8 @@
 
 Suites: fig6 (latency-recall), tables (breakdown), throughput, insert,
 roofline, serving (offered-load sweep -> BENCH_serving.json), quant
-(recall-vs-bytes tier-split sweep -> BENCH_quant.json).
+(recall-vs-bytes tier-split sweep -> BENCH_quant.json), pool (modeled
+latency vs simulated network parameters -> BENCH_pool.json).
 Default: all.  Prints ``name,us_per_call,key=val...`` CSV.
 Scale via REPRO_BENCH_SCALE={quick,full} (see benchmarks/common.py).
 """
@@ -16,7 +17,7 @@ import time
 import traceback
 
 SUITES = ["fig6", "tables", "throughput", "insert", "roofline", "serving",
-          "quant"]
+          "quant", "pool"]
 
 
 def main() -> None:
@@ -49,6 +50,10 @@ def main() -> None:
             elif suite == "quant":
                 from benchmarks.quant import run as qr
                 qr(smoke=os.environ.get("REPRO_BENCH_SCALE",
+                                        "quick") == "quick")
+            elif suite == "pool":
+                from benchmarks.pool import run as pr
+                pr(smoke=os.environ.get("REPRO_BENCH_SCALE",
                                         "quick") == "quick")
             else:
                 print(f"# unknown suite {suite}")

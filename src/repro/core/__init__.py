@@ -7,7 +7,7 @@ Public API:
     plan_batch                   — query-aware batched loading (§3.3)
 """
 from repro.core.cost_model import RDMA_100G, TPU_ICI, Fabric, NetLedger
-from repro.core.engine import MODES, DHNSWEngine, EngineConfig
+from repro.core.engine import MODES, POOLS, DHNSWEngine, EngineConfig
 from repro.core.hnsw import (HNSW, HNSWParams, PaddedGraph, brute_force_knn,
                              recall_at_k)
 from repro.core.layout import LayoutSpec, Store, build_store
@@ -16,7 +16,7 @@ from repro.core.scheduler import (LRUCacheState, Plan, TieredCacheState,
                                   naive_plan, plan_batch)
 
 __all__ = [
-    "DHNSWEngine", "EngineConfig", "MODES",
+    "DHNSWEngine", "EngineConfig", "MODES", "POOLS",
     "HNSW", "HNSWParams", "PaddedGraph", "brute_force_knn", "recall_at_k",
     "MetaIndex", "build_meta",
     "LayoutSpec", "Store", "build_store",

@@ -326,20 +326,45 @@ def merge_ranked_payload(run_d, run_p, pair_qi, pair_ranks, d, p, *,
             jnp.take_along_axis(all_p, order[:, :, None], axis=1))
 
 
-@functools.partial(jax.jit, static_argnames=("dim", "k"))
-def rerank_exact(vec_buf, queries, rows, gids, *, dim: int, k: int):
-    """Stage 2: gather the candidate rows in FULL precision and re-rank.
+@functools.partial(jax.jit, static_argnames=("dim",))
+def gather_rows(vec_buf, rows, *, dim: int):
+    """The memory pool's row-granular READ verb: gather exact vector
+    rows from the serialized region.  ``rows`` (..., ) region row
+    addresses into ``vec_buf.reshape(-1, dim)`` (-1 lanes gather row 0
+    and are masked by the caller).  Returns (..., D) f32."""
+    return vec_buf.reshape(-1, dim)[jnp.maximum(rows, 0)]
 
-    vec_buf: the serialized region's (n_blocks, vblk) f32 buffer; rows
-    (B, m) exact-row addresses from stage 1 (-1 = empty lane); gids
-    (B, m).  Returns the final (dists (B, k), gids (B, k)).
-    """
-    vrows = vec_buf.reshape(-1, dim)[jnp.maximum(rows, 0)]     # (B, m, D)
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def rerank_gathered(vrows, queries, rows, gids, *, k: int):
+    """Stage 2, compute side: exact distances over already-gathered
+    candidate rows (``gather_rows`` is the pool verb that produced
+    ``vrows``).  rows (B, m) mark empty lanes with -1; gids (B, m).
+    Returns the final (dists (B, k), gids (B, k))."""
     d = jnp.sum(jnp.square(vrows - queries[:, None, :]), axis=-1)
     d = jnp.where(rows >= 0, d, jnp.inf)
     nd, ni = lax.top_k(-d, k)
     g = jnp.take_along_axis(gids, ni, axis=1)
     return -nd, jnp.where(jnp.isfinite(-nd), g, -1)
+
+
+def rerank_exact(vec_buf, queries, rows, gids, *, dim: int, k: int):
+    """Fused legacy entry point: gather + re-rank in one call (kept for
+    callers that hold the region buffer directly; the engine now splits
+    this across the pool boundary as gather_rows -> rerank_gathered)."""
+    vrows = gather_rows(vec_buf, rows, dim=dim)
+    return rerank_gathered(vrows, queries, rows, gids, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "group"))
+def gather_quant_rows(qvec_buf, qscale_buf, rows, *, dim: int, group: int):
+    """Row-granular gather from the QUANTIZED mirror: int8 codes plus the
+    per-row codebook scales.  ``rows`` are the same region row addresses
+    ``gather_rows`` takes (the mirror shares the block indexing)."""
+    safe = jnp.maximum(rows, 0)
+    codes = qvec_buf.reshape(-1, dim)[safe]
+    scales = qscale_buf.reshape(-1, dim // group)[safe]
+    return codes, scales
 
 
 @functools.partial(jax.jit, static_argnames=("spec",),

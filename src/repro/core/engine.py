@@ -16,42 +16,39 @@ Search inside a loaded partition:
 * ``scan``  — beyond-paper TPU mode: exact MXU brute scan of the fetched
               partition (see core/search.py docstring).
 
+Architecture: the engine is a thin facade over the DISAGGREGATED split —
+a ``ComputeClient`` (``repro/pool/compute.py``: cached meta-HNSW,
+resident-partition cache tiers, round scheduler, Pallas serve kernels)
+that talks to a ``MemoryPool`` transport (``repro/pool/``) through the
+paper's RDMA verbs: span reads, row reads, doorbell-batched descriptor
+submission, one-sided appends.  ``EngineConfig.pool`` picks the
+transport:
+
+* ``"local"``    — in-process device arrays (default; bit-identical to
+                   the pre-pool monolithic engine);
+* ``"sim_rdma"`` — same data path plus a per-verb latency/bandwidth
+                   model, so ``stats["pool"]`` carries a modeled network
+                   time breakdown next to the counted ``stats["net"]``.
+
 The compute/network split follows the paper's methodology: device (or
 host-jax) wall time is measured for meta-HNSW and sub-HNSW compute; the
 network term is *counted* (round trips, doorbell descriptors, bytes) and
-priced by ``core/cost_model.py`` for the RDMA testbed and the TPU ICI
-fabric — this container has neither fabric, and the paper's own breakdown
-tables are what we reproduce.
+priced by ``core/cost_model.py`` — this container has neither fabric,
+and the paper's own breakdown tables are what we reproduce.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import device_store as DS
-from repro.core import layout as LA
-from repro.core import meta as ME
-from repro.core import scheduler as SCH
-from repro.core import search as S
-from repro.core.cost_model import (RDMA_100G, TPU_ICI, Fabric, NetLedger)
-from repro.core.hnsw import HNSWParams
+from repro.core.cost_model import (RDMA_100G, TPU_ICI, Fabric,  # noqa: F401
+                                   NetLedger)
+from repro.core.scheduler import pow2_pad  # noqa: F401  (re-export)
 
 MODES = ("naive", "no_doorbell", "full")
-
-
-def pow2_pad(n: int, lo: int = 8) -> int:
-    """Next power of two >= n (floor ``lo``) — the shape-bucketing rule
-    shared by the engine's round padding and the serve tier's fused-batch
-    padding, so jitted stages see a bounded set of shapes."""
-    m = lo
-    while m < n:
-        m *= 2
-    return m
+POOLS = ("local", "sim_rdma")
 
 
 @dataclass
@@ -78,531 +75,80 @@ class EngineConfig:
     rerank_m: int = 0               # stage-2 candidate pool (0 = 2k)
     exact_frac: float = 0.25        # share of the cache BYTE budget kept
                                     # as full-precision (exact-tier) slots
+    # memory-pool transport (repro/pool): "local" is in-process and
+    # bit-identical; "sim_rdma" adds the per-verb latency model
+    pool: str = "local"             # local | sim_rdma
+    # stage-1 flat kernel route: "off" keeps the per-pair jnp path;
+    # "auto" routes flat (scan-mode) stage 1 through the fused
+    # quant_topk Pallas kernel when the quantized tier is dense-resident
+    # (capacity >= n_partitions); "ref" same route via the jnp oracle
+    quant_kernel: str = "off"       # off | auto | ref
 
 
 class DHNSWEngine:
-    """Build once, then ``search``/``insert`` batches."""
+    """Build once, then ``search``/``insert`` batches.
+
+    Facade over ``ComputeClient + MemoryPool`` — constructing and using
+    it is unchanged from the monolithic engine it replaced; code that
+    needs the boundary itself should use ``engine.client`` and
+    ``engine.pool`` (or build them directly from ``repro.pool``).
+    """
 
     def __init__(self, config: Optional[EngineConfig] = None, **kw):
+        from repro.pool import make_pool_factory
+        from repro.pool.compute import ComputeClient
         self.cfg = config or EngineConfig(**kw)
         assert self.cfg.mode in MODES, self.cfg.mode
         assert self.cfg.quant in ("none", "int8"), self.cfg.quant
-        self.meta: Optional[ME.MetaIndex] = None
-        self.store: Optional[LA.Store] = None
-        self.tiers: Optional[SCH.TieredCacheState] = None
-        self._extra: dict[int, np.ndarray] = {}   # inserted gid -> vector
-        self._extra_pid: dict[int, int] = {}
-        self._n0 = 0                              # base dataset size
-        self._data: Optional[np.ndarray] = None
+        assert self.cfg.pool in POOLS, self.cfg.pool
+        assert self.cfg.quant_kernel in ("off", "auto", "ref"), \
+            self.cfg.quant_kernel
+        self.client = ComputeClient(self.cfg, make_pool_factory(self.cfg))
 
-    # ------------------------------------------------------------ build
+    # ------------------------------------------------------------ lifecycle
 
     def build(self, data: np.ndarray) -> "DHNSWEngine":
-        cfg = self.cfg
-        data = np.asarray(data, np.float32)
-        self._data = data
-        self._n0 = data.shape[0]
-        self.meta = ME.build_meta(data, cfg.n_rep, seed=cfg.seed,
-                                  meta_levels=cfg.meta_levels)
-        self.store = LA.build_store(
-            data, self.meta,
-            sub_params=HNSWParams(M=max(cfg.sub_M0 // 2, 2), M0=cfg.sub_M0,
-                                  ef_construction=cfg.ef_construction,
-                                  seed=cfg.seed))
-        self._device_put()
-        cap = max(2, int(np.ceil(cfg.cache_frac * self.meta.n_partitions)))
-        self._cap0 = cap
-        if cfg.quant == "none":
-            self.cache = SCH.LRUCacheState(cap)
-            spec = self.store.spec
-            self._cache_g = jnp.full((cap, spec.fetch_blocks, spec.gblk), -1,
-                                     jnp.int32)
-            self._cache_v = jnp.zeros((cap, spec.fetch_blocks, spec.vblk),
-                                      jnp.float32)
-        else:
-            self._setup_quant(cap)
+        self.client.build(data)
         return self
 
-    def _setup_quant(self, cap: int):
-        """Attach the int8 mirror and size the two device tiers from the
-        SAME byte budget a quant="none" engine would spend on ``cap``
-        full-precision slots: a small exact tier (``exact_frac`` of the
-        budget) plus a quantized tier filling the remainder — ~3-4x the
-        partitions per byte, so stage-1 hits replace remote reads."""
-        cfg = self.cfg
-        LA.attach_quant_mirror(self.store, cfg.quant_group)
-        spec = self.store.spec
-        self._qv_dev = jnp.asarray(self.store.qvec_buf)
-        self._qs_dev = jnp.asarray(self.store.qscale_buf)
-        pb = spec.partition_bytes()
-        qpb = spec.quant_partition_bytes(
-            include_graph=cfg.search_mode == "graph")
-        exact_cap = max(1, int(round(cap * cfg.exact_frac)))
-        quant_cap = max(2, int((cap - exact_cap) * pb // qpb))
-        self.tiers = SCH.TieredCacheState(quant_cap, exact_cap)
-        self.cache = self.tiers.exact   # legacy helpers see the exact tier
-        self._cache_g = jnp.full((exact_cap, spec.fetch_blocks, spec.gblk),
-                                 -1, jnp.int32)
-        self._cache_v = jnp.zeros((exact_cap, spec.fetch_blocks, spec.vblk),
-                                  jnp.float32)
-        self._cache_qg = jnp.full((quant_cap, spec.fetch_blocks, spec.gblk),
-                                  -1, jnp.int32)
-        self._cache_qv = jnp.zeros((quant_cap, spec.fetch_blocks, spec.vblk),
-                                   jnp.int8)
-        self._cache_qs = jnp.zeros(
-            (quant_cap, spec.fetch_blocks, spec.n_qgroups), jnp.float32)
-
-    def _device_put(self):
-        # memory pool (remote): the serialized region
-        self._g_dev = jnp.asarray(self.store.graph_buf)
-        self._v_dev = jnp.asarray(self.store.vec_buf)
-        # compute pool (cached, replicated): meta-HNSW + metadata table
-        self._meta_vecs = jnp.asarray(self.meta.graph.vectors)
-        self._meta_adj = jnp.asarray(self.meta.graph.adjacency)
-        self._meta_entry = int(self.meta.graph.entry)
-        self._mt_dev = jnp.asarray(self.store.meta_table)
-        self._mt_dirty = False
-        if self.store.qvec_buf is not None:   # quantized mirror (if attached)
-            self._qv_dev = jnp.asarray(self.store.qvec_buf)
-            self._qs_dev = jnp.asarray(self.store.qscale_buf)
-
-    def _meta_table_dev(self):
-        """Device copy of the metadata table, restaged lazily after
-        inserts touch the host counters (search gathers per-pair rows
-        from this array instead of rebuilding numpy rows every round)."""
-        if self._mt_dirty:
-            self._mt_dev = jnp.asarray(self.store.meta_table)
-            self._mt_dirty = False
-        return self._mt_dev
-
-    def _lookup(self, gids: np.ndarray) -> np.ndarray:
-        out = np.zeros((len(gids), self.store.spec.dim), np.float32)
-        for i, g in enumerate(int(x) for x in gids):
-            out[i] = self._data[g] if g < self._n0 else self._extra[g]
-        return out
-
-    # ------------------------------------------------------------ fetch
-
-    def _gather(self, block_ids: np.ndarray):
-        """One doorbell batch: m span fetches in one launch.
-        block_ids: (m, fetch_blocks)."""
-        ids = jnp.asarray(block_ids.reshape(-1), jnp.int32)
-        if self.cfg.use_gather_kernel:
-            from repro.kernels.gather_blocks import ops as GO
-            g = GO.gather_blocks(self._g_dev, ids)
-            v = GO.gather_blocks(self._v_dev, ids)
-        else:
-            g = jnp.take(self._g_dev, ids, axis=0)
-            v = jnp.take(self._v_dev, ids, axis=0)
-        m = block_ids.shape[0]
-        return (g.reshape(m, -1, self.store.spec.gblk),
-                v.reshape(m, -1, self.store.spec.vblk))
-
-    def _gather_quant(self, block_ids: np.ndarray):
-        """Quantized twin of ``_gather``: one doorbell batch pulling the
-        graph blocks plus the int8 codes + codebook-scale mirror.
-        block_ids: (m, fetch_blocks)."""
-        spec = self.store.spec
-        ids = jnp.asarray(block_ids.reshape(-1), jnp.int32)
-        if self.cfg.use_gather_kernel:
-            from repro.kernels.gather_blocks import ops as GO
-            g = GO.gather_blocks(self._g_dev, ids)
-            qv = GO.gather_blocks(self._qv_dev, ids)
-            qs = GO.gather_blocks(self._qs_dev, ids)
-        else:
-            g = jnp.take(self._g_dev, ids, axis=0)
-            qv = jnp.take(self._qv_dev, ids, axis=0)
-            qs = jnp.take(self._qs_dev, ids, axis=0)
-        m = block_ids.shape[0]
-        return (g.reshape(m, -1, spec.gblk), qv.reshape(m, -1, spec.vblk),
-                qs.reshape(m, -1, spec.n_qgroups))
-
-    # ------------------------------------------------------------ search
+    # ------------------------------------------------------------ requests
 
     def search(self, queries: np.ndarray, k: int = 10,
                ef: Optional[int] = None, b: Optional[int] = None):
         """Batched top-k.  Returns (dists (B,k), gids (B,k), stats)."""
-        cfg = self.cfg
-        ef = ef or cfg.ef
-        b = b or cfg.b
-        if cfg.quant != "none":
-            return self._search_quant(queries, k=k, ef=ef, b=b)
-        spec = self.store.spec
-        queries = np.asarray(queries, np.float32)
-        B = queries.shape[0]
-        q_dev = jnp.asarray(queries)
-        ledger = NetLedger(cfg.fabric)
-        stats = {"meta_s": 0.0, "sub_s": 0.0, "plan_s": 0.0,
-                 "n_rounds": 0, "n_pairs": 0}
-
-        # 1. meta-HNSW routing (cached in the compute pool — no network)
-        t0 = time.perf_counter()
-        pids, _ = S.meta_route(self._meta_vecs, self._meta_adj, q_dev,
-                               self._meta_entry, b=b,
-                               n_levels=self.meta.graph.n_levels)
-        pids = np.asarray(jax.block_until_ready(pids))
-        stats["meta_s"] = time.perf_counter() - t0
-
-        # 2. plan (compute-instance CPU role)
-        t0 = time.perf_counter()
-        if cfg.mode == "naive":
-            raw = SCH.naive_plan(pids)
-            # every pair is its own READ round trip (the 3.547 trips/query)
-            for _ in raw:
-                ledger.read(spec.partition_bytes(), descriptors=1)
-            # fresh cache each batch, capacity = all unique (naive has no
-            # cache discipline; dedup below is compute-only, transfers
-            # were already fully charged)
-            uniq = sorted({p for _, p in raw})
-            cache = SCH.LRUCacheState(max(len(uniq), 1))
-            plan = SCH.plan_batch(pids, cache, doorbell=1)
-        else:
-            plan = SCH.plan_batch(pids, self.cache, doorbell=cfg.doorbell)
-            for rnd in plan.rounds:
-                if cfg.mode == "no_doorbell":
-                    for p in rnd.fetch_pids:
-                        ledger.read(spec.partition_bytes(), descriptors=1)
-                else:
-                    for db in rnd.doorbells:
-                        ledger.read(len(db) * spec.partition_bytes(),
-                                    descriptors=len(db))
-        stats["plan_s"] = time.perf_counter() - t0
-
-        # 3. rounds: fetch -> serve -> merge (all device-side; the running
-        # top-k is carried as (B, k) device arrays and each round folds in
-        # with ONE fused scatter-merge — no host loop over pairs)
-        mt_dev = self._meta_table_dev()
-        run_d = jnp.full((B, k), jnp.inf, jnp.float32)
-        run_g = jnp.full((B, k), -1, jnp.int32)
-        cache_state = cache if cfg.mode == "naive" else self.cache
-        if cfg.mode == "naive":
-            cache_g = jnp.full((cache_state.capacity, spec.fetch_blocks,
-                                spec.gblk), -1, jnp.int32)
-            cache_v = jnp.zeros((cache_state.capacity, spec.fetch_blocks,
-                                 spec.vblk), jnp.float32)
-        else:
-            cache_g, cache_v = self._cache_g, self._cache_v
-
-        for rnd in plan.rounds:
-            stats["n_rounds"] += 1
-            if len(rnd.fetch_pids):
-                ids = np.stack([self.store.span_block_ids(int(p))
-                                for p in rnd.fetch_pids])
-                g_blocks, v_blocks = self._gather(ids)
-                slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
-                cache_g, cache_v = DS.write_slots(spec, cache_g, cache_v,
-                                                  slots, g_blocks, v_blocks)
-            if not len(rnd.serve_pairs):
-                continue
-            t0 = time.perf_counter()
-            n = len(rnd.serve_pairs)
-            npad = pow2_pad(n)
-            qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
-            # n_lanes is fixed at b (a query never has more than b pairs
-            # in one round) so recompiles depend only on (B, npad); no
-            # per-round sync — rounds queue back-to-back on device and
-            # the single block below charges the pipeline to sub_s
-            run_d, run_g = DS.serve_and_merge(
-                spec, cache_g, cache_v, mt_dev, q_dev, run_d, run_g,
-                jnp.asarray(qi), jnp.asarray(ppid), jnp.asarray(pslot),
-                jnp.asarray(prank), jnp.asarray(valid), k=k, ef=ef,
-                mode=cfg.search_mode, n_lanes=b)
-            stats["sub_s"] += time.perf_counter() - t0
-            stats["n_pairs"] += n
-
-        t0 = time.perf_counter()
-        run_d = np.asarray(jax.block_until_ready(run_d))
-        run_g = np.asarray(run_g).astype(np.int64)
-        stats["sub_s"] += time.perf_counter() - t0
-        if cfg.mode != "naive":
-            self._cache_g, self._cache_v = cache_g, cache_v
-        stats["net"] = ledger.as_dict()
-        stats["round_trips_per_query"] = ledger.round_trips / max(B, 1)
-        stats["cache_hits"] = plan.n_cache_hits
-        stats["n_fetches"] = plan.n_fetches
-        return run_d, run_g, stats
-
-    # ------------------------------------------------------ staged search
-
-    def _search_quant(self, queries: np.ndarray, k: int, ef: int, b: int):
-        """Two-stage search over the quantized resident tier.
-
-        Stage 1 plans against the LARGE quantized tier (same §3.3 round
-        machinery, same doorbell batching — misses move int8 codes +
-        codebook blocks, ~1/3-1/4 the bytes of an exact span) and pools
-        per-query top-m candidates with their exact-row addresses.
-        Stage 2 fetches ONLY the candidate rows in full precision (rows
-        in exact-tier-resident partitions are free; the rest are row-
-        granular doorbell'd reads) and re-ranks to the final top-k.
-        ``NetLedger`` counts both the bytes moved and the bytes saved vs
-        fetching the same spans at full precision.
-        """
-        cfg = self.cfg
-        spec = self.store.spec
-        include_graph = cfg.search_mode == "graph"
-        pb = spec.partition_bytes()
-        qpb = spec.quant_partition_bytes(include_graph=include_graph)
-        row_b = spec.row_bytes()
-        m = max(int(cfg.rerank_m) or 2 * k, k)
-        queries = np.asarray(queries, np.float32)
-        B = queries.shape[0]
-        q_dev = jnp.asarray(queries)
-        ledger = NetLedger(cfg.fabric)
-        stats = {"meta_s": 0.0, "sub_s": 0.0, "plan_s": 0.0,
-                 "n_rounds": 0, "n_pairs": 0, "quant": cfg.quant,
-                 "rerank_m": m}
-
-        # 1. meta-HNSW routing (cached in the compute pool — no network)
-        t0 = time.perf_counter()
-        pids, _ = S.meta_route(self._meta_vecs, self._meta_adj, q_dev,
-                               self._meta_entry, b=b,
-                               n_levels=self.meta.graph.n_levels)
-        pids = np.asarray(jax.block_until_ready(pids))
-        stats["meta_s"] = time.perf_counter() - t0
-
-        # 2. stage-1 plan against the quantized tier.  A quantized span
-        # read moves the codes + codebook (and, in graph mode, the
-        # adjacency blocks); scan mode only adds the global-id tails.
-        t0 = time.perf_counter()
-        desc = 2     # data span + appended codebook span per descriptor
-        if cfg.mode == "naive":
-            raw = SCH.naive_plan(pids)
-            for _ in raw:
-                ledger.read(qpb, descriptors=desc)
-                ledger.save(pb - qpb)
-            uniq = sorted({p for _, p in raw})
-            tiers = SCH.TieredCacheState(max(len(uniq), 1), 1)
-            plan = SCH.plan_batch(pids, tiers.quant, doorbell=1)
-        else:
-            tiers = self.tiers
-            plan = SCH.plan_batch(pids, tiers.quant, doorbell=cfg.doorbell)
-            for rnd in plan.rounds:
-                if cfg.mode == "no_doorbell":
-                    for _ in rnd.fetch_pids:
-                        ledger.read(qpb, descriptors=desc)
-                        ledger.save(pb - qpb)
-                else:
-                    for db in rnd.doorbells:
-                        ledger.read(len(db) * qpb,
-                                    descriptors=desc * len(db))
-                        ledger.save(len(db) * (pb - qpb))
-        stats["plan_s"] = time.perf_counter() - t0
-
-        # 3. stage-1 rounds: fetch quantized spans -> pool candidates
-        mt_dev = self._meta_table_dev()
-        pool_d = jnp.full((B, m), jnp.inf, jnp.float32)
-        pool_p = jnp.full((B, m, 3), -1, jnp.int32)
-        if cfg.mode == "naive":
-            qcap = tiers.quant.capacity
-            cache_qg = jnp.full((qcap, spec.fetch_blocks, spec.gblk), -1,
-                                jnp.int32)
-            cache_qv = jnp.zeros((qcap, spec.fetch_blocks, spec.vblk),
-                                 jnp.int8)
-            cache_qs = jnp.zeros((qcap, spec.fetch_blocks, spec.n_qgroups),
-                                 jnp.float32)
-        else:
-            cache_qg, cache_qv, cache_qs = (self._cache_qg, self._cache_qv,
-                                            self._cache_qs)
-
-        for rnd in plan.rounds:
-            stats["n_rounds"] += 1
-            if len(rnd.fetch_pids):
-                ids = np.stack([self.store.span_block_ids(int(p))
-                                for p in rnd.fetch_pids])
-                g_blocks, qv_blocks, qs_blocks = self._gather_quant(ids)
-                slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
-                cache_qg, cache_qv, cache_qs = DS.write_slots_quant(
-                    spec, cache_qg, cache_qv, cache_qs, slots, g_blocks,
-                    qv_blocks, qs_blocks)
-            if not len(rnd.serve_pairs):
-                continue
-            t0 = time.perf_counter()
-            n = len(rnd.serve_pairs)
-            npad = pow2_pad(n)
-            qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
-            pool_d, pool_p = DS.serve_quant_pool(
-                spec, cache_qg, cache_qv, cache_qs, mt_dev, q_dev,
-                pool_d, pool_p, jnp.asarray(qi), jnp.asarray(ppid),
-                jnp.asarray(pslot), jnp.asarray(prank), jnp.asarray(valid),
-                m=m, ef=max(ef, m), mode=cfg.search_mode, n_lanes=b)
-            stats["sub_s"] += time.perf_counter() - t0
-            stats["n_pairs"] += n
-        if cfg.mode != "naive":
-            self._cache_qg, self._cache_qv, self._cache_qs = (
-                cache_qg, cache_qv, cache_qs)
-
-        # 4. stage-2 accounting: pool payload -> row fetch plan
-        t0 = time.perf_counter()
-        pool_p = jax.block_until_ready(pool_p)
-        stats["sub_s"] += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        pool_h = np.asarray(pool_p)
-        live = pool_h[:, :, 1] >= 0
-        flat_rows = pool_h[:, :, 1][live]
-        flat_pids = pool_h[:, :, 2][live]
-        n_admitted = 0
-        if cfg.mode == "naive":
-            # every (query, row) need is its own remote read
-            for _ in range(len(flat_rows)):
-                ledger.read(row_b, descriptors=1)
-            stats["rerank_rows"] = int(len(flat_rows))
-            stats["rerank_hit_rows"] = 0
-        else:
-            # query-aware: each needed row moves at most once per batch
-            uniq_rows, first = np.unique(flat_rows, return_index=True)
-            uniq_pids = flat_pids[first]
-            resident = tiers.exact.resident()
-            hit = np.isin(uniq_pids, np.fromiter(resident, np.int64,
-                                                 len(resident)))
-            groups: dict[int, int] = {}
-            for p in uniq_pids[~hit].tolist():
-                groups[p] = groups.get(p, 0) + 1
-            items = sorted(groups.items())
-            if cfg.mode == "no_doorbell":
-                for p, cnt in items:
-                    ledger.read(cnt * row_b, descriptors=cnt)
-            else:
-                for j in range(0, len(items), cfg.doorbell):
-                    chunk = items[j:j + cfg.doorbell]
-                    ledger.read(sum(c for _, c in chunk) * row_b,
-                                descriptors=sum(c for _, c in chunk))
-            if items:
-                ledger.save(pb * len(items)
-                            - sum(c for _, c in items) * row_b)
-            for p in set(uniq_pids[hit].tolist()):
-                tiers.exact.touch(int(p))
-            # cost-based admission: a partition whose cumulative missed
-            # re-rank rows already outweigh one span fetch is promoted
-            for p, cnt in items:
-                tiers.note_rerank_miss(int(p), cnt)
-                if tiers.should_admit(int(p), row_b, pb):
-                    slot, _ = tiers.admit_exact(int(p))
-                    g_b, v_b = self._gather(
-                        self.store.span_block_ids(int(p))[None])
-                    self._cache_g, self._cache_v = DS.write_slots(
-                        spec, self._cache_g, self._cache_v,
-                        jnp.asarray([slot], jnp.int32), g_b, v_b)
-                    ledger.read(pb, descriptors=1)
-                    n_admitted += 1
-            stats["rerank_rows"] = int((~hit).sum())
-            stats["rerank_hit_rows"] = int(hit.sum())
-        stats["plan_s"] += time.perf_counter() - t0
-        stats["exact_admitted"] = n_admitted
-
-        # 5. stage-2 re-rank: exact distances over candidate rows only
-        t0 = time.perf_counter()
-        run_d, run_g = DS.rerank_exact(self._v_dev, q_dev,
-                                       pool_p[:, :, 1], pool_p[:, :, 0],
-                                       dim=spec.dim, k=k)
-        run_d = np.asarray(jax.block_until_ready(run_d))
-        run_g = np.asarray(run_g).astype(np.int64)
-        stats["sub_s"] += time.perf_counter() - t0
-
-        stats["net"] = ledger.as_dict()
-        stats["round_trips_per_query"] = ledger.round_trips / max(B, 1)
-        stats["cache_hits"] = plan.n_cache_hits
-        stats["n_fetches"] = plan.n_fetches
-        return run_d, run_g, stats
-
-    # ------------------------------------------------------------ insert
+        return self.client.search(queries, k=k, ef=ef, b=b)
 
     def insert(self, vecs: np.ndarray) -> np.ndarray:
-        """Dynamic insertion (paper §3.2): route via the cached meta-HNSW,
-        append vector+id into the target group's shared overflow region
-        (one remote WRITE each), repack the group when it fills."""
-        cfg = self.cfg
-        spec = self.store.spec
-        vecs = np.asarray(vecs, np.float32).reshape(-1, spec.dim)
-        pids, _ = S.meta_route(self._meta_vecs, self._meta_adj,
-                               jnp.asarray(vecs), self._meta_entry, b=1,
-                               n_levels=self.meta.graph.n_levels)
-        pids = np.asarray(pids)[:, 0]
-        gids = np.arange(self._n0 + len(self._extra),
-                         self._n0 + len(self._extra) + len(vecs))
-        ledger = NetLedger(cfg.fabric)
-        for vec, gid, pid in zip(vecs, gids, pids.tolist()):
-            self._extra[int(gid)] = vec
-            self._extra_pid[int(gid)] = int(pid)
-            slot = LA.insert_vector(self.store, vec, int(gid), int(pid))
-            if slot < 0:
-                group = int(self.store.meta_table[pid, LA.MT_GROUP])
-                ok = LA.repack_group(self.store, group, self._lookup)
-                if not ok:
-                    self._full_rebuild()
-                else:
-                    LA.refresh_quant_group(self.store, group)
-                    self._device_put()       # re-register the region
-                    self._invalidate_group(group)
-                slot = LA.insert_vector(self.store, vec, int(gid), int(pid))
-                assert slot >= 0, "overflow full right after repack"
-                continue
-            # device twin of the host write: one-sided WRITE of D floats
-            group = int(self.store.meta_table[pid, LA.MT_GROUP])
-            co = LA.overflow_write_coords(spec, group, slot)
-            self._g_dev, self._v_dev = DS.overflow_append(
-                spec, self._g_dev, self._v_dev, jnp.asarray(vec),
-                jnp.int32(gid), co["vec_block"], co["vec_off"],
-                co["gid_block"], co["gid_off"])
-            wire = spec.dim * 4 + 8
-            if self.tiers is not None:
-                # quantized-mirror twin: re-quantize the touched block on
-                # the host, scatter codes + codebook scales on device,
-                # and pay the extra one-sided WRITE on the wire
-                LA.refresh_quant_blocks(self.store, [co["vec_block"]])
-                self._qv_dev, self._qs_dev = DS.overflow_append_quant(
-                    spec, self._qv_dev, self._qs_dev, jnp.asarray(vec),
-                    co["vec_block"], co["vec_off"])
-                wire += spec.dim + (spec.dim // spec.quant_group) * 4
-            ledger.write(wire, descriptors=1)
-            self._invalidate_pid(int(pid))
-        self._mt_dirty = True       # host overflow counters moved
-        self._last_insert_net = ledger.as_dict()
-        return gids
+        """Dynamic insertion (paper §3.2) through the pool WRITE verb."""
+        return self.client.insert(vecs)
+
+    # ------------------------------------------------------------ state
+    # (compat views into the split — tests, benchmarks and notebooks
+    # reach for these; they are the client's/pool's live state)
+
+    @property
+    def pool(self):
+        return self.client.pool
+
+    @property
+    def meta(self):
+        return self.client.meta
+
+    @property
+    def store(self):
+        return None if self.client.pool is None else self.client.pool.store
+
+    @property
+    def cache(self):
+        return self.client.cache
+
+    @property
+    def tiers(self):
+        return self.client.tiers
+
+    @property
+    def _last_insert_net(self):
+        return self.client._last_insert_net
 
     def _invalidate_pid(self, pid: int):
-        """Drop stale cached copies (both partners see the ov region)."""
-        group = int(self.store.meta_table[pid, LA.MT_GROUP])
-        self._invalidate_group(group)
-
-    def _invalidate_group(self, group: int):
-        for side in (0, 1):
-            p = group * 2 + side
-            if self.tiers is not None:
-                self.tiers.invalidate(p)    # drops BOTH tiers
-            self.cache.drop(p)
-
-    def _full_rebuild(self):
-        """np_max exhausted: rebuild the whole region with a larger pad
-        (rare; the paper's offline re-pack path)."""
-        all_ids = np.arange(self._n0 + len(self._extra))
-        data = np.concatenate([self._data, np.stack(
-            [self._extra[g] for g in sorted(self._extra)])]) \
-            if self._extra else self._data
-        assigns = np.concatenate([
-            self.meta.assignments,
-            np.array([self._extra_pid[g] for g in sorted(self._extra)],
-                     np.int32)])
-        import dataclasses as DC
-        self.meta = DC.replace(self.meta, assignments=assigns)
-        self._data = data
-        self._n0 = data.shape[0]
-        self._extra.clear()
-        self._extra_pid.clear()
-        self.store = LA.build_store(
-            data, self.meta, ov_cap=self.store.spec.ov_cap,
-            slot_vecs=self.store.spec.slot_vecs,
-            sub_params=HNSWParams(M=max(self.cfg.sub_M0 // 2, 2),
-                                  M0=self.cfg.sub_M0,
-                                  ef_construction=self.cfg.ef_construction))
-        self._device_put()
-        if self.tiers is not None:
-            self._setup_quant(self._cap0)
-        else:
-            cap = self.cache.capacity
-            self.cache = SCH.LRUCacheState(cap)
-            spec = self.store.spec
-            self._cache_g = jnp.full((cap, spec.fetch_blocks, spec.gblk), -1,
-                                     jnp.int32)
-            self._cache_v = jnp.zeros((cap, spec.fetch_blocks, spec.vblk),
-                                      jnp.float32)
-        del all_ids
+        self.client._invalidate_pid(pid)

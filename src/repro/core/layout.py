@@ -356,6 +356,47 @@ def refresh_quant_group(store: Store, group: int) -> None:
     refresh_quant_blocks(store, np.arange(start, start + spec.group_blocks))
 
 
+def flat_quant_rows(store: Store):
+    """Flat-database view of every LIVE vector row in the region.
+
+    Returns ``(rows, gids, pids)`` — region row addresses (indices into
+    ``vec_buf.reshape(-1, dim)`` and the lockstep quantized mirror), the
+    matching global ids, and the owning partition of each row.  Base rows
+    come first per partition, then that partition's live overflow slots
+    (same order as ``overflow_gids``).  Every live row appears exactly
+    once: a group's shared overflow region is split between the two
+    partners by side, so the flat view never duplicates an insert.
+
+    This is the compute-side index for the dense-resident stage-1 path:
+    when the quantized tier can hold every partition, stage 1 is one flat
+    ``quant_topk`` scan over these rows instead of per-pair decodes.
+    """
+    spec = store.spec
+    rows, gids, pids = [], [], []
+    for pid in range(spec.n_partitions):
+        mrow = store.meta_table[pid]
+        side, group = int(mrow[MT_SIDE]), int(mrow[MT_GROUP])
+        blk_start = int(mrow[MT_BLK_START])
+        n = int(mrow[MT_N_BASE])
+        data_row0 = (blk_start + side * spec.ov_blocks) * spec.slot_vecs
+        rows.append(data_row0 + np.arange(n, dtype=np.int64))
+        gids.append(partition_gids(store, pid).astype(np.int64))
+        ov_row0 = (blk_start + (1 - side) * spec.data_blocks) * spec.slot_vecs
+        og = overflow_gids(store, pid).astype(np.int64)
+        if side == 0:
+            orows = ov_row0 + np.arange(len(og), dtype=np.int64)
+        else:
+            # side B fills back-to-front; overflow_gids reverses, so the
+            # row addresses walk down from the last slot in lockstep
+            orows = ov_row0 + (spec.ov_cap - 1 - np.arange(len(og),
+                                                          dtype=np.int64))
+        rows.append(orows)
+        gids.append(og)
+        pids.append(np.full(n + len(og), pid, np.int64))
+    return (np.concatenate(rows), np.concatenate(gids),
+            np.concatenate(pids))
+
+
 def repack_group(store: Store, group: int, data_lookup,
                  sub_params: Optional[HNSWParams] = None) -> bool:
     """Fold both partitions' overflow inserts into rebuilt sub-HNSWs and

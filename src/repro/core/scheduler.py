@@ -26,6 +26,26 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+def pow2_pad(n: int, lo: int = 8) -> int:
+    """Next power of two >= n (floor ``lo``) — the shape-bucketing rule
+    shared by the engine's round padding and the serve tier's fused-batch
+    padding, so jitted stages see a bounded set of shapes."""
+    m = lo
+    while m < n:
+        m *= 2
+    return m
+
+
+def doorbell_chunks(items, doorbell: int):
+    """Split ``items`` into doorbell batches of <= ``doorbell`` entries —
+    the one grouping rule shared by the planner (span fetches) and the
+    memory-pool transports (descriptor submission), so verb accounting
+    and the round schedule can never disagree on what one round trip
+    carries."""
+    doorbell = max(int(doorbell), 1)
+    return [items[j:j + doorbell] for j in range(0, len(items), doorbell)]
+
+
 @dataclass
 class Round:
     """One fetch-and-serve round.  Slot ids are assigned at *planning*
@@ -251,7 +271,7 @@ def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
         pslots = np.array([s for p, s in zip(take, slots)
                            for _ in demand[p]], np.int64)
         fetch = np.array(take, np.int64)
-        doorbells = [fetch[j:j + doorbell] for j in range(0, len(fetch), doorbell)]
+        doorbells = doorbell_chunks(fetch, doorbell)
         rounds.append(Round(fetch, np.array(slots, np.int64), doorbells,
                             np.array(evicted, np.int64), pairs, pslots,
                             _pair_ranks(pairs)))

@@ -1,0 +1,29 @@
+"""Disaggregated-memory boundary: MemoryPool transports + ComputeClient.
+
+The paper's architecture as an API (see ``protocol.py``): compute nodes
+(``ComputeClient``) plan greedy search and talk to the serialized region
+only through ``MemoryPool`` verbs.  Transports:
+
+* ``LocalPool``         — in-process device arrays (bit-identical to the
+                          pre-pool monolithic engine);
+* ``SimulatedRDMAPool`` — + per-verb latency/bandwidth model.
+"""
+from repro.pool.compute import ComputeClient
+from repro.pool.local import LocalPool
+from repro.pool.protocol import MemoryPool, span_wire_bytes
+from repro.pool.sim_rdma import SimulatedRDMAPool
+
+__all__ = ["MemoryPool", "LocalPool", "SimulatedRDMAPool", "ComputeClient",
+           "make_pool_factory", "span_wire_bytes"]
+
+
+def make_pool_factory(cfg):
+    """Store -> MemoryPool, per ``EngineConfig.pool``."""
+    if cfg.pool == "local":
+        return lambda store: LocalPool(
+            store, use_gather_kernel=cfg.use_gather_kernel)
+    if cfg.pool == "sim_rdma":
+        return lambda store: SimulatedRDMAPool(
+            store, fabric=cfg.fabric,
+            use_gather_kernel=cfg.use_gather_kernel)
+    raise ValueError(f"unknown pool transport {cfg.pool!r}")

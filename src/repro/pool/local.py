@@ -1,0 +1,191 @@
+"""In-process memory pool: the serialized region as device arrays.
+
+``LocalPool`` is the transport the monolithic engine always implicitly
+was — span reads are device gathers from the registered region, writes
+are host-staging plus a device scatter twin — now behind the
+``MemoryPool`` verbs so the compute side can't tell it apart from a real
+remote.  Bit-identical to the pre-pool engine by construction: the verb
+bodies are the exact gather/scatter sequences the engine used inline.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device_store as DS
+from repro.core import layout as LA
+from repro.core.cost_model import NetLedger
+from repro.core.layout import Store
+from repro.core.scheduler import doorbell_chunks
+from repro.pool.protocol import MemoryPool, _fresh_totals, span_wire_bytes
+
+
+class LocalPool(MemoryPool):
+
+    kind = "local"
+
+    def __init__(self, store: Store, *, use_gather_kernel: bool = False):
+        self.store = store
+        self.use_gather_kernel = use_gather_kernel
+        self.verbs: Counter = Counter()
+        self.totals = _fresh_totals()
+        self._stage_all()
+
+    # ------------------------------------------------------------ staging
+
+    def _stage_all(self) -> None:
+        """(Re-)register the region: host buffers -> device arrays."""
+        self._g_dev = jnp.asarray(self.store.graph_buf)
+        self._v_dev = jnp.asarray(self.store.vec_buf)
+        self._mt_dev = jnp.asarray(self.store.meta_table)
+        self._mt_dirty = False
+        if self.store.qvec_buf is not None:
+            self._qv_dev = jnp.asarray(self.store.qvec_buf)
+            self._qs_dev = jnp.asarray(self.store.qscale_buf)
+        else:
+            self._qv_dev = self._qs_dev = None
+
+    def adopt(self, store: Store) -> None:
+        self.store = store
+        self._stage_all()
+
+    def attach_quant(self, group: int) -> None:
+        LA.attach_quant_mirror(self.store, group)
+        self._qv_dev = jnp.asarray(self.store.qvec_buf)
+        self._qs_dev = jnp.asarray(self.store.qscale_buf)
+
+    # ------------------------------------------------------------ charging
+
+    def _transport(self, verb: str, n_bytes: float, descriptors: int,
+                   trips: int) -> None:
+        """Transport hook — LocalPool moves bytes over nothing."""
+
+    def _charge(self, verb: str, ledger: Optional[NetLedger],
+                n_bytes: float, descriptors: int) -> None:
+        if ledger is None:
+            return
+        ledger.read(n_bytes, descriptors=descriptors)
+        trips = math.ceil(descriptors / ledger.fabric.max_doorbell)
+        self.totals["round_trips"] += trips
+        self.totals["descriptors"] += descriptors
+        self.totals["bytes"] += n_bytes
+        self._transport(verb, n_bytes, descriptors, trips)
+
+    # ------------------------------------------------------------ reads
+
+    def read_meta(self):
+        self.verbs["read_meta"] += 1
+        if self._mt_dirty:
+            self._mt_dev = jnp.asarray(self.store.meta_table)
+            self._mt_dirty = False
+        return self._mt_dev
+
+    def _gather_blocks(self, buf, ids):
+        if self.use_gather_kernel:
+            from repro.kernels.gather_blocks import ops as GO
+            return GO.gather_blocks(buf, ids)
+        return jnp.take(buf, ids, axis=0)
+
+    def read_spans(self, pids, *, ledger: Optional[NetLedger],
+                   doorbell: int = 1, quant: bool = False,
+                   quant_graph: bool = True):
+        spec = self.spec
+        pids = np.asarray(pids).reshape(-1)
+        self.verbs["read_spans_quant" if quant else "read_spans"] += len(pids)
+        per_bytes, per_desc = span_wire_bytes(spec, quant=quant,
+                                              quant_graph=quant_graph)
+        if ledger is not None:
+            for db in doorbell_chunks(pids, doorbell):
+                self._charge("read_spans_quant" if quant else "read_spans",
+                             ledger, len(db) * per_bytes,
+                             per_desc * len(db))
+        block_ids = np.stack([self.store.span_block_ids(int(p))
+                              for p in pids])
+        ids = jnp.asarray(block_ids.reshape(-1), jnp.int32)
+        m = block_ids.shape[0]
+        g = self._gather_blocks(self._g_dev, ids).reshape(m, -1, spec.gblk)
+        if not quant:
+            v = self._gather_blocks(self._v_dev, ids).reshape(m, -1,
+                                                              spec.vblk)
+            return g, v
+        qv = self._gather_blocks(self._qv_dev, ids).reshape(m, -1, spec.vblk)
+        qs = self._gather_blocks(self._qs_dev, ids).reshape(
+            m, -1, spec.n_qgroups)
+        return g, qv, qs
+
+    def read_rows(self, rows):
+        self.verbs["read_rows"] += 1
+        return DS.gather_rows(self._v_dev, rows, dim=self.spec.dim)
+
+    def read_quant_rows(self, rows):
+        self.verbs["read_quant_rows"] += 1
+        return DS.gather_quant_rows(self._qv_dev, self._qs_dev, rows,
+                                    dim=self.spec.dim,
+                                    group=self.spec.quant_group)
+
+    # ------------------------------------------------- accounting posts
+
+    def post_span_reads(self, n: int, *, ledger: NetLedger,
+                        doorbell: int = 1, quant: bool = False,
+                        quant_graph: bool = True) -> None:
+        self.verbs["post_span_reads"] += n
+        per_bytes, per_desc = span_wire_bytes(self.spec, quant=quant,
+                                              quant_graph=quant_graph)
+        for db in doorbell_chunks(np.arange(n), doorbell):
+            self._charge("post_span_reads", ledger, len(db) * per_bytes,
+                         per_desc * len(db))
+
+    def post_row_reads(self, groups, *, ledger: NetLedger,
+                       doorbell: int = 1) -> None:
+        row_b = self.spec.row_bytes()
+        self.verbs["post_row_reads"] += len(groups)
+        for chunk in doorbell_chunks(list(groups), doorbell):
+            cnt = sum(c for _, c in chunk)
+            self._charge("post_row_reads", ledger, cnt * row_b, cnt)
+
+    # ------------------------------------------------------------ writes
+
+    def append(self, vec, gid: int, pid: int, *,
+               ledger: Optional[NetLedger]) -> int:
+        spec = self.spec
+        vec = np.asarray(vec, np.float32)
+        slot = LA.insert_vector(self.store, vec, int(gid), int(pid))
+        if slot < 0:
+            return slot
+        group = int(self.store.meta_table[pid, LA.MT_GROUP])
+        co = LA.overflow_write_coords(spec, group, slot)
+        self._g_dev, self._v_dev = DS.overflow_append(
+            spec, self._g_dev, self._v_dev, jnp.asarray(vec),
+            jnp.int32(gid), co["vec_block"], co["vec_off"],
+            co["gid_block"], co["gid_off"])
+        wire = spec.dim * 4 + 8
+        if self.store.qvec_buf is not None:
+            # quantized-mirror twin: re-quantize the touched block on the
+            # host, scatter codes + codebook scales on device, and pay
+            # the extra one-sided WRITE on the wire
+            LA.refresh_quant_blocks(self.store, [co["vec_block"]])
+            self._qv_dev, self._qs_dev = DS.overflow_append_quant(
+                spec, self._qv_dev, self._qs_dev, jnp.asarray(vec),
+                co["vec_block"], co["vec_off"])
+            wire += spec.dim + (spec.dim // spec.quant_group) * 4
+        self.verbs["append"] += 1
+        if ledger is not None:
+            ledger.write(wire, descriptors=1)
+            self.totals["round_trips"] += 1
+            self.totals["descriptors"] += 1
+            self.totals["bytes"] += wire
+            self._transport("append", wire, 1, 1)
+        self._mt_dirty = True      # overflow counters moved
+        return slot
+
+    def repack(self, group: int, data_lookup) -> bool:
+        self.verbs["repack"] += 1
+        ok = LA.repack_group(self.store, group, data_lookup)
+        if ok:
+            LA.refresh_quant_group(self.store, group)
+            self._stage_all()      # re-register the rewritten region
+        return ok

@@ -1,0 +1,150 @@
+"""The compute/memory boundary — the paper's disaggregation, as an API.
+
+d-HNSW's architecture is a *compute pool* that plans greedy search and a
+*memory pool* reached over one-sided RDMA verbs.  Everything a compute
+node may do to the memory pool is one of the verbs below; everything
+else (representative meta-HNSW, resident-partition caches, round
+scheduling, Pallas serve kernels) lives on the compute side
+(``pool/compute.py ComputeClient``) and talks *only* through this
+protocol.  That narrow waist is what makes transports swappable:
+
+* ``LocalPool``          — in-process device arrays; bit-identical to
+                           the pre-pool monolithic engine.
+* ``SimulatedRDMAPool``  — same data path plus a per-verb latency /
+                           bandwidth model (a simulated NIC clock), so
+                           benchmark numbers reflect round trips and
+                           wire time, not just event counts.
+
+Verb accounting: data verbs take an optional ``NetLedger`` and charge it
+in doorbell batches exactly the way the schemes demand — ``doorbell=1``
+is the no-doorbell scheme (every span/row group its own round trip),
+``doorbell=n`` groups n descriptors per trip, and the ``post_*`` verbs
+charge without moving data (the naive scheme reads the same span once
+per demanding query; simulation dedups the movement but must not dedup
+the charge).  Passing ``ledger=None`` moves data without charging (used
+only when the same verb was already posted).  Pools also keep their own
+running totals (``totals``) and per-verb invocation counts (``verbs``)
+— the conformance suite asserts these agree with the ledgers.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+from repro.core.cost_model import NetLedger
+from repro.core.layout import LayoutSpec, Store
+
+
+class MemoryPool(abc.ABC):
+    """Abstract memory-pool transport.
+
+    Concrete pools own the serialized region (``Store`` host staging +
+    whatever device/remote representation the transport uses) and
+    implement the verbs.  ``spec`` is always ``store.spec`` — a frozen
+    ``LayoutSpec`` safe to close jitted functions over.
+    """
+
+    kind: str = "abstract"
+    store: Store
+
+    # ------------------------------------------------------------ meta
+
+    @property
+    def spec(self) -> LayoutSpec:
+        return self.store.spec
+
+    @abc.abstractmethod
+    def read_meta(self):
+        """Device copy of the global metadata table (per-partition
+        offsets/counters).  Compute instances cache it — the paper's
+        'global metadata block' — so this verb is never charged; it is
+        restaged lazily after writes move the host counters."""
+
+    @abc.abstractmethod
+    def adopt(self, store: Store) -> None:
+        """Re-register a rebuilt region (the offline full re-pack)."""
+
+    @abc.abstractmethod
+    def attach_quant(self, group: int) -> None:
+        """Attach (or rebuild) the int8 + codebook mirror of the region
+        and stage it for quantized span reads."""
+
+    # ------------------------------------------------------------ reads
+
+    @abc.abstractmethod
+    def read_spans(self, pids, *, ledger: Optional[NetLedger],
+                   doorbell: int = 1, quant: bool = False,
+                   quant_graph: bool = True):
+        """Doorbell-batched span READ: one descriptor per partition span
+        (two for quantized spans — data + appended codebook).  Returns
+        device blocks ``(g, v)`` with shape (m, fetch_blocks, ·), or
+        ``(g, qv, qs)`` when ``quant``.  Charges ``ledger`` one round
+        trip per ``doorbell`` spans."""
+
+    @abc.abstractmethod
+    def read_rows(self, rows):
+        """Row-granular READ: gather exact f32 vector rows by region row
+        address (-1 lanes are placeholders, masked by the caller).
+        Accounting is posted separately via ``post_row_reads`` because
+        residency (which rows are free) is compute-side policy."""
+
+    @abc.abstractmethod
+    def read_quant_rows(self, rows):
+        """Row-granular READ from the quantized mirror: (codes, scales)
+        for the dense-resident flat-scan path."""
+
+    # ------------------------------------------------- accounting posts
+
+    @abc.abstractmethod
+    def post_span_reads(self, n: int, *, ledger: NetLedger,
+                        doorbell: int = 1, quant: bool = False,
+                        quant_graph: bool = True) -> None:
+        """Charge ``n`` span READs without moving data (naive scheme:
+        every (query, partition) demand is its own read; the flat
+        resident sweep: spans already moved by a data verb)."""
+
+    @abc.abstractmethod
+    def post_row_reads(self, groups, *, ledger: NetLedger,
+                       doorbell: int = 1) -> None:
+        """Charge row-granular READs.  ``groups`` is [(pid, n_rows)];
+        each group is one descriptor batch member, grouped ``doorbell``
+        groups per round trip."""
+
+    # ------------------------------------------------------------ writes
+
+    @abc.abstractmethod
+    def append(self, vec, gid: int, pid: int, *,
+               ledger: Optional[NetLedger]) -> int:
+        """One-sided WRITE: stage one vector into ``pid``'s shared
+        overflow region — host layout, device twin, and (when attached)
+        the quantized-mirror twin, atomically.  Returns the slot index
+        or -1 when the group's region is full (caller must repack).
+        Charges the wire bytes of the write (vector + id, plus codes +
+        codebook scales when the mirror is attached)."""
+
+    @abc.abstractmethod
+    def repack(self, group: int, data_lookup) -> bool:
+        """Offline re-pack of one group (paper §3.2): fold both
+        partners' overflow into rebuilt sub-HNSWs, refresh the quantized
+        mirror, re-register the touched region.  Returns False when a
+        merged partition no longer fits (caller must full-rebuild)."""
+
+    # ------------------------------------------------------------ stats
+
+    def snapshot(self) -> dict:
+        """Verb counts + charged totals (+ transport-specific extras)."""
+        return {"kind": self.kind, "verbs": dict(self.verbs),
+                "totals": dict(self.totals)}
+
+
+def _fresh_totals() -> dict:
+    return {"round_trips": 0.0, "descriptors": 0.0, "bytes": 0.0}
+
+
+def span_wire_bytes(spec: LayoutSpec, *, quant: bool,
+                    quant_graph: bool = True) -> tuple[int, int]:
+    """(bytes, descriptors) of ONE span read under the given precision —
+    the single pricing rule every pool and every scheme shares."""
+    if quant:
+        return spec.quant_partition_bytes(include_graph=quant_graph), 2
+    return spec.partition_bytes(), 1

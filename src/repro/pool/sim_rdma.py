@@ -1,0 +1,59 @@
+"""Simulated-RDMA memory pool: LocalPool's data path + a modeled NIC.
+
+The container has no fabric, so — exactly like the paper's latency
+*breakdown* methodology — the transport is simulated: every charged verb
+advances a per-verb simulated clock by
+
+    trips * rtt  +  descriptors * per_op  +  bytes / bandwidth
+
+using a ``Fabric`` calibration (defaults to the paper's ConnectX-6
+testbed, ``RDMA_100G``).  Results are bit-identical to ``LocalPool`` —
+the data movement is the same device gathers — but search stats carry a
+nonzero modeled network latency with a per-verb breakdown, so benchmark
+numbers reflect round trips and wire time rather than event counts
+alone.  ``benchmarks/pool.py`` sweeps the fabric parameters.
+
+Optionally (``sleep=True``) the pool also *injects* the modeled latency
+as real wall time — useful to make the serving tier feel remote reads in
+end-to-end latency percentiles; off by default so tests stay fast.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core.cost_model import RDMA_100G, Fabric
+from repro.core.layout import Store
+from repro.pool.local import LocalPool
+
+
+class SimulatedRDMAPool(LocalPool):
+
+    kind = "sim_rdma"
+
+    def __init__(self, store: Store, *, fabric: Optional[Fabric] = None,
+                 use_gather_kernel: bool = False, sleep: bool = False):
+        self.fabric = fabric or RDMA_100G
+        self.sleep = sleep
+        self.sim_s: dict[str, float] = {}      # per-verb modeled seconds
+        super().__init__(store, use_gather_kernel=use_gather_kernel)
+
+    def _transport(self, verb: str, n_bytes: float, descriptors: int,
+                   trips: int) -> None:
+        f = self.fabric
+        dt = (trips * f.rtt_s + descriptors * f.per_op_s
+              + n_bytes / f.bw_Bps)
+        self.sim_s[verb] = self.sim_s.get(verb, 0.0) + dt
+        if self.sleep:
+            time.sleep(dt)
+
+    @property
+    def sim_total_s(self) -> float:
+        return sum(self.sim_s.values())
+
+    def snapshot(self) -> dict:
+        out = super().snapshot()
+        out["fabric"] = self.fabric.name
+        out["sim_s"] = dict(self.sim_s)
+        out["sim_total_s"] = self.sim_total_s
+        return out

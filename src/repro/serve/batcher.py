@@ -67,6 +67,12 @@ class BatchPolicy:
     adaptive_wait: bool = False   # scale the window from arrival EWMA
     min_wait_s: float = 1e-4      # adaptive floor
     ewma_alpha: float = 0.2       # inter-arrival smoothing
+    # per-tenant admission: every search request carries a ``tenant``
+    # key (default "-"); each tenant gets its OWN token bucket on top of
+    # the global one, so one tenant flooding the queue cannot starve the
+    # rest of their admission budget (0 disables per-tenant buckets)
+    tenant_rate: float = 0.0    # admission tokens/s per tenant
+    tenant_burst: int = 32      # per-tenant bucket depth
 
 
 class ArrivalRateEWMA:
@@ -144,6 +150,7 @@ class _Request:
     vecs: np.ndarray            # (m, D)
     k: int
     t_submit: float
+    tenant: str = "-"
     future: Future = field(default_factory=Future)
 
 
@@ -166,6 +173,24 @@ class ServeMetrics:
         # in a window shares one engine call's network events)
         self.net = {"bytes_fetched": 0.0, "bytes_saved": 0.0,
                     "round_trips": 0.0, "descriptors": 0.0}
+        # per-tenant admission accounting: admitted/rejected counters
+        # plus the live queue depth (enqueued minus dispatched)
+        self.tenants: dict[str, dict] = {}
+
+    def _tenant(self, tenant: str) -> dict:
+        """Caller must hold the lock."""
+        return self.tenants.setdefault(
+            tenant, {"admitted": 0, "rejected": 0, "queued": 0})
+
+    def note_enqueued(self, tenant: str):
+        with self._lock:
+            t = self._tenant(tenant)
+            t["admitted"] += 1
+            t["queued"] += 1
+
+    def note_dequeued(self, tenant: str):
+        with self._lock:
+            self._tenant(tenant)["queued"] -= 1
 
     def record_call(self, batch: int, n_queries: int = 0,
                     net: Optional[dict] = None):
@@ -179,9 +204,10 @@ class ServeMetrics:
                 self.net["round_trips"] += net.get("round_trips", 0.0)
                 self.net["descriptors"] += net.get("descriptors", 0.0)
 
-    def record_rejected(self):
+    def record_rejected(self, tenant: str = "-"):
         with self._lock:
             self.n_rejected += 1
+            self._tenant(tenant)["rejected"] += 1
 
     def record_request(self, total_s: float, breakdown: dict):
         with self._lock:
@@ -202,6 +228,7 @@ class ServeMetrics:
                 "mean_fused_batch": float(sizes.mean()) if len(sizes) else 0.0,
                 "breakdown_s": dict(self.breakdown),
                 "net": dict(self.net),
+                "tenants": {t: dict(v) for t, v in self.tenants.items()},
             }
             for p in (50, 95, 99):
                 out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
@@ -225,6 +252,8 @@ class MicroBatcher:
         self.metrics = ServeMetrics()
         self.arrivals = ArrivalRateEWMA(self.policy.ewma_alpha)
         self._bucket = TokenBucket(self.policy.rate, self.policy.burst)
+        self._tenant_buckets: dict[str, TokenBucket] = {}
+        self._tenant_lock = threading.Lock()
         self._queue: deque[_Request] = deque()
         self._cv = threading.Condition()
         self._stop = False
@@ -277,25 +306,48 @@ class MicroBatcher:
 
     # ------------------------------------------------------------ submit
 
-    def submit_search(self, vecs: np.ndarray, k: int = 10) -> Future:
+    def _tenant_bucket(self, tenant: str) -> Optional[TokenBucket]:
+        if self.policy.tenant_rate <= 0:
+            return None
+        with self._tenant_lock:
+            bucket = self._tenant_buckets.get(tenant)
+            if bucket is None:
+                bucket = TokenBucket(self.policy.tenant_rate,
+                                     self.policy.tenant_burst)
+                self._tenant_buckets[tenant] = bucket
+            return bucket
+
+    def submit_search(self, vecs: np.ndarray, k: int = 10, *,
+                      tenant: str = "-") -> Future:
         vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        # tenant bucket FIRST: a tenant-rejected request must not have
+        # consumed shared global tokens, or a flooding tenant would
+        # still drain everyone else's admission budget
+        tb = self._tenant_bucket(tenant)
+        if tb is not None and not tb.acquire(
+                vecs.shape[0], block=self.policy.admission_block):
+            self.metrics.record_rejected(tenant)
+            raise AdmissionError(
+                f"tenant {tenant!r} over its admission rate")
         if not self._bucket.acquire(vecs.shape[0],
                                     block=self.policy.admission_block):
-            self.metrics.record_rejected()
+            self.metrics.record_rejected(tenant)
             raise AdmissionError("token bucket empty (offered load over cap)")
         return self._enqueue(_Request("search", vecs, int(k),
-                                      time.perf_counter()))
+                                      time.perf_counter(), tenant))
 
-    def submit_insert(self, vecs: np.ndarray) -> Future:
+    def submit_insert(self, vecs: np.ndarray, *,
+                      tenant: str = "-") -> Future:
         vecs = np.atleast_2d(np.asarray(vecs, np.float32))
-        return self._enqueue(_Request("insert", vecs, 0, time.perf_counter()))
+        return self._enqueue(_Request("insert", vecs, 0,
+                                      time.perf_counter(), tenant))
 
-    def search(self, vecs: np.ndarray, k: int = 10):
+    def search(self, vecs: np.ndarray, k: int = 10, *, tenant: str = "-"):
         """Blocking convenience: returns (dists, gids, stats)."""
-        return self.submit_search(vecs, k).result()
+        return self.submit_search(vecs, k, tenant=tenant).result()
 
-    def insert(self, vecs: np.ndarray) -> np.ndarray:
-        return self.submit_insert(vecs).result()
+    def insert(self, vecs: np.ndarray, *, tenant: str = "-") -> np.ndarray:
+        return self.submit_insert(vecs, tenant=tenant).result()
 
     def _enqueue(self, req: _Request) -> Future:
         self.arrivals.observe(req.t_submit)
@@ -303,6 +355,7 @@ class MicroBatcher:
             if self._stop and self._thread is not None:
                 raise RuntimeError("batcher is stopped")
             self._queue.append(req)
+            self.metrics.note_enqueued(req.tenant)
             self._cv.notify_all()
         return req.future
 
@@ -355,6 +408,8 @@ class MicroBatcher:
             while j < len(window) and window[j].kind == window[i].kind:
                 j += 1
             group = window[i:j]
+            for r in group:
+                self.metrics.note_dequeued(r.tenant)
             try:
                 if group[0].kind == "search":
                     self._dispatch_search(group)

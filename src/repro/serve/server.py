@@ -45,25 +45,29 @@ class SearchServer:
 
     # ------------------------------------------------------------ requests
 
-    def search(self, vecs: np.ndarray, k: int = 10):
+    def search(self, vecs: np.ndarray, k: int = 10, *, tenant: str = "-"):
         """Blocking: (dists (m, k), gids (m, k), per-request stats)."""
-        return self.batcher.search(vecs, k)
+        return self.batcher.search(vecs, k, tenant=tenant)
 
-    def search_async(self, vecs: np.ndarray, k: int = 10) -> Future:
-        return self.batcher.submit_search(vecs, k)
+    def search_async(self, vecs: np.ndarray, k: int = 10, *,
+                     tenant: str = "-") -> Future:
+        return self.batcher.submit_search(vecs, k, tenant=tenant)
 
-    def insert(self, vecs: np.ndarray) -> np.ndarray:
-        return self.batcher.insert(vecs)
+    def insert(self, vecs: np.ndarray, *, tenant: str = "-") -> np.ndarray:
+        return self.batcher.insert(vecs, tenant=tenant)
 
-    def insert_async(self, vecs: np.ndarray) -> Future:
-        return self.batcher.submit_insert(vecs)
+    def insert_async(self, vecs: np.ndarray, *,
+                     tenant: str = "-") -> Future:
+        return self.batcher.submit_insert(vecs, tenant=tenant)
 
     # ------------------------------------------------------------ metrics
 
     def stats(self) -> dict:
         """Rolling service metrics (the /stats endpoint payload):
-        request/latency percentiles, stage breakdown, and the NetLedger
+        request/latency percentiles, stage breakdown, the NetLedger
         roll-up under ``net`` — bytes_fetched / bytes_saved (nonzero
         when the engine serves through the quantized tier), round trips
-        and doorbell descriptors across all fused calls."""
+        and doorbell descriptors across all fused calls — and the
+        per-tenant admission view under ``tenants`` (admit/reject
+        counts + live queue depth per tenant key)."""
         return self.batcher.metrics.snapshot()

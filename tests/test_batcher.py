@@ -114,6 +114,82 @@ def test_token_bucket_admission():
     assert mb.metrics.n_rejected == 1
 
 
+def test_per_tenant_admission_isolates_tenants():
+    """One tenant over its rate gets rejected WITHOUT draining another
+    tenant's budget (the global bucket is disabled here), and the stats
+    snapshot carries per-tenant admit/reject counts."""
+    mb = MicroBatcher(None, BatchPolicy(tenant_rate=1.0, tenant_burst=2,
+                                        admission_block=False),
+                      autostart=False)
+    q = np.zeros(8, np.float32)
+    mb.submit_search(q, k=1, tenant="a")
+    mb.submit_search(q, k=1, tenant="a")        # drains a's bucket
+    with pytest.raises(AdmissionError):
+        mb.submit_search(q, k=1, tenant="a")
+    # tenant b is untouched by a's exhaustion
+    mb.submit_search(q, k=1, tenant="b")
+    snap = mb.metrics.snapshot()
+    assert snap["tenants"]["a"] == {"admitted": 2, "rejected": 1,
+                                    "queued": 2}
+    assert snap["tenants"]["b"] == {"admitted": 1, "rejected": 0,
+                                    "queued": 1}
+    assert snap["n_rejected"] == 1
+
+
+def test_tenant_rejection_does_not_drain_global_bucket():
+    """A tenant-rejected request must not consume shared global tokens:
+    one tenant flooding past ITS rate leaves the global budget (and so
+    every other tenant's admission) untouched."""
+    mb = MicroBatcher(None, BatchPolicy(rate=1.0, burst=4,
+                                        tenant_rate=1.0, tenant_burst=2,
+                                        admission_block=False),
+                      autostart=False)
+    q = np.zeros(8, np.float32)
+    mb.submit_search(q, k=1, tenant="flood")
+    mb.submit_search(q, k=1, tenant="flood")     # drains flood's bucket
+    for _ in range(10):                          # all tenant-rejected
+        with pytest.raises(AdmissionError):
+            mb.submit_search(q, k=1, tenant="flood")
+    # global budget: burst 4, only 2 consumed -> "quiet" still admits
+    mb.submit_search(q, k=1, tenant="quiet")
+    mb.submit_search(q, k=1, tenant="quiet")
+    snap = mb.metrics.snapshot()
+    assert snap["tenants"]["quiet"] == {"admitted": 2, "rejected": 0,
+                                        "queued": 2}
+    assert snap["tenants"]["flood"]["rejected"] == 10
+
+
+def test_per_tenant_queue_depth_and_dispatch(engine, small_data):
+    """Queue depth per tenant: counted while pending, drained to zero
+    once dispatched; results are per-request correct."""
+    _, queries = small_data
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=64, max_wait_s=0.05),
+                      autostart=False)
+    futs = [mb.submit_search(queries[i], k=10, tenant=t)
+            for i, t in enumerate(("a", "a", "b"))]
+    depth = mb.metrics.snapshot()["tenants"]
+    assert depth["a"]["queued"] == 2 and depth["b"]["queued"] == 1
+    assert depth["a"]["admitted"] == 2
+    mb.start()
+    for f in futs:
+        d, g, _ = f.result(timeout=60)
+        assert g.shape == (1, 10)
+    mb.stop()
+    after = mb.metrics.snapshot()["tenants"]
+    assert after["a"]["queued"] == 0 and after["b"]["queued"] == 0
+
+
+def test_default_tenant_untouched_by_policy(engine, small_data):
+    """No tenant key + tenant_rate=0: admission behaves exactly as
+    before and everything lands under the "-" tenant."""
+    _, queries = small_data
+    with SearchServer(engine, BatchPolicy(max_wait_s=0.005)) as srv:
+        srv.search(queries[0], k=10)
+        snap = srv.stats()
+    assert snap["tenants"]["-"]["admitted"] == 1
+    assert snap["tenants"]["-"]["queued"] == 0
+
+
 def test_adaptive_wait_shrinks_under_load_grows_idle():
     """The ROADMAP item: the window budget scales with the observed
     arrival rate — tight under load, growing toward the cap when idle

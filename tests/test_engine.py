@@ -99,6 +99,61 @@ def test_insert_overflow_triggers_repack(sift_small):
     assert found >= 0.8, found
 
 
+def test_insert_right_after_repack_immediately_searchable(sift_small):
+    """Regression (ROADMAP open item): the vector whose insert TRIGGERS
+    a repack is re-inserted right after it — the old monolithic path
+    wrote it to the host mirror only and left the device twin stale
+    until the next repack/rebuild, so searching for it came back empty.
+    Staged through the pool ``append`` verb (device + mirror twin) it
+    must be exactly searchable immediately.
+
+    The inserts target the SMALLEST partition so the repack *succeeds*
+    (small + ov_cap fits np_max) — a failed repack falls back to a full
+    rebuild, which always restaged the device and masked the bug."""
+    eng = DHNSWEngine(EngineConfig(search_mode="scan", n_rep=16, b=2,
+                                   ef=32, cache_frac=0.5, seed=3))
+    eng.build(sift_small.data[:1000])
+    spec = eng.store.spec
+    sizes = np.asarray(eng.store.n_base)
+    pid = int(np.argmin(sizes))
+    assert sizes[pid] + spec.ov_cap <= spec.np_max, "repack must fit"
+    rep = sift_small.data[int(eng.meta.rep_ids[pid])]
+    new = rep[None, :] + 0.0003 * np.random.default_rng(1).standard_normal(
+        (spec.ov_cap + 1, spec.dim)).astype(np.float32)
+    # the first ov_cap inserts fill the shared region; the last one
+    # finds it full, repacks the group, and is re-inserted post-repack
+    gids = eng.insert(new)
+    d, g, _ = eng.search(new[-1:], k=3)
+    assert int(gids[-1]) in g[0], (gids[-1], g[0])
+    # scan mode is exact within the probed partition: the re-inserted
+    # vector must be its own nearest neighbour at distance ~0
+    assert d[0, 0] <= 1e-6, d[0]
+
+
+def test_failed_repack_rebuild_keeps_gid_unique(sift_small):
+    """Sibling regression: when the repack CANNOT fit (targeting the
+    largest partition) the engine falls back to a full rebuild, which
+    already folds the triggering vector into the rebuilt base — the old
+    path then appended it to overflow anyway, so its gid appeared twice
+    in the index and consumed two top-k slots."""
+    eng = DHNSWEngine(EngineConfig(search_mode="scan", n_rep=16, b=2,
+                                   ef=32, cache_frac=0.5, seed=3))
+    eng.build(sift_small.data[:1000])
+    spec = eng.store.spec
+    pid = int(np.argmax(np.asarray(eng.store.n_base)))
+    assert eng.store.n_base[pid] + spec.ov_cap > spec.np_max, \
+        "repack must NOT fit for this scenario"
+    rep = sift_small.data[int(eng.meta.rep_ids[pid])]
+    new = rep[None, :] + 0.0003 * np.random.default_rng(2).standard_normal(
+        (spec.ov_cap + 1, spec.dim)).astype(np.float32)
+    gids = eng.insert(new)
+    d, g, _ = eng.search(new[-1:], k=5)
+    assert int(gids[-1]) in g[0]
+    assert d[0, 0] <= 1e-6, d[0]
+    live = g[0][g[0] >= 0]
+    assert len(np.unique(live)) == len(live), g[0]   # no duplicate gid
+
+
 def test_round_trips_match_paper_shape(sift_small):
     """Naive rtpq ~= b (paper: 3.547 at b~4); full << 1 with batching."""
     common = dict(search_mode="scan", n_rep=32, ef=48, cache_frac=0.25,

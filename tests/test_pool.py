@@ -1,0 +1,154 @@
+"""Transport conformance suite for the MemoryPool boundary.
+
+Every transport must serve the SAME serialized layout with bit-identical
+search/insert results and verb accounting that agrees with the
+``NetLedger`` the schemes charge — a new transport passes this file or
+it isn't a d-HNSW memory pool.  Runs against ``LocalPool`` and
+``SimulatedRDMAPool`` (fast: tiny dataset, no slow mark).
+"""
+import numpy as np
+import pytest
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G, TPU_ICI, Fabric, NetLedger
+from repro.core.hnsw import HNSWParams
+from repro.core.layout import build_store
+from repro.core.meta import build_meta
+from repro.pool import LocalPool, SimulatedRDMAPool
+
+POOLS = ("local", "sim_rdma")
+CFG = dict(mode="full", search_mode="scan", n_rep=12, b=3, ef=32,
+           cache_frac=0.25, seed=3, fabric=RDMA_100G)
+
+
+@pytest.fixture(scope="module")
+def pds(sift_small):
+    return sift_small.data[:1200], sift_small.queries[:24]
+
+
+def _build(pool: str, data, **over):
+    cfg = {**CFG, **over, "pool": pool}
+    return DHNSWEngine(EngineConfig(**cfg)).build(data)
+
+
+# ----------------------------------------------------------- conformance
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+@pytest.mark.parametrize("mode", ["naive", "full"])
+def test_pools_bit_identical_search_insert(pds, mode, quant):
+    """Same layout, same results, same counted network — the transport
+    may only change HOW bytes move, never WHAT the compute side sees."""
+    data, queries = pds
+    engines = {p: _build(p, data, mode=mode, quant=quant) for p in POOLS}
+    stores = [e.store for e in engines.values()]
+    assert np.array_equal(stores[0].graph_buf, stores[1].graph_buf)
+    assert np.array_equal(stores[0].vec_buf, stores[1].vec_buf)
+    assert np.array_equal(stores[0].meta_table, stores[1].meta_table)
+
+    res = {p: e.search(queries, k=10) for p, e in engines.items()}
+    d0, g0, st0 = res["local"]
+    d1, g1, st1 = res["sim_rdma"]
+    assert np.array_equal(g0, g1)
+    assert np.array_equal(d0, d1)
+    for key in ("round_trips", "descriptors", "bytes", "bytes_saved"):
+        assert st0["net"][key] == st1["net"][key], key
+
+    # inserts route through the append verb on both transports
+    new = queries[:3] + 0.001
+    gids = {p: e.insert(new) for p, e in engines.items()}
+    assert np.array_equal(gids["local"], gids["sim_rdma"])
+    r2 = {p: e.search(queries[:8], k=10) for p, e in engines.items()}
+    assert np.array_equal(r2["local"][1], r2["sim_rdma"][1])
+    assert np.array_equal(r2["local"][0], r2["sim_rdma"][0])
+
+    # the simulated transport models nonzero wire time; local moves
+    # bytes over nothing
+    assert st1["pool"]["sim_total_s"] > 0
+    assert "sim_total_s" not in st0["pool"]
+
+
+@pytest.mark.parametrize("pool", POOLS)
+def test_verb_counts_match_ledger(pds, pool):
+    """Pool-side running totals == the sum of every NetLedger the
+    engine charged (searches + inserts): the transport and the scheme
+    accounting can never drift apart."""
+    data, queries = pds
+    eng = _build(pool, data, quant="int8")
+    totals = {"round_trips": 0.0, "descriptors": 0.0, "bytes": 0.0}
+
+    def add(net):
+        for k in totals:
+            totals[k] += net[k]
+
+    for i in range(3):
+        _, _, st = eng.search(queries[i * 8:(i + 1) * 8], k=10)
+        add(st["net"])
+    eng.insert(queries[:2] + 0.001)
+    add(eng._last_insert_net)
+    snap = eng.pool.snapshot()
+    for k in totals:
+        assert snap["totals"][k] == pytest.approx(totals[k]), k
+    assert snap["verbs"]["read_meta"] >= 3
+    assert snap["verbs"]["append"] == 2
+
+
+# ---------------------------------------------------------- verb level
+
+def _tiny_store(data):
+    meta = build_meta(data, 8, seed=0, meta_levels=2)
+    store = build_store(data, meta,
+                        sub_params=HNSWParams(M=4, M0=8,
+                                              ef_construction=40))
+    return store, meta
+
+
+def test_raw_verbs_agree_across_transports(pds):
+    """Verb-by-verb: both transports return identical device data for
+    identical descriptors, and charge identical ledgers."""
+    data, _ = pds
+    s0, _ = _tiny_store(data)
+    s1, _ = _tiny_store(data)
+    lp = LocalPool(s0)
+    sp = SimulatedRDMAPool(s1, fabric=RDMA_100G)
+    led_l, led_s = NetLedger(RDMA_100G), NetLedger(RDMA_100G)
+
+    pids = np.array([0, 3, 5, 6])
+    gl, vl = lp.read_spans(pids, ledger=led_l, doorbell=2)
+    gs, vs = sp.read_spans(pids, ledger=led_s, doorbell=2)
+    assert np.array_equal(np.asarray(gl), np.asarray(gs))
+    assert np.array_equal(np.asarray(vl), np.asarray(vs))
+    assert led_l.as_dict() == led_s.as_dict()
+    assert lp.totals == sp.totals
+
+    rows = np.array([[0, 5, 9], [2, -1, 7]], np.int32)
+    assert np.array_equal(np.asarray(lp.read_rows(rows)),
+                          np.asarray(sp.read_rows(rows)))
+
+    vec = data[0] + 0.5
+    slot_l = lp.append(vec, 9999, 1, ledger=led_l)
+    slot_s = sp.append(vec, 9999, 1, ledger=led_s)
+    assert slot_l == slot_s >= 0
+    assert np.array_equal(s0.vec_buf, s1.vec_buf)
+    assert np.array_equal(s0.graph_buf, s1.graph_buf)
+    assert np.array_equal(s0.meta_table, s1.meta_table)
+    assert led_l.as_dict() == led_s.as_dict()
+    # per-verb sim breakdown covers exactly the charged verbs
+    assert set(sp.sim_s) == {"read_spans", "append"}
+    assert sp.sim_total_s > 0
+
+
+def test_sim_latency_scales_with_fabric(pds):
+    """The cost model is live: a slower fabric models more wire time for
+    the same verbs (same counts, same results)."""
+    data, queries = pds
+    slow = Fabric("slow", rtt_s=50e-6, bw_Bps=1e9, per_op_s=1e-6,
+                  max_doorbell=32)
+    e_fast = _build("sim_rdma", data, fabric=TPU_ICI)
+    e_slow = _build("sim_rdma", data, fabric=slow)
+    _, gf, stf = e_fast.search(queries, k=10)
+    _, gs, sts = e_slow.search(queries, k=10)
+    assert np.array_equal(gf, gs)
+    assert stf["net"]["round_trips"] == sts["net"]["round_trips"]
+    assert sts["pool"]["sim_total_s"] > stf["pool"]["sim_total_s"]
+    # and the ledger PRICES the same counts differently too
+    assert sts["net"]["latency_s"] > stf["net"]["latency_s"]

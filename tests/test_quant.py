@@ -192,6 +192,60 @@ def test_insert_overflow_repack_with_quant(qds):
         np.abs(store.vec_buf).max() / 200)
 
 
+# ----------------------------------------------- flat kernel route
+
+def test_flat_kernel_route_dense_resident(qds):
+    """With a dense-resident quantized tier (capacity >= n_partitions)
+    and scan-mode stage 1, quant_kernel="auto" routes through ONE flat
+    ``quant_topk`` scan: recall must not regress vs the per-pair jnp
+    path, warm stage-1 must be wire-free, and the Pallas kernel and the
+    jnp oracle route must agree exactly."""
+    common = dict(mode="full", search_mode="scan", n_rep=16, b=3, ef=32,
+                  cache_frac=0.6, seed=3, quant="int8")
+    jnp_eng = DHNSWEngine(EngineConfig(**common)).build(qds.data)
+    flat = DHNSWEngine(EngineConfig(quant_kernel="auto", **common)).build(
+        qds.data)
+    assert flat.client._flat_kernel_active()
+    q = qds.queries[:64]
+    _, gj, _ = jnp_eng.search(q, k=10)
+    df, gf, stf = flat.search(q, k=10)
+    assert stf["quant_kernel"] == "flat"
+    assert stf["flat_rows"] == len(qds.data)
+    rj = recall_at_k(gj, qds.gt_ids[:64, :10])
+    rf = recall_at_k(gf, qds.gt_ids[:64, :10])
+    assert rf >= rj - 1e-9, (rf, rj)   # flat scans every resident row
+    # warm: the whole int8 DB is resident -> stage 1 moves zero bytes;
+    # only stage-2 row fetches remain on the wire
+    _, _, warm = flat.search(q, k=10)
+    row_b = flat.store.spec.row_bytes()
+    assert warm["net"]["bytes"] <= warm["rerank_rows"] * row_b + 1e-9
+    # fallback guard: a sparse tier must keep the per-pair path
+    sparse = DHNSWEngine(EngineConfig(mode="full", search_mode="scan",
+                                      n_rep=16, b=3, ef=32, cache_frac=0.1,
+                                      seed=3, quant="int8",
+                                      quant_kernel="auto")).build(qds.data)
+    assert not sparse.client._flat_kernel_active()
+    _, _, sts = sparse.search(q[:8], k=10)
+    assert "quant_kernel" not in sts
+
+
+def test_flat_kernel_insert_stays_coherent(qds):
+    """Appends keep the dense-resident flat view coherent without a
+    resync: the inserted vector is immediately a stage-1 candidate."""
+    eng = DHNSWEngine(EngineConfig(mode="full", search_mode="scan",
+                                   n_rep=16, b=3, ef=32, cache_frac=0.6,
+                                   seed=3, quant="int8",
+                                   quant_kernel="auto")).build(
+        qds.data[:2000])
+    eng.search(qds.queries[:8], k=10)         # cold sync
+    new = qds.queries[:4] + 0.001
+    gids = eng.insert(new)
+    d, g, st = eng.search(new, k=3)
+    assert st.get("quant_kernel") == "flat"
+    found = np.mean([gid in g[i] for i, gid in enumerate(gids)])
+    assert found == 1.0, (found, g, gids)
+
+
 # ------------------------------------------------------------ serving
 
 def test_serve_routes_through_staged_path(qds, eng_int8):

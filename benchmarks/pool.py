@@ -14,6 +14,13 @@ so the BENCH numbers reflect round trips and wire time under each
 fabric, not just event counts.  The quantized tier rides along to show
 the byte reduction translating into modeled time on slow fabrics.
 
+The ``--shards`` sweep runs a SKEWED (zipf-sampled) workload through
+``ShardedPool`` across shard count x placement policy, with the last
+shard a deliberate straggler (8x slower fabric): per cell it reports
+modeled us/query, per-shard wire bytes and their imbalance, and the
+migration count — the frequency-aware policy must beat round-robin
+here by moving hot groups off the straggler.
+
 Writes ``BENCH_pool.json``.  ``--smoke`` is the CI crash check: tiny
 config, asserts nothing about perf.
 """
@@ -28,6 +35,7 @@ import numpy as np
 from repro.core import DHNSWEngine, EngineConfig
 from repro.core.cost_model import RDMA_100G, Fabric
 from repro.data.synthetic import sift_like
+from repro.pool.placement import FrequencyAwarePlacement
 
 
 def fabric_grid(smoke: bool) -> list[Fabric]:
@@ -74,7 +82,87 @@ def run_cell(data, queries, *, mode: str, quant: str, fabric: Fabric,
             "wall_s": round(wall, 2)}
 
 
-def run(*, smoke: bool = False, out: str = "BENCH_pool.json") -> dict:
+def straggler_fabrics(n_shards: int, slowdown: float = 8.0) -> tuple:
+    """n_shards fabrics, the last one ``slowdown``x worse on every term."""
+    base = RDMA_100G
+    slow = Fabric(f"straggler-x{slowdown:g}", rtt_s=base.rtt_s * slowdown,
+                  bw_Bps=base.bw_Bps / slowdown,
+                  per_op_s=base.per_op_s * slowdown,
+                  max_doorbell=base.max_doorbell)
+    return (base,) * (n_shards - 1) + (slow,)
+
+
+def run_shard_cell(data, queries, *, n_shards: int, placement: str,
+                   n_rep: int, n_batches: int, per_batch: int,
+                   migrate_every: int) -> dict:
+    pol = (FrequencyAwarePlacement(migrate_every=migrate_every,
+                                   max_moves=4)
+           if placement == "freq" else placement)
+    cfg = EngineConfig(mode="full", search_mode="scan", b=3, ef=48,
+                       n_rep=n_rep, cache_frac=0.1, doorbell=16,
+                       fabric=RDMA_100G, seed=0, pool="sharded",
+                       n_shards=n_shards, shard_transport="sim_rdma",
+                       shard_fabrics=straggler_fabrics(n_shards),
+                       placement=pol)
+    eng = DHNSWEngine(cfg).build(data)
+    # zipf-skewed closed workload: a few hot queries dominate, so a few
+    # hot groups dominate the wire — the regime placement matters in
+    rng = np.random.default_rng(0)
+    p = 1.0 / np.arange(1, len(queries) + 1)
+    p /= p.sum()
+    nq = 0
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        qb = queries[rng.choice(len(queries), size=per_batch, p=p)]
+        eng.search(qb, k=10)
+        nq += per_batch
+    wall = time.perf_counter() - t0
+    snap = eng.pool.snapshot()
+    by_shard = [s["totals"]["bytes"] for s in snap["shards"]]
+    mean_b = max(sum(by_shard) / len(by_shard), 1.0)
+    return {"n_shards": n_shards, "placement": placement,
+            "sim_us_per_q": round(snap["sim_total_s"] / nq * 1e6, 3),
+            "round_trips_per_q": round(
+                snap["totals"]["round_trips"] / nq, 3),
+            "kb_per_q": round(snap["totals"]["bytes"] / nq / 1e3, 2),
+            "bytes_by_shard_mb": [round(b / 1e6, 3) for b in by_shard],
+            "byte_imbalance": round(max(by_shard) / mean_b, 3),
+            "migrations": snap["migration"]["n"],
+            "groups_by_shard": snap["groups_by_shard"],
+            "wall_s": round(wall, 2)}
+
+
+def run_shards(*, smoke: bool = False) -> list[dict]:
+    """Shard count x placement sweep on the skewed straggler workload."""
+    if smoke:
+        n, n_rep, n_batches, per_batch, migrate_every = 1500, 12, 12, 32, 32
+        counts = (2,)
+        placements = ("round_robin", "freq")
+    else:
+        n, n_rep, n_batches, per_batch, migrate_every = (20_000, 64, 16,
+                                                         64, 64)
+        counts = (2, 4)
+        placements = ("round_robin", "size_balanced", "freq")
+    ds = sift_like(n=n, n_queries=64, seed=0)
+    rows = []
+    print(f"{'shards':>6s} {'placement':>13s} {'sim us/q':>9s} "
+          f"{'imb':>6s} {'moves':>5s}")
+    for n_shards in counts:
+        for placement in placements:
+            row = run_shard_cell(ds.data, ds.queries, n_shards=n_shards,
+                                 placement=placement, n_rep=n_rep,
+                                 n_batches=n_batches, per_batch=per_batch,
+                                 migrate_every=migrate_every)
+            rows.append(row)
+            print(f"{n_shards:6d} {placement:>13s} "
+                  f"{row['sim_us_per_q']:9.3f} "
+                  f"{row['byte_imbalance']:6.3f} "
+                  f"{row['migrations']:5d}", flush=True)
+    return rows
+
+
+def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
+        shards_only: bool = False) -> dict:
     if smoke:
         n, n_rep, n_batches = 1500, 12, 2
         modes = ("full",)
@@ -83,28 +171,41 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json") -> dict:
         n, n_rep, n_batches = 20_000, 64, 4
         modes = ("naive", "no_doorbell", "full")
         quants = ("none", "int8")
-    ds = sift_like(n=n, n_queries=256, seed=0)
-
     rows = []
-    print(f"{'fabric':>10s} {'mode':>12s} {'quant':>5s} {'rt/q':>7s} "
-          f"{'KB/q':>9s} {'sim us/q':>9s}")
-    for fabric in fabric_grid(smoke):
-        for mode in modes:
-            for quant in quants:
-                row = run_cell(ds.data, ds.queries, mode=mode, quant=quant,
-                               fabric=fabric, n_rep=n_rep,
-                               n_batches=n_batches)
-                rows.append(row)
-                print(f"{row['fabric']:>10s} {mode:>12s} {quant:>5s} "
-                      f"{row['round_trips_per_q']:7.3f} "
-                      f"{row['kb_per_q']:9.2f} "
-                      f"{row['sim_us_per_q']:9.3f}", flush=True)
+    if not shards_only:
+        ds = sift_like(n=n, n_queries=256, seed=0)
+        print(f"{'fabric':>10s} {'mode':>12s} {'quant':>5s} {'rt/q':>7s} "
+              f"{'KB/q':>9s} {'sim us/q':>9s}")
+        for fabric in fabric_grid(smoke):
+            for mode in modes:
+                for quant in quants:
+                    row = run_cell(ds.data, ds.queries, mode=mode,
+                                   quant=quant, fabric=fabric, n_rep=n_rep,
+                                   n_batches=n_batches)
+                    rows.append(row)
+                    print(f"{row['fabric']:>10s} {mode:>12s} {quant:>5s} "
+                          f"{row['round_trips_per_q']:7.3f} "
+                          f"{row['kb_per_q']:9.2f} "
+                          f"{row['sim_us_per_q']:9.3f}", flush=True)
 
-    blob = {"bench": "pool", "smoke": smoke, "n": n, "n_rep": n_rep,
-            "n_batches": n_batches, "rows": rows}
+    shard_rows = run_shards(smoke=smoke)
+    if shards_only:
+        # refresh only the shard table: keep any previously written
+        # fabric rows (and their metadata) instead of clobbering them
+        try:
+            with open(out) as f:
+                blob = json.load(f)
+        except (OSError, ValueError):
+            blob = {"bench": "pool", "smoke": smoke, "rows": rows}
+        blob["shard_rows"] = shard_rows
+    else:
+        blob = {"bench": "pool", "smoke": smoke, "n": n, "n_rep": n_rep,
+                "n_batches": n_batches, "rows": rows,
+                "shard_rows": shard_rows}
     with open(out, "w") as f:
         json.dump(blob, f, indent=2)
-    print(f"wrote {out} ({len(rows)} rows)")
+    print(f"wrote {out} ({len(blob['rows'])} + {len(shard_rows)} "
+          f"shard rows)")
     return blob
 
 
@@ -112,9 +213,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config; crash-check only")
+    ap.add_argument("--shards", action="store_true",
+                    help="run only the shard count x placement sweep")
     ap.add_argument("--out", default="BENCH_pool.json")
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out)
+    run(smoke=args.smoke, out=args.out, shards_only=args.shards)
 
 
 if __name__ == "__main__":

@@ -59,6 +59,15 @@ def main():
     ap.add_argument("--quant", action="store_true",
                     help="serve through the int8 quantized tier "
                          "(staged search; watch net.bytes_saved)")
+    ap.add_argument("--pool", default="local",
+                    choices=("local", "sim_rdma", "sharded"),
+                    help="memory-pool transport; 'sharded' splits the "
+                         "region across --shards memory nodes")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="memory nodes under --pool sharded")
+    ap.add_argument("--placement", default="round_robin",
+                    choices=("round_robin", "size_balanced", "freq"),
+                    help="group placement policy under --pool sharded")
     args = ap.parse_args()
 
     print(f"indexing {args.n} vectors...")
@@ -66,7 +75,9 @@ def main():
     eng = DHNSWEngine(EngineConfig(mode="full", search_mode="scan", b=3,
                                    ef=32, n_rep=64, cache_frac=0.15,
                                    doorbell=16,
-                                   quant="int8" if args.quant else "none")
+                                   quant="int8" if args.quant else "none",
+                                   pool=args.pool, n_shards=args.shards,
+                                   placement=args.placement)
                       ).build(ds.data)
     # warm the pow2 batch shapes the batcher will produce
     b = 1
@@ -111,6 +122,19 @@ def main():
           f"{net['round_trips']:.0f} round trips"
           + (f", {net['bytes_saved'] / 1e6:.2f} MB saved by the int8 tier"
              if net["bytes_saved"] else ""))
+    pool = snap.get("pool")
+    if pool and pool.get("kind") == "sharded":
+        print(f"\n  sharded pool: {pool['n_shards']} memory nodes, "
+              f"placement={pool['placement']}, "
+              f"{pool['migration']['n']} migrations")
+        for i, sh in enumerate(pool["shards"]):
+            tot = sh["totals"]
+            verbs = sum(v for k, v in sh["verbs"].items()
+                        if k.startswith(("read_spans", "append")))
+            print(f"    shard {i}: {pool['groups_by_shard'][i]:3d} groups"
+                  f"  {tot['bytes'] / 1e6:8.2f} MB"
+                  f"  {tot['round_trips']:6.0f} trips"
+                  f"  {verbs:5.0f} span/append verbs")
 
 
 if __name__ == "__main__":

@@ -48,7 +48,7 @@ from repro.core.cost_model import (RDMA_100G, TPU_ICI, Fabric,  # noqa: F401
 from repro.core.scheduler import pow2_pad  # noqa: F401  (re-export)
 
 MODES = ("naive", "no_doorbell", "full")
-POOLS = ("local", "sim_rdma")
+POOLS = ("local", "sim_rdma", "sharded")
 
 
 @dataclass
@@ -76,8 +76,22 @@ class EngineConfig:
     exact_frac: float = 0.25        # share of the cache BYTE budget kept
                                     # as full-precision (exact-tier) slots
     # memory-pool transport (repro/pool): "local" is in-process and
-    # bit-identical; "sim_rdma" adds the per-verb latency model
-    pool: str = "local"             # local | sim_rdma
+    # bit-identical; "sim_rdma" adds the per-verb latency model;
+    # "sharded" splits the region group-granularly across n_shards
+    # child pools (per-shard doorbell fan-out, pluggable placement)
+    pool: str = "local"             # local | sim_rdma | sharded
+    n_shards: int = 2               # shards under pool="sharded"
+    # placement: policy name ("round_robin" | "size_balanced" | "freq")
+    # or a ready PlacementPolicy instance (one engine per instance —
+    # policies are stateful)
+    placement: object = "round_robin"
+    shard_transport: str = "local"  # child transport: local | sim_rdma
+    # per-shard fabrics (len == n_shards) to model stragglers; None
+    # replicates `fabric` on every shard
+    shard_fabrics: Optional[tuple] = None
+    shard_parallel: bool = True     # shards answer doorbell batches
+                                    # concurrently (trips/modeled time
+                                    # reduce by max); False sums
     # stage-1 flat kernel route: "off" keeps the per-pair jnp path;
     # "auto" routes flat (scan-mode) stage 1 through the fused
     # quant_topk Pallas kernel when the quantized tier is dense-resident
@@ -103,6 +117,10 @@ class DHNSWEngine:
         assert self.cfg.pool in POOLS, self.cfg.pool
         assert self.cfg.quant_kernel in ("off", "auto", "ref"), \
             self.cfg.quant_kernel
+        if self.cfg.pool == "sharded":
+            assert self.cfg.n_shards >= 1, self.cfg.n_shards
+            assert self.cfg.shard_transport in ("local", "sim_rdma"), \
+                self.cfg.shard_transport
         self.client = ComputeClient(self.cfg, make_pool_factory(self.cfg))
 
     # ------------------------------------------------------------ lifecycle

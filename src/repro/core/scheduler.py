@@ -46,6 +46,24 @@ def doorbell_chunks(items, doorbell: int):
     return [items[j:j + doorbell] for j in range(0, len(items), doorbell)]
 
 
+def doorbell_chunks_sharded(items, doorbell: int, owner_of=None):
+    """Destination-aware doorbell batching: descriptors are grouped by
+    owning shard FIRST (``owner_of(item) -> shard``), then each
+    destination's run is doorbell-chunked — one round trip never mixes
+    destinations, because a doorbell rings ONE remote NIC.  With
+    ``owner_of=None`` (single memory node) this is ``doorbell_chunks``.
+    """
+    if owner_of is None:
+        return doorbell_chunks(items, doorbell)
+    by: dict[int, list] = {}
+    for it in np.asarray(items).reshape(-1):
+        by.setdefault(int(owner_of(int(it))), []).append(it)
+    out = []
+    for s in sorted(by):
+        out.extend(doorbell_chunks(np.asarray(by[s], np.int64), doorbell))
+    return out
+
+
 @dataclass
 class Round:
     """One fetch-and-serve round.  Slot ids are assigned at *planning*
@@ -219,11 +237,14 @@ def _pair_ranks(pairs: np.ndarray) -> np.ndarray:
 
 
 def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
-               doorbell: int = 8) -> Plan:
+               doorbell: int = 8, owner_of=None) -> Plan:
     """Build the round schedule for one query batch.
 
     ``topb_pids``: (B, b) int — per-query required partitions, nearest
     first.  Mutates ``cache`` recency/slots to its post-batch state.
+    ``owner_of`` (pid -> shard), when given, makes each round's
+    advertised doorbell batches destination-aware (a sharded pool splits
+    its descriptor submission the same way).
     """
     topb = np.asarray(topb_pids)
     B, b = topb.shape
@@ -271,7 +292,7 @@ def plan_batch(topb_pids: np.ndarray, cache: LRUCacheState, *,
         pslots = np.array([s for p, s in zip(take, slots)
                            for _ in demand[p]], np.int64)
         fetch = np.array(take, np.int64)
-        doorbells = doorbell_chunks(fetch, doorbell)
+        doorbells = doorbell_chunks_sharded(fetch, doorbell, owner_of)
         rounds.append(Round(fetch, np.array(slots, np.int64), doorbells,
                             np.array(evicted, np.int64), pairs, pslots,
                             _pair_ranks(pairs)))

@@ -6,15 +6,25 @@ only through ``MemoryPool`` verbs.  Transports:
 
 * ``LocalPool``         — in-process device arrays (bit-identical to the
                           pre-pool monolithic engine);
-* ``SimulatedRDMAPool`` — + per-verb latency/bandwidth model.
+* ``SimulatedRDMAPool`` — + per-verb latency/bandwidth model;
+* ``ShardedPool``       — the region split group-granularly across N
+                          child pools with per-shard doorbell fan-out
+                          and pluggable (migrating) placement.
 """
 from repro.pool.compute import ComputeClient
 from repro.pool.local import LocalPool
+from repro.pool.placement import (FrequencyAwarePlacement, PlacementPolicy,
+                                  RoundRobinPlacement, SizeBalancedPlacement,
+                                  make_placement)
 from repro.pool.protocol import MemoryPool, span_wire_bytes
-from repro.pool.sim_rdma import SimulatedRDMAPool
+from repro.pool.sharded import ShardedPool
+from repro.pool.sim_rdma import SimulatedRDMAPool, fanout_dt
 
-__all__ = ["MemoryPool", "LocalPool", "SimulatedRDMAPool", "ComputeClient",
-           "make_pool_factory", "span_wire_bytes"]
+__all__ = ["MemoryPool", "LocalPool", "SimulatedRDMAPool", "ShardedPool",
+           "ComputeClient", "PlacementPolicy", "RoundRobinPlacement",
+           "SizeBalancedPlacement", "FrequencyAwarePlacement",
+           "make_placement", "make_pool_factory", "span_wire_bytes",
+           "fanout_dt"]
 
 
 def make_pool_factory(cfg):
@@ -26,4 +36,25 @@ def make_pool_factory(cfg):
         return lambda store: SimulatedRDMAPool(
             store, fabric=cfg.fabric,
             use_gather_kernel=cfg.use_gather_kernel)
+    if cfg.pool == "sharded":
+        def child(fabric):
+            if cfg.shard_transport == "local":
+                return lambda store: LocalPool(
+                    store, use_gather_kernel=cfg.use_gather_kernel)
+            if cfg.shard_transport == "sim_rdma":
+                return lambda store: SimulatedRDMAPool(
+                    store, fabric=fabric,
+                    use_gather_kernel=cfg.use_gather_kernel)
+            raise ValueError(
+                f"unknown shard transport {cfg.shard_transport!r}")
+
+        fabrics = (cfg.shard_fabrics if cfg.shard_fabrics is not None
+                   else (cfg.fabric,) * cfg.n_shards)
+        if len(fabrics) != cfg.n_shards:
+            raise ValueError(f"shard_fabrics has {len(fabrics)} entries "
+                             f"for n_shards={cfg.n_shards}")
+        return lambda store: ShardedPool(
+            store, [child(f) for f in fabrics],
+            placement=make_placement(cfg.placement),
+            parallel=cfg.shard_parallel)
     raise ValueError(f"unknown pool transport {cfg.pool!r}")

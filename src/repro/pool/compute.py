@@ -158,17 +158,20 @@ class ComputeClient:
 
         # plan (compute-instance CPU role)
         t0 = time.perf_counter()
+        owner_of = getattr(pool, "owner_of_pid", None)
         if cfg.mode == "naive":
             raw = SCH.naive_plan(pids)
             # every pair is its own READ round trip (the 3.547 trips/
             # query); dedup below is compute-only, so movement through
             # the pool goes uncharged (ledger=None) — already posted
-            pool.post_span_reads(len(raw), ledger=ledger, doorbell=1)
+            pool.post_span_reads(len(raw), ledger=ledger, doorbell=1,
+                                 pids=[p for _, p in raw])
             uniq = sorted({p for _, p in raw})
             cache = SCH.LRUCacheState(max(len(uniq), 1))
             plan = SCH.plan_batch(pids, cache, doorbell=1)
         else:
-            plan = SCH.plan_batch(pids, self.cache, doorbell=cfg.doorbell)
+            plan = SCH.plan_batch(pids, self.cache, doorbell=cfg.doorbell,
+                                  owner_of=owner_of)
         stats["plan_s"] = time.perf_counter() - t0
 
         # rounds: fetch -> serve -> merge (all device-side; the running
@@ -279,9 +282,10 @@ class ComputeClient:
         flat_pids = pool_h[:, :, 2][live]
         n_admitted = 0
         if cfg.mode == "naive":
-            # every (query, row) need is its own remote read
-            pool.post_row_reads([(-1, 1)] * len(flat_rows), ledger=ledger,
-                                doorbell=1)
+            # every (query, row) need is its own remote read (real pids
+            # so a sharded pool can attribute each to its destination)
+            pool.post_row_reads([(int(p), 1) for p in flat_pids],
+                                ledger=ledger, doorbell=1)
             stats["rerank_rows"] = int(len(flat_rows))
             stats["rerank_hit_rows"] = 0
         else:
@@ -357,14 +361,17 @@ class ComputeClient:
         if cfg.mode == "naive":
             raw = SCH.naive_plan(pids)
             pool.post_span_reads(len(raw), ledger=ledger, doorbell=1,
-                                 quant=True, quant_graph=include_graph)
+                                 quant=True, quant_graph=include_graph,
+                                 pids=[p for _, p in raw])
             ledger.save(len(raw) * (pb - qpb))
             uniq = sorted({p for _, p in raw})
             tiers = SCH.TieredCacheState(max(len(uniq), 1), 1)
             plan = SCH.plan_batch(pids, tiers.quant, doorbell=1)
         else:
             tiers = self.tiers
-            plan = SCH.plan_batch(pids, tiers.quant, doorbell=cfg.doorbell)
+            plan = SCH.plan_batch(pids, tiers.quant, doorbell=cfg.doorbell,
+                                  owner_of=getattr(pool, "owner_of_pid",
+                                                   None))
         stats["plan_s"] = time.perf_counter() - t0
 
         # stage-1 rounds: fetch quantized spans -> pool candidates
@@ -447,7 +454,8 @@ class ComputeClient:
             spec.n_partitions, ledger=ledger,
             doorbell=1 if cfg.mode in ("naive", "no_doorbell")
             else cfg.doorbell,
-            quant=True, quant_graph=False)
+            quant=True, quant_graph=False,
+            pids=np.arange(spec.n_partitions))
         rows, gids, pids = LA.flat_quant_rows(self.pool.store)
         n = len(rows)
         npad = pow2_pad(max(n, 1), lo=256)

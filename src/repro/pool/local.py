@@ -55,14 +55,37 @@ class LocalPool(MemoryPool):
 
     def attach_quant(self, group: int) -> None:
         LA.attach_quant_mirror(self.store, group)
+        self._stage_quant()
+
+    def _stage_quant(self) -> None:
+        """(Re-)stage the quantized mirror (already attached to the host
+        store) — split out so a sharded parent can attach the mirror
+        once and have every child stage it."""
         self._qv_dev = jnp.asarray(self.store.qvec_buf)
         self._qs_dev = jnp.asarray(self.store.qscale_buf)
 
+    def refresh_blocks(self, block_ids) -> None:
+        """Re-stage specific blocks from the host region (group
+        migration landing on this pool: the host bytes are the source of
+        truth; this node's device copy of the arriving group is stale)."""
+        ids = np.asarray(block_ids, np.int64)
+        dev = jnp.asarray(ids, jnp.int32)
+        self._g_dev = self._g_dev.at[dev].set(
+            jnp.asarray(self.store.graph_buf[ids]))
+        self._v_dev = self._v_dev.at[dev].set(
+            jnp.asarray(self.store.vec_buf[ids]))
+        if self._qv_dev is not None:
+            self._qv_dev = self._qv_dev.at[dev].set(
+                jnp.asarray(self.store.qvec_buf[ids]))
+            self._qs_dev = self._qs_dev.at[dev].set(
+                jnp.asarray(self.store.qscale_buf[ids]))
+
     # ------------------------------------------------------------ charging
 
-    def _transport(self, verb: str, n_bytes: float, descriptors: int,
-                   trips: int) -> None:
-        """Transport hook — LocalPool moves bytes over nothing."""
+    def _transport(self, verb: str, n_bytes, descriptors, trips) -> None:
+        """Transport hook — LocalPool moves bytes over nothing.  Each
+        argument may be a scalar (one destination) or a per-destination
+        sequence (a sharded fan-out); see ``SimulatedRDMAPool``."""
 
     def _charge(self, verb: str, ledger: Optional[NetLedger],
                 n_bytes: float, descriptors: int) -> None:
@@ -131,7 +154,8 @@ class LocalPool(MemoryPool):
 
     def post_span_reads(self, n: int, *, ledger: NetLedger,
                         doorbell: int = 1, quant: bool = False,
-                        quant_graph: bool = True) -> None:
+                        quant_graph: bool = True, pids=None) -> None:
+        # pids: shard attribution only — a single node ignores it
         self.verbs["post_span_reads"] += n
         per_bytes, per_desc = span_wire_bytes(self.spec, quant=quant,
                                               quant_graph=quant_graph)

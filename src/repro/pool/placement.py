@@ -1,0 +1,196 @@
+"""Group-granular placement policies for the sharded memory pool.
+
+The layout's unit of locality is the *group*: two partner sub-HNSWs
+around one shared overflow region, serialized contiguously (§3.2).  A
+fetch span never crosses a group boundary, so assigning whole groups to
+shards guarantees every doorbell descriptor names blocks on exactly one
+memory node — the invariant that lets ``ShardedPool`` form descriptor
+batches per destination.
+
+A ``PlacementPolicy`` owns the group -> shard map and (optionally) its
+evolution under load:
+
+* ``RoundRobinPlacement``   — group g lives on shard g % N.  The
+  baseline; ignores sizes and heat.
+* ``SizeBalancedPlacement`` — greedy LPT over live rows per group, so
+  shards hold near-equal bytes even when partition sizes are skewed.
+* ``FrequencyAwarePlacement`` — starts round-robin, counts span
+  accesses per group, and every ``migrate_every`` accesses plans up to
+  ``max_moves`` migrations of the hottest groups away from the most
+  loaded (slowest × hottest) shard toward the fastest/least-loaded one.
+  Per-shard load is modeled as ``cost_s * hits_s`` where ``cost_s`` is
+  the shard's modeled seconds per span read (0 for an in-process
+  child), i.e. exactly the term that dominates a parallel fan-out's
+  critical path.  Counters decay after each rebalance so stale heat
+  ages out instead of pinning history forever.
+
+Policies are stateful and owned by ONE pool each (``place`` resets the
+state); ``make_placement`` accepts either a policy name or an instance.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+
+class PlacementPolicy(abc.ABC):
+    """Group -> shard assignment (+ optional migration under load)."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def place(self, n_groups: int, n_shards: int, *,
+              group_sizes: Optional[np.ndarray] = None,
+              shard_costs: Optional[Sequence[float]] = None) -> np.ndarray:
+        """Initial assignment: (n_groups,) int array of shard indices.
+        Resets any per-instance counters."""
+
+    def note_access(self, group: int) -> bool:
+        """Record one span access to ``group``.  Returns True when the
+        policy wants the pool to run ``plan_moves`` (rebalance due)."""
+        return False
+
+    def plan_moves(self, owner: np.ndarray, *,
+                   group_sizes: Optional[np.ndarray] = None,
+                   shard_costs: Optional[Sequence[float]] = None
+                   ) -> list[tuple[int, int, int]]:
+        """Migrations to apply now: [(group, src_shard, dst_shard)].
+        Static policies return []."""
+        return []
+
+
+class RoundRobinPlacement(PlacementPolicy):
+
+    name = "round_robin"
+
+    def place(self, n_groups: int, n_shards: int, *, group_sizes=None,
+              shard_costs=None) -> np.ndarray:
+        return np.arange(n_groups, dtype=np.int64) % max(n_shards, 1)
+
+
+class SizeBalancedPlacement(PlacementPolicy):
+    """Greedy LPT on live rows per group: biggest group first, each to
+    the currently lightest shard — shards end within one group of even
+    byte load even under skewed partition sizes."""
+
+    name = "size_balanced"
+
+    def place(self, n_groups: int, n_shards: int, *, group_sizes=None,
+              shard_costs=None) -> np.ndarray:
+        n_shards = max(n_shards, 1)
+        sizes = (np.ones(n_groups) if group_sizes is None
+                 else np.asarray(group_sizes, np.float64))
+        owner = np.zeros(n_groups, np.int64)
+        loads = np.zeros(n_shards, np.float64)
+        # stable sort keeps equal-size groups in index order -> with
+        # uniform sizes this degrades gracefully to round-robin-like
+        for g in np.argsort(-sizes, kind="stable"):
+            s = int(np.argmin(loads))
+            owner[g] = s
+            loads[s] += sizes[g]
+        return owner
+
+
+class FrequencyAwarePlacement(PlacementPolicy):
+    """Hot-group migration toward the fastest / least-loaded shard.
+
+    ``note_access`` accumulates per-group span-read counts; every
+    ``migrate_every`` accesses the pool is asked to rebalance.  A move
+    is accepted only while it strictly lowers the busiest shard's
+    modeled time ``cost_s * hits_s`` by at least ``min_gain`` — the
+    hysteresis that keeps near-balanced loads from ping-ponging.
+    """
+
+    name = "freq"
+
+    def __init__(self, *, migrate_every: int = 512, max_moves: int = 4,
+                 decay: float = 0.5, min_gain: float = 0.05):
+        self.migrate_every = max(int(migrate_every), 1)
+        self.max_moves = max(int(max_moves), 1)
+        self.decay = float(decay)
+        self.min_gain = float(min_gain)
+        self._counts = np.zeros(0, np.float64)
+        self._since = 0
+
+    def place(self, n_groups: int, n_shards: int, *, group_sizes=None,
+              shard_costs=None) -> np.ndarray:
+        self._counts = np.zeros(n_groups, np.float64)
+        self._since = 0
+        return np.arange(n_groups, dtype=np.int64) % max(n_shards, 1)
+
+    def note_access(self, group: int) -> bool:
+        if group < len(self._counts):
+            self._counts[group] += 1.0
+        self._since += 1
+        if self._since >= self.migrate_every:
+            self._since = 0
+            return True
+        return False
+
+    @staticmethod
+    def _norm_costs(n_shards: int, shard_costs) -> np.ndarray:
+        """Per-shard seconds per span read; all-equal (incl. all-zero,
+        the in-process case) collapses to uniform cost 1 so the policy
+        still balances pure load."""
+        if shard_costs is None:
+            return np.ones(n_shards, np.float64)
+        c = np.asarray(shard_costs, np.float64)
+        if np.allclose(c, c[0]):
+            return np.ones(n_shards, np.float64)
+        return c
+
+    def plan_moves(self, owner: np.ndarray, *, group_sizes=None,
+                   shard_costs=None) -> list[tuple[int, int, int]]:
+        owner = np.asarray(owner).copy()
+        n_shards = int(owner.max()) + 1 if len(owner) else 1
+        if shard_costs is not None:
+            n_shards = max(n_shards, len(shard_costs))
+        cost = self._norm_costs(n_shards, shard_costs)
+        counts = self._counts[: len(owner)]
+        loads = np.array([cost[s] * counts[owner == s].sum()
+                          for s in range(n_shards)])
+        moves: list[tuple[int, int, int]] = []
+        for _ in range(self.max_moves):
+            src = int(np.argmax(loads))
+            dst = int(np.argmin(loads))
+            if src == dst:
+                break
+            cand = np.nonzero(owner == src)[0]
+            cand = cand[counts[cand] > 0]
+            if not len(cand):
+                break
+            g = int(cand[np.argmax(counts[cand])])
+            h = counts[g]
+            new_src = loads[src] - cost[src] * h
+            new_dst = loads[dst] + cost[dst] * h
+            # accept only if the pair's max strictly drops (with margin)
+            if max(new_src, new_dst) >= loads[src] * (1.0 - self.min_gain):
+                break
+            loads[src], loads[dst] = new_src, new_dst
+            owner[g] = dst
+            moves.append((g, src, dst))
+        self._counts *= self.decay
+        return moves
+
+
+_POLICIES = {
+    "round_robin": RoundRobinPlacement,
+    "size_balanced": SizeBalancedPlacement,
+    "freq": FrequencyAwarePlacement,
+}
+
+
+def make_placement(spec: Union[str, PlacementPolicy, None] = "round_robin",
+                   **kw) -> PlacementPolicy:
+    """Policy name (or ready instance) -> ``PlacementPolicy``."""
+    if spec is None:
+        spec = "round_robin"
+    if isinstance(spec, PlacementPolicy):
+        return spec
+    try:
+        return _POLICIES[spec](**kw)
+    except KeyError:
+        raise ValueError(f"unknown placement policy {spec!r} "
+                         f"(have {sorted(_POLICIES)})") from None

@@ -14,6 +14,11 @@ protocol.  That narrow waist is what makes transports swappable:
                            bandwidth model (a simulated NIC clock), so
                            benchmark numbers reflect round trips and
                            wire time, not just event counts.
+* ``ShardedPool``        — the region split group-granularly across N
+                           child pools (``pool/sharded.py``): doorbell
+                           batches fan out per destination shard, and a
+                           pluggable placement policy may migrate hot
+                           groups between nodes at runtime.
 
 Verb accounting: data verbs take an optional ``NetLedger`` and charge it
 in doorbell batches exactly the way the schemes demand — ``doorbell=1``
@@ -98,10 +103,12 @@ class MemoryPool(abc.ABC):
     @abc.abstractmethod
     def post_span_reads(self, n: int, *, ledger: NetLedger,
                         doorbell: int = 1, quant: bool = False,
-                        quant_graph: bool = True) -> None:
+                        quant_graph: bool = True, pids=None) -> None:
         """Charge ``n`` span READs without moving data (naive scheme:
         every (query, partition) demand is its own read; the flat
-        resident sweep: spans already moved by a data verb)."""
+        resident sweep: spans already moved by a data verb).  ``pids``
+        optionally names the spans so a sharded pool can attribute each
+        charge to its destination node; single-node pools ignore it."""
 
     @abc.abstractmethod
     def post_row_reads(self, groups, *, ledger: NetLedger,

@@ -1,0 +1,415 @@
+"""ShardedPool — the region split across N memory nodes.
+
+One memory node cannot hold a production-scale region, and §3.3's
+doorbell batching only pays off at scale when descriptor batches are
+formed *per destination node*.  ``ShardedPool`` implements the full
+``MemoryPool`` protocol over N child pools (any mix of ``LocalPool`` /
+``SimulatedRDMAPool``, including heterogeneous fabrics per shard to
+model stragglers):
+
+* **Group-granular placement** — the unit of ownership is the layout
+  *group* (two partner sub-HNSWs + their shared overflow, §3.2), so a
+  fetch span never straddles shards and every doorbell descriptor names
+  blocks on exactly one node.  A pluggable ``PlacementPolicy``
+  (``pool/placement.py``) owns the group -> shard map; the
+  frequency-aware policy migrates hot groups toward the fastest /
+  least-loaded shard at runtime (``refresh_blocks`` re-stages the
+  arriving group on the destination node; results are bit-identical
+  before and after a migration).
+* **Per-shard doorbell fan-out** — ``read_spans`` / ``read_rows`` /
+  ``read_quant_rows`` / ``post_*`` split each descriptor batch by
+  owning shard and charge each slice on that shard's own fabric; the
+  caller's ledger sees summed bytes/descriptors and ``trips = max``
+  over shards when ``parallel=True`` (nodes answer their batches
+  concurrently — the critical path is the slowest slice) or the sum in
+  serial mode.  With one shard this reduces exactly to the child's own
+  accounting.
+* **Write routing** — ``append``/``repack`` go to the owner shard,
+  which keeps its device twin (and the quantized mirror / flat-quant
+  row index) coherent; the shared host region stays the single source
+  of truth, so a rebuild (``adopt``) or migration can always re-stage
+  any node from it.
+
+Simulation note: the children share the serialized host region (this
+container has one address space), and each child stages a full device
+copy of it while *serving only the groups it owns* — so device memory
+scales with ``n_shards`` here, a simulation convenience (real
+transports would hold just their slice; block-compacted per-shard
+staging is a ROADMAP item).  What the model measures — per-destination
+verb counts, wire bytes, and modeled time — is exactly what a
+multi-node deployment would see over real transports.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter
+from typing import Callable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as LA
+from repro.core.cost_model import NetLedger
+from repro.core.layout import Store
+from repro.core.scheduler import doorbell_chunks
+from repro.pool.placement import PlacementPolicy, make_placement
+from repro.pool.protocol import MemoryPool, _fresh_totals, span_wire_bytes
+from repro.pool.sim_rdma import fanout_dt
+
+
+class ShardedPool(MemoryPool):
+
+    kind = "sharded"
+
+    def __init__(self, store: Store,
+                 child_factories: Sequence[Callable[[Store], MemoryPool]],
+                 *, placement="round_robin", parallel: bool = True):
+        assert len(child_factories) >= 1, "need at least one shard"
+        self.store = store
+        self.children = [f(store) for f in child_factories]
+        self.placement: PlacementPolicy = make_placement(placement)
+        self.parallel = parallel
+        self.verbs: Counter = Counter()
+        self.totals = _fresh_totals()
+        self.sim_s: dict[str, float] = {}
+        self.migration = {"n": 0, "bytes": 0.0, "sim_s": 0.0}
+        self._reset_placement()
+        self._stage_meta()
+
+    # ------------------------------------------------------------ ownership
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.children)
+
+    def owner_of_group(self, group: int) -> int:
+        return int(self._owner[group])
+
+    def owner_of_pid(self, pid: int) -> int:
+        """Destination shard of one partition's fetch span (a partition
+        lives where its group lives) — also the shard-aware doorbell
+        key the round scheduler groups descriptors by."""
+        return int(self._owner[int(pid) // 2])
+
+    def _owners_of_pids(self, pids) -> np.ndarray:
+        return self._owner[np.asarray(pids, np.int64) // 2]
+
+    def _owners_of_rows(self, rows) -> np.ndarray:
+        """Owning shard per region row address (-1 rows -> -1)."""
+        rows = np.asarray(rows, np.int64)
+        grp = (rows // self.spec.slot_vecs) // self.spec.group_blocks
+        own = self._owner[np.clip(grp, 0, len(self._owner) - 1)]
+        return np.where(rows >= 0, own, -1)
+
+    def _group_rows(self) -> np.ndarray:
+        """Live rows per group (base + overflow) — the size signal for
+        size-balanced placement."""
+        spec, mt = self.spec, self.store.meta_table
+        rows = np.zeros(spec.n_groups, np.int64)
+        for pid in range(spec.n_partitions):
+            rows[pid // 2] += int(self.store.n_base[pid])
+        first = 2 * np.arange(spec.n_groups)
+        rows += mt[first, LA.MT_OV_A].astype(np.int64)
+        rows += mt[first, LA.MT_OV_B].astype(np.int64)
+        return rows
+
+    def _shard_costs(self) -> list[float]:
+        """Modeled seconds per span read, per shard (0 = in-process) —
+        the speed signal the frequency-aware policy migrates toward."""
+        pb = float(self.spec.partition_bytes())
+        return [c.model_dt(pb, 1.0, 1.0) if hasattr(c, "model_dt") else 0.0
+                for c in self.children]
+
+    def _reset_placement(self) -> None:
+        self._owner = np.asarray(
+            self.placement.place(self.spec.n_groups, self.n_shards,
+                                 group_sizes=self._group_rows(),
+                                 shard_costs=self._shard_costs()), np.int64)
+
+    # ------------------------------------------------------------ charging
+
+    def _child_sim(self, child) -> float:
+        return getattr(child, "sim_total_s", 0.0)
+
+    def _scratch(self, shard: int, ledger: NetLedger) -> NetLedger:
+        """Per-destination ledger slice, priced on that shard's own
+        fabric (falling back to the caller's for in-process children)."""
+        fabric = getattr(self.children[shard], "fabric", ledger.fabric)
+        return NetLedger(fabric)
+
+    def _charged_call(self, shard: int, ledger: NetLedger, fn):
+        """Run one child verb under a scratch ledger; returns the verb
+        result and its charge slice (bytes, descriptors, trips, sim_dt)
+        — the single place the per-destination bookkeeping lives."""
+        child = self.children[shard]
+        scratch = self._scratch(shard, ledger)
+        t0 = self._child_sim(child)
+        res = fn(child, scratch)
+        return res, (scratch.bytes, scratch.descriptors,
+                     scratch.round_trips, self._child_sim(child) - t0)
+
+    def _charge_fanout(self, verb: str, ledger: Optional[NetLedger],
+                       slices: list[tuple]) -> None:
+        """Fold per-shard slices [(bytes, descriptors, trips, sim_dt)]
+        into the caller's ledger and the pool totals: bytes and
+        descriptors sum; trips (and modeled time) reduce by max when the
+        shards answer in parallel, by sum in serial mode."""
+        if ledger is None or not slices:
+            return
+        nb = float(sum(s[0] for s in slices))
+        nd = float(sum(s[1] for s in slices))
+        trips = fanout_dt([s[2] for s in slices], self.parallel)
+        dt = fanout_dt([s[3] for s in slices], self.parallel)
+        ledger.round_trips += trips
+        ledger.descriptors += nd
+        ledger.bytes += nb
+        ledger.events += 1
+        self.totals["round_trips"] += trips
+        self.totals["descriptors"] += nd
+        self.totals["bytes"] += nb
+        if dt:
+            self.sim_s[verb] = self.sim_s.get(verb, 0.0) + dt
+
+    # ------------------------------------------------------------ meta
+
+    def _stage_meta(self) -> None:
+        self._mt_dev = jnp.asarray(self.store.meta_table)
+        self._mt_dirty = False
+
+    def read_meta(self):
+        self.verbs["read_meta"] += 1
+        if self._mt_dirty:
+            self._stage_meta()
+        return self._mt_dev
+
+    def adopt(self, store: Store) -> None:
+        self.store = store
+        for c in self.children:
+            c.adopt(store)
+        self._reset_placement()
+        self._stage_meta()
+
+    def attach_quant(self, group: int) -> None:
+        LA.attach_quant_mirror(self.store, group)
+        for c in self.children:
+            c._stage_quant()
+
+    # ------------------------------------------------------------ reads
+
+    def read_spans(self, pids, *, ledger: Optional[NetLedger],
+                   doorbell: int = 1, quant: bool = False,
+                   quant_graph: bool = True):
+        pids = np.asarray(pids).reshape(-1)
+        verb = "read_spans_quant" if quant else "read_spans"
+        self.verbs[verb] += len(pids)
+        owners = self._owners_of_pids(pids)
+        m = len(pids)
+        parts, slices = [], []
+        for s, child in enumerate(self.children):
+            idx = np.nonzero(owners == s)[0]
+            if not len(idx):
+                continue
+            if ledger is None:
+                res = child.read_spans(pids[idx], ledger=None,
+                                       doorbell=doorbell, quant=quant,
+                                       quant_graph=quant_graph)
+            else:
+                res, sl = self._charged_call(
+                    s, ledger,
+                    lambda c, l: c.read_spans(pids[idx], ledger=l,
+                                              doorbell=doorbell,
+                                              quant=quant,
+                                              quant_graph=quant_graph))
+                slices.append(sl)
+            parts.append((idx, res))
+        self._charge_fanout(verb, ledger, slices)
+        outs = None
+        for idx, res in parts:
+            if outs is None:
+                outs = [jnp.zeros((m,) + r.shape[1:], r.dtype) for r in res]
+            di = jnp.asarray(idx, jnp.int32)
+            outs = [o.at[di].set(r) for o, r in zip(outs, res)]
+        if ledger is not None:        # heat accrues on charged traffic
+            self._note_span_access(pids)
+        return tuple(outs)
+
+    def _masked_fanout(self, rows, gather):
+        """Row-granular fan-out: each shard gathers the full tensor with
+        non-owned lanes masked to -1, and the owner's lanes are selected
+        back — dead (-1) lanes keep gather-row-0 placeholders exactly
+        like a single pool, masked by the caller."""
+        rows_h = np.asarray(rows)
+        owners = self._owners_of_rows(rows_h)
+        out = None
+        for s in range(self.n_shards):
+            mask = owners == s
+            if not mask.any():
+                continue
+            sub = jnp.asarray(np.where(mask, rows_h, -1).astype(np.int32))
+            res = gather(self.children[s], sub)
+            if not isinstance(res, tuple):
+                res = (res,)
+            mdev = jnp.asarray(mask)
+            if out is None:
+                out = list(res)
+            else:
+                out = [jnp.where(mdev.reshape(mdev.shape + (1,) * (r.ndim - mdev.ndim)), r, o)
+                       for o, r in zip(out, res)]
+        if out is None:               # every lane dead: any child serves
+            res = gather(self.children[0], jnp.asarray(
+                np.asarray(rows_h, np.int64).astype(np.int32)))
+            return res
+        return out[0] if len(out) == 1 else tuple(out)
+
+    def read_rows(self, rows):
+        self.verbs["read_rows"] += 1
+        return self._masked_fanout(rows, lambda c, r: c.read_rows(r))
+
+    def read_quant_rows(self, rows):
+        self.verbs["read_quant_rows"] += 1
+        return self._masked_fanout(rows,
+                                   lambda c, r: c.read_quant_rows(r))
+
+    # ------------------------------------------------- accounting posts
+
+    def post_span_reads(self, n: int, *, ledger: NetLedger,
+                        doorbell: int = 1, quant: bool = False,
+                        quant_graph: bool = True, pids=None) -> None:
+        self.verbs["post_span_reads"] += n
+        if pids is None:
+            # no destination info: price on the caller's fabric, like a
+            # single-node pool (callers that know the spans pass pids)
+            per_bytes, per_desc = span_wire_bytes(self.spec, quant=quant,
+                                                  quant_graph=quant_graph)
+            for db in doorbell_chunks(np.arange(n), doorbell):
+                nb, nd = len(db) * per_bytes, per_desc * len(db)
+                ledger.read(nb, descriptors=nd)
+                self.totals["round_trips"] += math.ceil(
+                    nd / ledger.fabric.max_doorbell)
+                self.totals["descriptors"] += nd
+                self.totals["bytes"] += nb
+            return
+        pids = np.asarray(pids).reshape(-1)
+        owners = self._owners_of_pids(pids)
+        slices = []
+        for s in range(self.n_shards):
+            k = int((owners == s).sum())
+            if not k:
+                continue
+            _, sl = self._charged_call(
+                s, ledger,
+                lambda c, l: c.post_span_reads(k, ledger=l,
+                                               doorbell=doorbell,
+                                               quant=quant,
+                                               quant_graph=quant_graph))
+            slices.append(sl)
+        self._charge_fanout("post_span_reads", ledger, slices)
+        self._note_span_access(pids)
+
+    def post_row_reads(self, groups, *, ledger: NetLedger,
+                       doorbell: int = 1) -> None:
+        groups = list(groups)
+        self.verbs["post_row_reads"] += len(groups)
+        by: dict[int, list] = {}
+        for pid, cnt in groups:
+            s = self.owner_of_pid(pid) if pid >= 0 else 0
+            by.setdefault(s, []).append((pid, cnt))
+        slices = []
+        for s, sub in sorted(by.items()):
+            _, sl = self._charged_call(
+                s, ledger,
+                lambda c, l: c.post_row_reads(sub, ledger=l,
+                                              doorbell=doorbell))
+            slices.append(sl)
+        self._charge_fanout("post_row_reads", ledger, slices)
+
+    # ------------------------------------------------------------ writes
+
+    def append(self, vec, gid: int, pid: int, *,
+               ledger: Optional[NetLedger]) -> int:
+        s = self.owner_of_pid(int(pid))
+        if ledger is None:
+            slot, sl = self.children[s].append(vec, int(gid), int(pid),
+                                               ledger=None), None
+        else:
+            slot, sl = self._charged_call(
+                s, ledger,
+                lambda c, l: c.append(vec, int(gid), int(pid), ledger=l))
+        if slot < 0:
+            return slot
+        self.verbs["append"] += 1
+        self._mt_dirty = True
+        if sl is not None:
+            self._charge_fanout("append", ledger, [sl])
+        return slot
+
+    def repack(self, group: int, data_lookup) -> bool:
+        self.verbs["repack"] += 1
+        ok = self.children[self.owner_of_group(int(group))].repack(
+            int(group), data_lookup)
+        if ok:
+            self._mt_dirty = True
+        return ok
+
+    # ------------------------------------------------------------ migration
+
+    def _note_span_access(self, pids) -> None:
+        due = False
+        for p in np.asarray(pids).reshape(-1):
+            due = self.placement.note_access(int(p) // 2) or due
+        if due:
+            self._rebalance()
+
+    def _rebalance(self) -> None:
+        # group_sizes deliberately omitted: computing live rows walks
+        # every partition on the host, and no migrating policy reads
+        # them — this runs inside the span-read hot path
+        moves = self.placement.plan_moves(self._owner,
+                                          shard_costs=self._shard_costs())
+        for g, src, dst in moves:
+            self._migrate(int(g), int(src), int(dst))
+
+    def _migrate(self, group: int, src: int, dst: int) -> None:
+        """Move one group shard-to-shard: re-stage its blocks on the
+        destination from the host region (source of truth), flip the
+        owner, and account the background copy separately from verb
+        traffic (it is not charged to any request ledger)."""
+        spec = self.spec
+        if src == dst or self._owner[group] != src:
+            return
+        blocks = np.arange(group * spec.group_blocks,
+                           (group + 1) * spec.group_blocks)
+        self.children[dst].refresh_blocks(blocks)
+        self._owner[group] = dst
+        nb = float(spec.group_blocks * spec.block_bytes())
+        if self.store.qvec_buf is not None:
+            nb += float(spec.group_blocks
+                        * (spec.vblk + spec.n_qgroups * 4))
+        dts = [c.model_dt(nb, 1.0, 1.0) if hasattr(c, "model_dt") else 0.0
+               for c in (self.children[src], self.children[dst])]
+        dt = fanout_dt(dts, True)   # src READ streams into the dst WRITE
+        self.migration["n"] += 1
+        self.migration["bytes"] += nb
+        self.migration["sim_s"] += dt
+        if dt:
+            self.sim_s["migrate"] = self.sim_s.get("migrate", 0.0) + dt
+
+    # ------------------------------------------------------------ stats
+
+    @property
+    def sim_total_s(self) -> float:
+        return sum(self.sim_s.values())
+
+    def snapshot(self) -> dict:
+        out = super().snapshot()
+        out["n_shards"] = self.n_shards
+        out["parallel"] = self.parallel
+        out["placement"] = self.placement.name
+        out["groups_by_shard"] = np.bincount(
+            self._owner, minlength=self.n_shards).tolist()
+        out["migration"] = dict(self.migration)
+        out["shards"] = [c.snapshot() for c in self.children]
+        if self.sim_s or any("sim_total_s" in s for s in out["shards"]):
+            out["sim_s"] = dict(self.sim_s)
+            out["sim_total_s"] = self.sim_total_s
+        return out

@@ -13,6 +13,15 @@ nonzero modeled network latency with a per-verb breakdown, so benchmark
 numbers reflect round trips and wire time rather than event counts
 alone.  ``benchmarks/pool.py`` sweeps the fabric parameters.
 
+Fan-out semantics: ``_transport`` accepts either scalars (one
+destination — the single-node case, bit-identical to before) or
+per-destination sequences.  With ``parallel=True`` a multi-destination
+charge is reduced by ``max`` (destinations answer their doorbell
+batches concurrently, so the critical path is the slowest slice);
+serial mode sums.  ``fanout_dt`` is the shared reduction —
+``ShardedPool`` uses it to aggregate its children's modeled clocks the
+same way.
+
 Optionally (``sleep=True``) the pool also *injects* the modeled latency
 as real wall time — useful to make the serving tier feel remote reads in
 end-to-end latency percentiles; off by default so tests stay fast.
@@ -20,11 +29,24 @@ end-to-end latency percentiles; off by default so tests stay fast.
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Optional, Sequence, Union
+
+import numpy as np
 
 from repro.core.cost_model import RDMA_100G, Fabric
 from repro.core.layout import Store
 from repro.pool.local import LocalPool
+
+Slices = Union[float, int, Sequence[float]]
+
+
+def fanout_dt(dts: Sequence[float], parallel: bool) -> float:
+    """Reduce per-destination modeled times: concurrent destinations
+    cost the max (critical path), serial destinations the sum."""
+    dts = list(dts)
+    if not dts:
+        return 0.0
+    return max(dts) if parallel else float(sum(dts))
 
 
 class SimulatedRDMAPool(LocalPool):
@@ -32,17 +54,29 @@ class SimulatedRDMAPool(LocalPool):
     kind = "sim_rdma"
 
     def __init__(self, store: Store, *, fabric: Optional[Fabric] = None,
-                 use_gather_kernel: bool = False, sleep: bool = False):
+                 use_gather_kernel: bool = False, sleep: bool = False,
+                 parallel: bool = False):
         self.fabric = fabric or RDMA_100G
         self.sleep = sleep
+        self.parallel = parallel
         self.sim_s: dict[str, float] = {}      # per-verb modeled seconds
         super().__init__(store, use_gather_kernel=use_gather_kernel)
 
-    def _transport(self, verb: str, n_bytes: float, descriptors: int,
-                   trips: int) -> None:
+    def model_dt(self, n_bytes: float, descriptors: float,
+                 trips: float) -> float:
+        """Modeled seconds of one charge slice on this node's fabric."""
         f = self.fabric
-        dt = (trips * f.rtt_s + descriptors * f.per_op_s
-              + n_bytes / f.bw_Bps)
+        return (trips * f.rtt_s + descriptors * f.per_op_s
+                + n_bytes / f.bw_Bps)
+
+    def _transport(self, verb: str, n_bytes: Slices, descriptors: Slices,
+                   trips: Slices) -> None:
+        b = np.atleast_1d(np.asarray(n_bytes, np.float64))
+        d = np.atleast_1d(np.asarray(descriptors, np.float64))
+        t = np.atleast_1d(np.asarray(trips, np.float64))
+        dt = fanout_dt([self.model_dt(bi, di, ti)
+                        for bi, di, ti in zip(b, d, t)],
+                       self.parallel and len(b) > 1)
         self.sim_s[verb] = self.sim_s.get(verb, 0.0) + dt
         if self.sleep:
             time.sleep(dt)

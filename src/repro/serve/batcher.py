@@ -21,7 +21,13 @@ rolling p50/p95/p99 service metrics.
 
 Requests preserve arrival order: a window is drained as consecutive
 same-kind runs (search / insert), so a search submitted after an insert
-observes the inserted vectors.
+observes the inserted vectors.  With weighted fair queueing enabled
+(``BatchPolicy.wfq`` / ``tenant_weight``) windows drain by deficit
+round-robin across tenants instead of strict FIFO — per-tenant order is
+still preserved (a tenant's search still observes its own earlier
+inserts), but one tenant's backlog can no longer monopolize windows:
+served rows converge to the configured weight ratio, reported as the
+per-tenant ``share`` in ``stats()["tenants"]``.
 """
 from __future__ import annotations
 
@@ -73,6 +79,24 @@ class BatchPolicy:
     # rest of their admission budget (0 disables per-tenant buckets)
     tenant_rate: float = 0.0    # admission tokens/s per tenant
     tenant_burst: int = 32      # per-tenant bucket depth
+    # weighted fair queueing: with ``wfq`` (or any explicit
+    # ``tenant_weight``) the window drains queued requests by deficit
+    # round-robin across tenants instead of FIFO — each tenant earns
+    # ``wfq_quantum * weight`` query rows of credit per sweep, so a
+    # backlogged tenant cannot monopolize a window and served capacity
+    # converges to the weight ratio.  Arrival order is preserved
+    # WITHIN a tenant (a tenant's search still observes its own earlier
+    # inserts); cross-tenant order is intentionally not preserved.
+    wfq: bool = False
+    tenant_weight: dict = field(default_factory=dict)   # tenant -> weight
+    wfq_quantum: int = 8        # rows of credit per weight unit per sweep
+
+    @property
+    def fair_queue(self) -> bool:
+        return self.wfq or bool(self.tenant_weight)
+
+    def weight_of(self, tenant: str) -> float:
+        return max(float(self.tenant_weight.get(tenant, 1.0)), 1e-6)
 
 
 class ArrivalRateEWMA:
@@ -173,14 +197,19 @@ class ServeMetrics:
         # in a window shares one engine call's network events)
         self.net = {"bytes_fetched": 0.0, "bytes_saved": 0.0,
                     "round_trips": 0.0, "descriptors": 0.0}
-        # per-tenant admission accounting: admitted/rejected counters
-        # plus the live queue depth (enqueued minus dispatched)
+        # per-tenant admission accounting: admitted/rejected counters,
+        # the live queue depth (enqueued minus dispatched), and served
+        # query rows (-> served share under weighted fair queueing)
         self.tenants: dict[str, dict] = {}
+        # latest memory-pool snapshot (verb totals; per-shard breakdown
+        # when the engine serves through a ShardedPool)
+        self.pool_snap: Optional[dict] = None
 
     def _tenant(self, tenant: str) -> dict:
         """Caller must hold the lock."""
         return self.tenants.setdefault(
-            tenant, {"admitted": 0, "rejected": 0, "queued": 0})
+            tenant, {"admitted": 0, "rejected": 0, "queued": 0,
+                     "served": 0})
 
     def note_enqueued(self, tenant: str):
         with self._lock:
@@ -192,8 +221,16 @@ class ServeMetrics:
         with self._lock:
             self._tenant(tenant)["queued"] -= 1
 
+    def note_served(self, tenant: str, rows: int):
+        """Rows that actually completed (not merely dispatched): a
+        window whose engine call raises must not inflate the fair-queue
+        served share."""
+        with self._lock:
+            self._tenant(tenant)["served"] += rows
+
     def record_call(self, batch: int, n_queries: int = 0,
-                    net: Optional[dict] = None):
+                    net: Optional[dict] = None,
+                    pool: Optional[dict] = None):
         with self._lock:
             self.n_fused_calls += 1
             self.fused_sizes.append(batch)
@@ -203,6 +240,8 @@ class ServeMetrics:
                 self.net["bytes_saved"] += net.get("bytes_saved", 0.0)
                 self.net["round_trips"] += net.get("round_trips", 0.0)
                 self.net["descriptors"] += net.get("descriptors", 0.0)
+            if pool is not None:
+                self.pool_snap = pool
 
     def record_rejected(self, tenant: str = "-"):
         with self._lock:
@@ -230,6 +269,12 @@ class ServeMetrics:
                 "net": dict(self.net),
                 "tenants": {t: dict(v) for t, v in self.tenants.items()},
             }
+            total_served = sum(v["served"] for v in self.tenants.values())
+            for v in out["tenants"].values():
+                v["share"] = (v["served"] / total_served
+                              if total_served else 0.0)
+            if self.pool_snap is not None:
+                out["pool"] = copy.deepcopy(self.pool_snap)
             for p in (50, 95, 99):
                 out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
                                    if len(lat) else 0.0)
@@ -254,6 +299,15 @@ class MicroBatcher:
         self._bucket = TokenBucket(self.policy.rate, self.policy.burst)
         self._tenant_buckets: dict[str, TokenBucket] = {}
         self._tenant_lock = threading.Lock()
+        # weighted-fair-queueing state (deficit round-robin): per-tenant
+        # row credit and the tenant service order, persisted across
+        # windows so short-term bursts even out.  The sweep start
+        # rotates every window so a window that fills before reaching
+        # the last tenants cannot starve them forever; tenants with no
+        # backlog are pruned (their credit is zero by construction).
+        self._deficit: dict[str, float] = {}
+        self._rr: list[str] = []
+        self._rr_pos = 0
         self._queue: deque[_Request] = deque()
         self._cv = threading.Condition()
         self._stop = False
@@ -384,11 +438,82 @@ class MicroBatcher:
             self._dispatch_window(window)
 
     def _take_window(self) -> list[_Request]:
-        """Pop up to max_batch query rows, preserving arrival order."""
+        """Pop up to max_batch query rows.  FIFO by default; deficit
+        round-robin across tenants when the policy enables weighted
+        fair queueing (per-tenant arrival order always preserved)."""
+        if self.policy.fair_queue:
+            return self._take_window_drr()
         out, rows = [], 0
         while self._queue and rows < self.policy.max_batch:
             rows += self._queue[0].vecs.shape[0]
             out.append(self._queue.popleft())
+        return out
+
+    def _take_window_drr(self) -> list[_Request]:
+        """Deficit round-robin: sweep tenants in first-seen order, top
+        each deficit up by ``wfq_quantum * weight`` rows per sweep, and
+        pop that tenant's queue head while the deficit affords it — so
+        over time every backlogged tenant's served rows converge to the
+        weight ratio no matter how deep anyone's backlog is."""
+        pol = self.policy
+        pending: dict[str, deque] = {}
+        for r in self._queue:
+            pending.setdefault(r.tenant, deque()).append(r)
+        for t in pending:
+            if t not in self._deficit:
+                self._deficit[t] = 0.0
+                self._rr.append(t)
+        # rotate the sweep start each window: a window that fills at
+        # max_batch before reaching the tail tenants must not restart
+        # at the same head next time (that would starve the tail)
+        self._rr_pos %= max(len(self._rr), 1)
+        order = self._rr[self._rr_pos:] + self._rr[:self._rr_pos]
+        self._rr_pos += 1
+        out: list[_Request] = []
+        rows = 0
+        while rows < pol.max_batch and any(pending.values()):
+            progressed = False
+            for t in order:
+                q = pending.get(t)
+                if not q:
+                    continue
+                self._deficit[t] += pol.wfq_quantum * pol.weight_of(t)
+                while q and rows < pol.max_batch:
+                    need = q[0].vecs.shape[0]
+                    if self._deficit[t] < need:
+                        break
+                    self._deficit[t] -= need
+                    out.append(q.popleft())
+                    rows += need
+                    progressed = True
+                if rows >= pol.max_batch:
+                    break
+            if not progressed and rows < pol.max_batch:
+                # no tenant could afford its queue head this pass (a
+                # pathological near-zero weight would otherwise spin
+                # this loop for ~need/quantum*weight passes while
+                # HOLDING the batcher lock): force the first backlogged
+                # head through at zero carried credit and move on
+                for t in order:
+                    q = pending.get(t)
+                    if q:
+                        self._deficit[t] = 0.0
+                        r = q.popleft()
+                        out.append(r)
+                        rows += r.vecs.shape[0]
+                        break
+        # a tenant whose backlog drained carries no credit forward
+        # (classic DRR: deficit only accumulates while backlogged), and
+        # keeping it listed would grow the sweep without bound on
+        # long-lived servers with many tenant keys — prune it
+        drained = [t for t, q in pending.items() if not q]
+        if drained:
+            gone = set(drained)
+            self._rr = [t for t in self._rr if t not in gone]
+            for t in drained:
+                self._deficit.pop(t, None)
+        taken = {id(r) for r in out}
+        self._queue = deque(r for r in self._queue if id(r) not in taken)
         return out
 
     def _drain_all(self):
@@ -439,7 +564,8 @@ class MicroBatcher:
         d, g, est = self.engine.search(fused, k=k)
         d, g = d[:B], g[:B]
         t_done = time.perf_counter()
-        self.metrics.record_call(B, n_queries=B, net=est["net"])
+        self.metrics.record_call(B, n_queries=B, net=est["net"],
+                                 pool=est.get("pool"))
         off = 0
         for r in group:
             m = r.vecs.shape[0]
@@ -457,6 +583,7 @@ class MicroBatcher:
                 "serve_s": est["sub_s"]})
             r.future.set_result((d[off:off + m, :r.k],
                                  g[off:off + m, :r.k], stats))
+            self.metrics.note_served(r.tenant, m)
             off += m
 
     def _dispatch_insert(self, group: list[_Request]):
@@ -473,4 +600,5 @@ class MicroBatcher:
             self.metrics.record_request(t_done - r.t_submit,
                                         {"queue_s": t_disp - r.t_submit})
             r.future.set_result(np.asarray(gids[off:off + m]))
+            self.metrics.note_served(r.tenant, m)
             off += m

@@ -67,7 +67,10 @@ class SearchServer:
         request/latency percentiles, stage breakdown, the NetLedger
         roll-up under ``net`` — bytes_fetched / bytes_saved (nonzero
         when the engine serves through the quantized tier), round trips
-        and doorbell descriptors across all fused calls — and the
-        per-tenant admission view under ``tenants`` (admit/reject
-        counts + live queue depth per tenant key)."""
+        and doorbell descriptors across all fused calls — the
+        per-tenant view under ``tenants`` (admit/reject counts, live
+        queue depth, served rows + fair-queue ``share`` per tenant
+        key), and under ``pool`` the latest memory-pool snapshot (verb
+        totals; per-shard breakdown + migration counters when serving
+        through a ``ShardedPool``)."""
         return self.batcher.metrics.snapshot()

@@ -130,9 +130,9 @@ def test_per_tenant_admission_isolates_tenants():
     mb.submit_search(q, k=1, tenant="b")
     snap = mb.metrics.snapshot()
     assert snap["tenants"]["a"] == {"admitted": 2, "rejected": 1,
-                                    "queued": 2}
+                                    "queued": 2, "served": 0, "share": 0.0}
     assert snap["tenants"]["b"] == {"admitted": 1, "rejected": 0,
-                                    "queued": 1}
+                                    "queued": 1, "served": 0, "share": 0.0}
     assert snap["n_rejected"] == 1
 
 
@@ -155,7 +155,8 @@ def test_tenant_rejection_does_not_drain_global_bucket():
     mb.submit_search(q, k=1, tenant="quiet")
     snap = mb.metrics.snapshot()
     assert snap["tenants"]["quiet"] == {"admitted": 2, "rejected": 0,
-                                        "queued": 2}
+                                        "queued": 2, "served": 0,
+                                        "share": 0.0}
     assert snap["tenants"]["flood"]["rejected"] == 10
 
 
@@ -246,6 +247,137 @@ def test_server_stats_snapshot(engine, small_data):
     assert snap["p50_ms"] > 0 and snap["p99_ms"] >= snap["p50_ms"]
     for key in ("queue_s", "route_s", "plan_s", "fetch_s", "serve_s"):
         assert snap["breakdown_s"][key] >= 0
+
+
+def test_wfq_drains_by_weight_not_arrival():
+    """Deficit round-robin: with weights 3:1 and tenant B's whole
+    backlog queued FIRST, a window still drains ~3 A rows per B row —
+    and arrival order is preserved within each tenant."""
+    from repro.serve.batcher import _Request
+
+    pol = BatchPolicy(max_batch=16, wfq=True, wfq_quantum=1,
+                      tenant_weight={"A": 3.0, "B": 1.0})
+    mb = MicroBatcher(None, pol, autostart=False)
+    for i in range(40):
+        mb._enqueue(_Request("search", np.zeros((1, 4), np.float32), i,
+                             time.perf_counter(), "B"))
+    for i in range(40):
+        mb._enqueue(_Request("search", np.zeros((1, 4), np.float32), i,
+                             time.perf_counter(), "A"))
+    for _ in range(2):
+        win = mb._take_window()
+        kinds = [r.tenant for r in win]
+        assert kinds.count("A") == 12 and kinds.count("B") == 4
+        for t in ("A", "B"):   # per-tenant FIFO (k carries arrival index)
+            ks = [r.k for r in win if r.tenant == t]
+            assert ks == sorted(ks)
+    # FIFO default untouched: no weights, no wfq flag
+    assert not BatchPolicy().fair_queue
+
+
+def test_wfq_deficit_resets_when_backlog_drains():
+    """A tenant that goes idle must not bank credit: classic DRR drops
+    the deficit once its queue empties (the tenant is pruned from the
+    service list entirely, so long-lived servers with many tenant keys
+    don't grow the sweep without bound)."""
+    from repro.serve.batcher import _Request
+
+    pol = BatchPolicy(max_batch=8, wfq=True, wfq_quantum=1,
+                      tenant_weight={"A": 5.0})
+    mb = MicroBatcher(None, pol, autostart=False)
+    mb._enqueue(_Request("search", np.zeros((1, 4), np.float32), 0,
+                         time.perf_counter(), "A"))
+    win = mb._take_window()
+    assert [r.tenant for r in win] == ["A"]
+    assert mb._deficit.get("A", 0.0) == 0.0
+    assert "A" not in mb._rr
+
+
+def test_wfq_rotating_start_prevents_tail_starvation():
+    """Regression: a window that fills before the sweep reaches the
+    tail tenants must not restart at the same head tenant — the start
+    rotates, so every backlogged tenant is served within a bounded
+    number of windows."""
+    from repro.serve.batcher import _Request
+
+    tenants = [f"t{i}" for i in range(9)]
+    pol = BatchPolicy(max_batch=8, wfq=True, wfq_quantum=8)
+    mb = MicroBatcher(None, pol, autostart=False)
+    for _ in range(4):                       # deep equal backlogs
+        for t in tenants:
+            mb._enqueue(_Request("search", np.zeros((1, 4), np.float32),
+                                 0, time.perf_counter(), t))
+    served = []
+    for _ in range(9):                       # 9 windows x 8 rows
+        served.extend(r.tenant for r in mb._take_window())
+    from collections import Counter
+    counts = Counter(served)
+    assert set(counts) == set(tenants), "no tenant may be starved"
+    assert max(counts.values()) - min(counts.values()) <= 8
+
+
+def test_wfq_zero_weight_tenant_cannot_stall_the_drain():
+    """Regression: a zero/near-zero weight must not busy-spin the drain
+    loop (which runs while HOLDING the batcher lock) — when no tenant
+    can afford its queue head in a full sweep, the head is forced
+    through instead of spinning."""
+    from repro.serve.batcher import _Request
+
+    pol = BatchPolicy(max_batch=64, wfq=True, wfq_quantum=8,
+                      tenant_weight={"bad": 0.0})
+    mb = MicroBatcher(None, pol, autostart=False)
+    for _ in range(3):
+        mb._enqueue(_Request("search", np.zeros((32, 4), np.float32), 0,
+                             time.perf_counter(), "bad"))
+    t0 = time.perf_counter()
+    win = mb._take_window()
+    assert time.perf_counter() - t0 < 1.0, "drain must not spin"
+    assert sum(r.vecs.shape[0] for r in win) >= 32
+
+
+def test_wfq_serves_correct_results_and_share(engine, small_data):
+    """End-to-end through the dispatcher: fair-queued requests still get
+    their own correct answers, and stats()["tenants"] reports the
+    served-rows share."""
+    _, queries = small_data
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=64, max_wait_s=0.05,
+                                          wfq=True,
+                                          tenant_weight={"a": 2.0}),
+                      autostart=False)
+    futs = [(i, mb.submit_search(queries[i], k=10,
+                                 tenant="a" if i % 4 else "b"))
+            for i in range(8)]
+    mb.start()
+    serial = {i: f.result(timeout=60) for i, f in futs}
+    mb.stop()
+    for i, (d, g, _) in serial.items():
+        assert g.shape == (1, 10)
+    snap = mb.metrics.snapshot()
+    t = snap["tenants"]
+    assert t["a"]["served"] == 6 and t["b"]["served"] == 2
+    assert t["a"]["share"] == pytest.approx(0.75)
+    assert t["b"]["share"] == pytest.approx(0.25)
+
+
+def test_wfq_preserves_per_tenant_insert_search_order(engine, small_data):
+    """Within one tenant, a search queued after an insert still observes
+    the inserted vector under WFQ (cross-tenant reorder is allowed,
+    within-tenant order is not)."""
+    data, queries = small_data
+    mb = MicroBatcher(engine, BatchPolicy(max_wait_s=0.05, wfq=True),
+                      autostart=False)
+    new = data[11] + np.float32(0.0011)
+    noise = [mb.submit_search(queries[i % 8], k=5, tenant="other")
+             for i in range(4)]
+    f_ins = mb.submit_insert(new, tenant="x")
+    f_post = mb.submit_search(new, k=3, tenant="x")
+    mb.start()
+    gids = f_ins.result(timeout=60)
+    _, g_post, _ = f_post.result(timeout=60)
+    for f in noise:
+        f.result(timeout=60)
+    mb.stop()
+    assert gids[0] in g_post[0]
 
 
 def test_vectorized_merge_matches_host_loop_merge():

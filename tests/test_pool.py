@@ -14,9 +14,13 @@ from repro.core.cost_model import RDMA_100G, TPU_ICI, Fabric, NetLedger
 from repro.core.hnsw import HNSWParams
 from repro.core.layout import build_store
 from repro.core.meta import build_meta
-from repro.pool import LocalPool, SimulatedRDMAPool
+from repro.pool import LocalPool, ShardedPool, SimulatedRDMAPool
+from repro.pool.placement import (FrequencyAwarePlacement,
+                                  RoundRobinPlacement,
+                                  SizeBalancedPlacement)
 
 POOLS = ("local", "sim_rdma")
+SHARD_COUNTS = (1, 2, 4)
 CFG = dict(mode="full", search_mode="scan", n_rep=12, b=3, ef=32,
            cache_frac=0.25, seed=3, fabric=RDMA_100G)
 
@@ -135,6 +139,214 @@ def test_raw_verbs_agree_across_transports(pds):
     # per-verb sim breakdown covers exactly the charged verbs
     assert set(sp.sim_s) == {"read_spans", "append"}
     assert sp.sim_total_s > 0
+
+
+# ------------------------------------------------------------ sharded
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+@pytest.mark.parametrize("mode", ["naive", "full"])
+def test_sharded_bit_identical_search_insert(pds, mode, quant):
+    """ShardedPool is a MemoryPool: search and insert results are
+    bit-identical to LocalPool for 1, 2, and 4 shards under every
+    scheme x quant config (accounting may differ — per-destination
+    doorbell batches and parallel fan-out change trip counts, never
+    results)."""
+    data, queries = pds
+    base = _build("local", data, mode=mode, quant=quant)
+    d0, g0, _ = base.search(queries, k=10)
+    new = queries[:3] + 0.001
+    engines = {ns: _build("sharded", data, mode=mode, quant=quant,
+                          n_shards=ns) for ns in SHARD_COUNTS}
+    for ns, eng in engines.items():
+        d, g, st = eng.search(queries, k=10)
+        assert np.array_equal(g0, g), (ns, "gids")
+        assert np.array_equal(d0, d), (ns, "dists")
+        assert st["pool"]["kind"] == "sharded"
+        assert st["pool"]["n_shards"] == ns
+        assert sum(st["pool"]["groups_by_shard"]) == base.store.spec.n_groups
+    gids0 = base.insert(new)
+    d1, g1, _ = base.search(queries[:8], k=10)
+    for ns, eng in engines.items():
+        gids = eng.insert(new)
+        assert np.array_equal(gids0, gids), ns
+        d, g, _ = eng.search(queries[:8], k=10)
+        assert np.array_equal(g1, g), (ns, "post-insert gids")
+        assert np.array_equal(d1, d), (ns, "post-insert dists")
+
+
+def test_sharded_one_shard_accounting_matches_local(pds):
+    """With a single shard the fan-out reduces to the child: counted
+    network (trips, descriptors, bytes) matches LocalPool exactly."""
+    data, queries = pds
+    e0 = _build("local", data)
+    e1 = _build("sharded", data, n_shards=1)
+    _, _, st0 = e0.search(queries, k=10)
+    _, _, st1 = e1.search(queries, k=10)
+    for key in ("round_trips", "descriptors", "bytes", "bytes_saved"):
+        assert st0["net"][key] == st1["net"][key], key
+
+
+@pytest.mark.parametrize("parallel", [True, False])
+def test_sharded_verb_parity_summed_ledgers(pds, parallel):
+    """Pool-side totals == the sum of every NetLedger the engine
+    charged, and the per-shard children sum to the pool on bytes and
+    descriptors; trips reduce by max across shards in parallel mode
+    (== the per-shard sum only in serial mode)."""
+    data, queries = pds
+    eng = _build("sharded", data, quant="int8", n_shards=3,
+                 shard_parallel=parallel)
+    totals = {"round_trips": 0.0, "descriptors": 0.0, "bytes": 0.0}
+
+    def add(net):
+        for k in totals:
+            totals[k] += net[k]
+
+    for i in range(3):
+        _, _, st = eng.search(queries[i * 8:(i + 1) * 8], k=10)
+        add(st["net"])
+    eng.insert(queries[:2] + 0.001)
+    add(eng._last_insert_net)
+    snap = eng.pool.snapshot()
+    for k in totals:
+        assert snap["totals"][k] == pytest.approx(totals[k]), k
+    child_sum = {k: sum(s["totals"][k] for s in snap["shards"])
+                 for k in totals}
+    assert child_sum["bytes"] == pytest.approx(snap["totals"]["bytes"])
+    assert child_sum["descriptors"] == pytest.approx(
+        snap["totals"]["descriptors"])
+    if parallel:
+        assert snap["totals"]["round_trips"] <= child_sum["round_trips"]
+    else:
+        assert snap["totals"]["round_trips"] == pytest.approx(
+            child_sum["round_trips"])
+    assert snap["verbs"]["append"] == 2
+
+
+def test_sharded_migration_keeps_results_identical(pds):
+    """Frequency-aware placement migrates hot groups under a skewed
+    workload; results before/after migration (and after a subsequent
+    insert) stay bit-identical to LocalPool."""
+    data, queries = pds
+    slow = Fabric("slow", rtt_s=100e-6, bw_Bps=0.5e9, per_op_s=5e-6,
+                  max_doorbell=32)
+    base = _build("local", data, cache_frac=0.1)
+    eng = _build("sharded", data, cache_frac=0.1, n_shards=2,
+                 shard_transport="sim_rdma",
+                 shard_fabrics=(RDMA_100G, slow),
+                 placement=FrequencyAwarePlacement(migrate_every=24,
+                                                   max_moves=4))
+    hot = np.tile(queries[:4], (4, 1))
+    for _ in range(8):
+        dh, gh, st = eng.search(hot, k=10)
+    dh0, gh0, _ = base.search(hot, k=10)
+    assert np.array_equal(dh0, dh) and np.array_equal(gh0, gh)
+    snap = st["pool"]
+    assert snap["migration"]["n"] >= 1, "skewed load should migrate"
+    d0, g0, _ = base.search(queries, k=10)
+    d1, g1, _ = eng.search(queries, k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+    base.insert(queries[:2] + 0.002)
+    eng.insert(queries[:2] + 0.002)
+    d0, g0, _ = base.search(queries[:8], k=10)
+    d1, g1, _ = eng.search(queries[:8], k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+
+
+def test_sharded_hetero_fabric_straggler_dominates(pds):
+    """Heterogeneous shards, parallel fan-out: the modeled time of every
+    doorbell fan-out is the slowest shard's slice, so the pool clock is
+    bounded below by the straggler and well under the serial sum."""
+    data, _ = pds
+    fast = RDMA_100G
+    slow = Fabric("slow", rtt_s=200e-6, bw_Bps=0.125e9, per_op_s=25e-6,
+                  max_doorbell=32)
+
+    def run(parallel):
+        s, _ = _tiny_store(data)
+        pool = ShardedPool(
+            s, [lambda st: SimulatedRDMAPool(st, fabric=fast),
+                lambda st: SimulatedRDMAPool(st, fabric=slow)],
+            placement=RoundRobinPlacement(), parallel=parallel)
+        led = NetLedger(RDMA_100G)
+        for i in range(3):
+            pool.read_spans(np.arange(8), ledger=led, doorbell=4)
+        pool.post_row_reads([(p, 2) for p in range(8)], ledger=led,
+                            doorbell=4)
+        return pool, led
+
+    par, led_p = run(True)
+    ser, led_s = run(False)
+    fast_t = par.children[0].sim_total_s
+    slow_t = par.children[1].sim_total_s
+    assert slow_t > 10 * fast_t          # it IS a straggler
+    # parallel: critical path == the straggler's slices
+    assert slow_t <= par.sim_total_s <= slow_t * 1.05
+    # serial: every slice pays — and the charged trips double too
+    assert ser.sim_total_s == pytest.approx(fast_t + slow_t)
+    assert led_s.round_trips > led_p.round_trips
+    # data and bytes never depend on the reduction
+    assert led_s.bytes == led_p.bytes
+    assert led_s.descriptors == led_p.descriptors
+
+
+def test_sharded_raw_row_verbs_match_local(pds):
+    """Row-granular verbs fan out by owning shard and reassemble into
+    exactly what a single pool returns (dead -1 lanes included)."""
+    data, _ = pds
+    s0, _ = _tiny_store(data)
+    s1, _ = _tiny_store(data)
+    lp = LocalPool(s0)
+    sp = ShardedPool(s1, [lambda st: LocalPool(st) for _ in range(3)])
+    rows = np.array([[0, 65, 130], [200, -1, 7]], np.int32)
+    a = np.asarray(lp.read_rows(rows))
+    b = np.asarray(sp.read_rows(rows))
+    live = rows >= 0
+    assert np.array_equal(a[live], b[live])
+
+
+def test_sim_transport_parallel_fanout_hook(pds):
+    """The fan-out hook on SimulatedRDMAPool itself: scalar charges are
+    bit-identical with or without ``parallel``; per-destination vector
+    charges reduce by max (parallel) vs sum (serial)."""
+    data, _ = pds
+    s0, _ = _tiny_store(data)
+    s1, _ = _tiny_store(data)
+    ser = SimulatedRDMAPool(s0, fabric=RDMA_100G, parallel=False)
+    par = SimulatedRDMAPool(s1, fabric=RDMA_100G, parallel=True)
+    led_a, led_b = NetLedger(RDMA_100G), NetLedger(RDMA_100G)
+    ser.read_spans(np.arange(6), ledger=led_a, doorbell=3)
+    par.read_spans(np.arange(6), ledger=led_b, doorbell=3)
+    assert ser.sim_s == par.sim_s          # scalar path: identical
+    assert led_a.as_dict() == led_b.as_dict()
+    ser._transport("fanout", [1e6, 2e6], [4, 4], [1, 1])
+    par._transport("fanout", [1e6, 2e6], [4, 4], [1, 1])
+    assert ser.sim_s["fanout"] == pytest.approx(
+        ser.model_dt(1e6, 4, 1) + ser.model_dt(2e6, 4, 1))
+    assert par.sim_s["fanout"] == pytest.approx(par.model_dt(2e6, 4, 1))
+
+
+# ------------------------------------------------------------ placement
+
+def test_placement_round_robin_and_size_balanced():
+    rr = RoundRobinPlacement().place(10, 3)
+    assert rr.tolist() == [0, 1, 2, 0, 1, 2, 0, 1, 2, 0]
+    sizes = np.array([100, 1, 1, 1, 50, 49, 1, 1])
+    owner = SizeBalancedPlacement().place(8, 2, group_sizes=sizes)
+    loads = [sizes[owner == s].sum() for s in (0, 1)]
+    assert abs(loads[0] - loads[1]) <= sizes.max() // 2
+
+
+def test_placement_freq_moves_hot_to_cheap_shard():
+    pol = FrequencyAwarePlacement(migrate_every=8, max_moves=2,
+                                  min_gain=0.01)
+    owner = pol.place(6, 2)               # round-robin start
+    due = False
+    for _ in range(20):                   # group 0 (shard 0) is blazing hot
+        due = pol.note_access(0) or due
+    assert due
+    # shard 1 is 10x faster: the hot group must move there
+    moves = pol.plan_moves(owner, shard_costs=[1.0, 0.1])
+    assert (0, 0, 1) in moves
 
 
 def test_sim_latency_scales_with_fabric(pds):

@@ -15,7 +15,8 @@ except ImportError:         # CI fast tier / bare containers
     HAVE_HYPOTHESIS = False
 
 from repro.core.scheduler import (LRUCacheState, TieredCacheState,
-                                  naive_plan, plan_batch)
+                                  doorbell_chunks_sharded, naive_plan,
+                                  plan_batch)
 
 
 def _random_topb(rng, B, b, P):
@@ -68,6 +69,30 @@ def test_rounds_respect_cache_capacity():
         assert len(set(rnd.fetch_slots.tolist())) == len(rnd.fetch_pids)
         for db in rnd.doorbells:
             assert len(db) <= 3
+
+
+def test_sharded_doorbell_chunks_never_mix_destinations():
+    """Descriptor batches are formed per destination shard: every chunk
+    is single-owner, <= doorbell long, and the union is the input."""
+    items = np.arange(17, dtype=np.int64)
+    owner = lambda p: p % 3                               # noqa: E731
+    chunks = doorbell_chunks_sharded(items, 4, owner)
+    seen = []
+    for db in chunks:
+        assert len(db) <= 4
+        assert len({owner(int(x)) for x in db}) == 1
+        seen.extend(int(x) for x in db)
+    assert sorted(seen) == items.tolist()
+    # owner_of=None degrades to plain sequential chunking
+    plain = doorbell_chunks_sharded(items, 4, None)
+    assert [len(c) for c in plain] == [4, 4, 4, 4, 1]
+    # plan_batch threads the owner through to each round's doorbells
+    rng = np.random.default_rng(9)
+    plan = plan_batch(_random_topb(rng, 30, 4, 50), LRUCacheState(6),
+                      doorbell=4, owner_of=owner)
+    for rnd in plan.rounds:
+        for db in rnd.doorbells:
+            assert len({owner(int(x)) for x in db}) == 1
 
 
 def test_naive_plan_counts_all_pairs():

@@ -21,8 +21,16 @@ modeled us/query, per-shard wire bytes and their imbalance, and the
 migration count — the frequency-aware policy must beat round-robin
 here by moving hot groups off the straggler.
 
+The ``--transport`` sweep runs the same workload through LocalPool,
+SimulatedRDMAPool, and a REAL loopback ``RemotePool`` (one forked
+``PoolServer`` process per row): next to the ledger-modeled bytes it
+reports the *measured* wire payload bytes and frames, and asserts
+span-verb parity (measured == modeled) — the model validated against
+an actual wire instead of trusted.
+
 Writes ``BENCH_pool.json``.  ``--smoke`` is the CI crash check: tiny
-config, asserts nothing about perf.
+config, asserts nothing about perf (the transport parity assert still
+runs — it is a correctness property, not a perf bar).
 """
 from __future__ import annotations
 
@@ -71,6 +79,9 @@ def run_cell(data, queries, *, mode: str, quant: str, fabric: Fabric,
     snap = eng.pool.snapshot()
     tot = snap["totals"]
     return {"mode": mode, "quant": quant, "fabric": fabric.name,
+            # full calibration straight from the pool snapshot, so the
+            # row is self-describing (rtt/bw/per_op/max_doorbell)
+            "fabric_params": snap["fabric"],
             "rtt_us": fabric.rtt_s * 1e6,
             "bw_GBps": fabric.bw_Bps / 1e9,
             "round_trips_per_q": round(tot["round_trips"] / nq, 3),
@@ -80,6 +91,75 @@ def run_cell(data, queries, *, mode: str, quant: str, fabric: Fabric,
             "sim_breakdown_us": {v: round(s * 1e6, 2)
                                  for v, s in snap["sim_s"].items()},
             "wall_s": round(wall, 2)}
+
+
+def run_transport_cell(data, queries, *, transport: str, n_rep: int,
+                       n_batches: int, endpoint=None) -> dict:
+    """One workload through one transport; modeled ledger numbers next
+    to (for remote) the measured wire traffic."""
+    cfg = EngineConfig(mode="full", search_mode="scan", b=4, ef=48,
+                       n_rep=n_rep, cache_frac=0.25, doorbell=16,
+                       fabric=RDMA_100G, seed=0, quant="none",
+                       pool=transport,
+                       endpoints=(endpoint,) if endpoint else None)
+    eng = DHNSWEngine(cfg).build(data)
+    per = max(len(queries) // n_batches, 1)
+    nq = 0
+    t0 = time.perf_counter()
+    for i in range(n_batches):
+        qb = queries[i * per:(i + 1) * per]
+        eng.search(qb, k=10)
+        nq += len(qb)
+    wall = time.perf_counter() - t0
+    snap = eng.pool.snapshot()
+    tot = snap["totals"]
+    row = {"transport": transport,
+           "round_trips_per_q": round(tot["round_trips"] / nq, 3),
+           "descriptors_per_q": round(tot["descriptors"] / nq, 3),
+           "model_kb_per_q": round(tot["bytes"] / nq / 1e3, 2),
+           "wall_s": round(wall, 2)}
+    if transport == "remote":
+        wire = snap["wire"]
+        wvm = snap["wire_vs_model"]["read_spans"]
+        # the whole point of the row: the ledger's modeled span bytes
+        # must equal what actually crossed the loopback socket
+        assert wvm["measured"] == wvm["modeled"], wvm
+        row.update({
+            "endpoint": snap["endpoint"],
+            "wire_kb_per_q": round(
+                wire["payload_by_verb"]["read_spans"] / nq / 1e3, 2),
+            "wire_frames": wire["frames_tx"],
+            "wire_frame_overhead_kb": round(
+                (wire["bytes_rx"] + wire["bytes_tx"]
+                 - sum(wire["payload_by_verb"].values())) / 1e3, 2),
+            "span_wire_vs_model": wvm["ratio"]})
+    elif transport == "sim_rdma":
+        row["sim_us_per_q"] = round(snap["sim_total_s"] / nq * 1e6, 3)
+        row["fabric"] = snap["fabric"]
+    return row
+
+
+def run_transports(*, smoke: bool = False) -> list[dict]:
+    """LocalPool vs SimulatedRDMAPool vs a real loopback RemotePool on
+    the same workload (one forked server process)."""
+    from repro.net import spawn_pool_servers
+    n, n_rep, n_batches = (1500, 12, 2) if smoke else (20_000, 64, 4)
+    ds = sift_like(n=n, n_queries=128 if smoke else 256, seed=0)
+    rows = []
+    print(f"{'transport':>10s} {'rt/q':>7s} {'model KB/q':>11s} "
+          f"{'wire KB/q':>10s} {'wall s':>7s}")
+    with spawn_pool_servers(1) as endpoints:
+        for transport in ("local", "sim_rdma", "remote"):
+            row = run_transport_cell(
+                ds.data, ds.queries, transport=transport, n_rep=n_rep,
+                n_batches=n_batches,
+                endpoint=endpoints[0] if transport == "remote" else None)
+            rows.append(row)
+            print(f"{transport:>10s} {row['round_trips_per_q']:7.3f} "
+                  f"{row['model_kb_per_q']:11.2f} "
+                  f"{row.get('wire_kb_per_q', float('nan')):10.2f} "
+                  f"{row['wall_s']:7.2f}", flush=True)
+    return rows
 
 
 def straggler_fabrics(n_shards: int, slowdown: float = 8.0) -> tuple:
@@ -161,8 +241,18 @@ def run_shards(*, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def _load_blob(out: str, fallback: dict) -> dict:
+    """Partial sweeps refresh only their table: keep any previously
+    written rows (and their metadata) instead of clobbering them."""
+    try:
+        with open(out) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return fallback
+
+
 def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
-        shards_only: bool = False) -> dict:
+        shards_only: bool = False, transport_only: bool = False) -> dict:
     if smoke:
         n, n_rep, n_batches = 1500, 12, 2
         modes = ("full",)
@@ -171,6 +261,15 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
         n, n_rep, n_batches = 20_000, 64, 4
         modes = ("naive", "no_doorbell", "full")
         quants = ("none", "int8")
+    if transport_only:
+        blob = _load_blob(out, {"bench": "pool", "smoke": smoke,
+                                "rows": []})
+        blob["transport_rows"] = run_transports(smoke=smoke)
+        with open(out, "w") as f:
+            json.dump(blob, f, indent=2)
+        print(f"wrote {out} ({len(blob['transport_rows'])} "
+              f"transport rows)")
+        return blob
     rows = []
     if not shards_only:
         ds = sift_like(n=n, n_queries=256, seed=0)
@@ -190,22 +289,19 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
 
     shard_rows = run_shards(smoke=smoke)
     if shards_only:
-        # refresh only the shard table: keep any previously written
-        # fabric rows (and their metadata) instead of clobbering them
-        try:
-            with open(out) as f:
-                blob = json.load(f)
-        except (OSError, ValueError):
-            blob = {"bench": "pool", "smoke": smoke, "rows": rows}
+        blob = _load_blob(out, {"bench": "pool", "smoke": smoke,
+                                "rows": rows})
         blob["shard_rows"] = shard_rows
     else:
+        transport_rows = run_transports(smoke=smoke)
         blob = {"bench": "pool", "smoke": smoke, "n": n, "n_rep": n_rep,
                 "n_batches": n_batches, "rows": rows,
-                "shard_rows": shard_rows}
+                "shard_rows": shard_rows,
+                "transport_rows": transport_rows}
     with open(out, "w") as f:
         json.dump(blob, f, indent=2)
-    print(f"wrote {out} ({len(blob['rows'])} + {len(shard_rows)} "
-          f"shard rows)")
+    print(f"wrote {out} ({len(blob['rows'])} + {len(shard_rows)} shard "
+          f"+ {len(blob.get('transport_rows', []))} transport rows)")
     return blob
 
 
@@ -215,9 +311,13 @@ def main():
                     help="tiny CI config; crash-check only")
     ap.add_argument("--shards", action="store_true",
                     help="run only the shard count x placement sweep")
+    ap.add_argument("--transport", action="store_true",
+                    help="run only the transport comparison (local vs "
+                         "sim_rdma vs loopback remote; spawns a server)")
     ap.add_argument("--out", default="BENCH_pool.json")
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out, shards_only=args.shards)
+    run(smoke=args.smoke, out=args.out, shards_only=args.shards,
+        transport_only=args.transport)
 
 
 if __name__ == "__main__":

@@ -9,8 +9,15 @@ batches — the paper's §3.3 batched query-aware loading assembled across
 requesters — and the demo prints the resulting throughput, latency
 percentiles, and stage breakdown, next to the same offered load served
 one request at a time.
+
+``--pool remote`` serves through REAL memory-node processes: pass
+``--endpoints host:port,host:port`` to use running ``repro.net.server``
+instances, or pass nothing and the demo forks ``--shards`` loopback
+servers itself.  The summary then includes a per-endpoint verb/byte
+table with the *measured* wire traffic next to the modeled ledger.
 """
 import argparse
+import contextlib
 import threading
 import time
 
@@ -60,25 +67,72 @@ def main():
                     help="serve through the int8 quantized tier "
                          "(staged search; watch net.bytes_saved)")
     ap.add_argument("--pool", default="local",
-                    choices=("local", "sim_rdma", "sharded"),
+                    choices=("local", "sim_rdma", "sharded", "remote"),
                     help="memory-pool transport; 'sharded' splits the "
-                         "region across --shards memory nodes")
+                         "region across --shards memory nodes; 'remote' "
+                         "serves through TCP pool-server processes")
     ap.add_argument("--shards", type=int, default=2,
-                    help="memory nodes under --pool sharded")
+                    help="memory nodes under --pool sharded / remote")
     ap.add_argument("--placement", default="round_robin",
                     choices=("round_robin", "size_balanced", "freq"),
                     help="group placement policy under --pool sharded")
+    ap.add_argument("--endpoints", default="",
+                    help="comma-separated host:port pool servers for "
+                         "--pool remote (empty = fork --shards loopback "
+                         "servers)")
     args = ap.parse_args()
 
-    print(f"indexing {args.n} vectors...")
-    ds = sift_like(n=args.n, n_queries=64, seed=0)
-    eng = DHNSWEngine(EngineConfig(mode="full", search_mode="scan", b=3,
-                                   ef=32, n_rep=64, cache_frac=0.15,
-                                   doorbell=16,
-                                   quant="int8" if args.quant else "none",
-                                   pool=args.pool, n_shards=args.shards,
-                                   placement=args.placement)
-                      ).build(ds.data)
+    endpoints = tuple(e for e in args.endpoints.split(",") if e) or None
+    with contextlib.ExitStack() as stack:
+        if args.pool == "remote" and endpoints is None:
+            from repro.net import spawn_pool_servers
+            print(f"forking {args.shards} loopback pool servers...")
+            endpoints = tuple(stack.enter_context(
+                spawn_pool_servers(args.shards)))
+            print("  endpoints:", ", ".join(endpoints))
+
+        print(f"indexing {args.n} vectors...")
+        ds = sift_like(n=args.n, n_queries=64, seed=0)
+        eng = DHNSWEngine(EngineConfig(mode="full", search_mode="scan", b=3,
+                                       ef=32, n_rep=64, cache_frac=0.15,
+                                       doorbell=16,
+                                       quant="int8" if args.quant else "none",
+                                       pool=args.pool, n_shards=args.shards,
+                                       placement=args.placement,
+                                       endpoints=endpoints)
+                          ).build(ds.data)
+        run_demo(args, ds, eng)
+
+
+def print_endpoint_table(pool_snap):
+    """Per-endpoint verb/byte table for remote transports: the measured
+    wire traffic of each pool-server process."""
+    shards = (pool_snap.get("shards", [])
+              if pool_snap.get("kind") == "sharded" else [pool_snap])
+    remote = [s for s in shards if s.get("kind") == "remote"]
+    if not remote:
+        return
+    print(f"\n  remote endpoints (measured wire traffic):")
+    print(f"    {'endpoint':>21s} {'frames':>7s} {'MB->srv':>8s} "
+          f"{'MB<-srv':>8s} {'span rds':>8s} {'row rds':>8s} "
+          f"{'appends':>7s} {'wire==model':>11s}")
+    for s in remote:
+        w, verbs = s["wire"], s["verbs"]
+        spans = sum(v for k, v in verbs.items()
+                    if k.startswith("read_spans"))
+        rows = verbs.get("read_rows", 0) + verbs.get("read_quant_rows", 0)
+        wvm = s.get("wire_vs_model", {})
+        span_ok = all(
+            v["measured"] == v["modeled"]
+            for k, v in wvm.items() if k.startswith("read_spans")) \
+            if wvm else True
+        print(f"    {s['endpoint']:>21s} {w['frames_tx']:7d} "
+              f"{w['bytes_tx'] / 1e6:8.2f} {w['bytes_rx'] / 1e6:8.2f} "
+              f"{spans:8d} {rows:8d} {verbs.get('append', 0):7d} "
+              f"{'yes' if span_ok else 'NO':>11s}")
+
+
+def run_demo(args, ds, eng):
     # warm the pow2 batch shapes the batcher will produce
     b = 1
     while b <= 2 * args.clients:
@@ -122,7 +176,13 @@ def main():
           f"{net['round_trips']:.0f} round trips"
           + (f", {net['bytes_saved'] / 1e6:.2f} MB saved by the int8 tier"
              if net["bytes_saved"] else ""))
+    if "wire_frames" in net:
+        print(f"  wire (measured): {net['wire_bytes_rx'] / 1e6:.2f} MB "
+              f"from servers / {net['wire_bytes_tx'] / 1e6:.2f} MB to "
+              f"servers over {net['wire_frames']} frames")
     pool = snap.get("pool")
+    if pool:
+        print_endpoint_table(pool)
     if pool and pool.get("kind") == "sharded":
         print(f"\n  sharded pool: {pool['n_shards']} memory nodes, "
               f"placement={pool['placement']}, "

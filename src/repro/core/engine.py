@@ -28,7 +28,13 @@ transport:
                    the pre-pool monolithic engine);
 * ``"sim_rdma"`` — same data path plus a per-verb latency/bandwidth
                    model, so ``stats["pool"]`` carries a modeled network
-                   time breakdown next to the counted ``stats["net"]``.
+                   time breakdown next to the counted ``stats["net"]``;
+* ``"sharded"``  — the region split group-granularly across n_shards
+                   child pools with per-destination doorbell fan-out;
+* ``"remote"``   — a REAL transport (``repro/net``): verbs marshaled
+                   over TCP to ``PoolServer`` processes named by
+                   ``endpoints``; several endpoints shard over one
+                   RemotePool child per server process.
 
 The compute/network split follows the paper's methodology: device (or
 host-jax) wall time is measured for meta-HNSW and sub-HNSW compute; the
@@ -48,7 +54,7 @@ from repro.core.cost_model import (RDMA_100G, TPU_ICI, Fabric,  # noqa: F401
 from repro.core.scheduler import pow2_pad  # noqa: F401  (re-export)
 
 MODES = ("naive", "no_doorbell", "full")
-POOLS = ("local", "sim_rdma", "sharded")
+POOLS = ("local", "sim_rdma", "sharded", "remote")
 
 
 @dataclass
@@ -79,8 +85,14 @@ class EngineConfig:
     # bit-identical; "sim_rdma" adds the per-verb latency model;
     # "sharded" splits the region group-granularly across n_shards
     # child pools (per-shard doorbell fan-out, pluggable placement)
-    pool: str = "local"             # local | sim_rdma | sharded
+    pool: str = "local"             # local | sim_rdma | sharded | remote
     n_shards: int = 2               # shards under pool="sharded"
+    # pool="remote": TCP pool-server endpoints ("host:port" strings or
+    # (host, port) tuples).  One endpoint = a single RemotePool; several
+    # = a ShardedPool whose children are RemotePools, one per server
+    # process (placement/shard_parallel apply).  Also used by
+    # pool="sharded" + shard_transport="remote" (len == n_shards).
+    endpoints: Optional[tuple] = None
     # placement: policy name ("round_robin" | "size_balanced" | "freq")
     # or a ready PlacementPolicy instance (one engine per instance —
     # policies are stateful)
@@ -119,8 +131,15 @@ class DHNSWEngine:
             self.cfg.quant_kernel
         if self.cfg.pool == "sharded":
             assert self.cfg.n_shards >= 1, self.cfg.n_shards
-            assert self.cfg.shard_transport in ("local", "sim_rdma"), \
+            assert self.cfg.shard_transport in ("local", "sim_rdma",
+                                                "remote"), \
                 self.cfg.shard_transport
+            if self.cfg.shard_transport == "remote":
+                assert (self.cfg.endpoints
+                        and len(self.cfg.endpoints) == self.cfg.n_shards), \
+                    "shard_transport='remote' needs one endpoint per shard"
+        if self.cfg.pool == "remote":
+            assert self.cfg.endpoints, "pool='remote' needs endpoints"
         self.client = ComputeClient(self.cfg, make_pool_factory(self.cfg))
 
     # ------------------------------------------------------------ lifecycle

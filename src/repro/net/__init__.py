@@ -1,0 +1,24 @@
+"""Real multi-node transport for the memory-pool boundary.
+
+Everything before this subsystem *modeled* disaggregation in-process
+(``LocalPool`` / ``SimulatedRDMAPool`` / ``ShardedPool``).  ``repro.net``
+makes the index bytes actually cross a wire:
+
+* ``wire.py``   — compact length-prefixed binary framing for every
+                  ``MemoryPool`` verb; descriptor batches travel as
+                  contiguous numpy buffers, one doorbell batch per frame.
+* ``server.py`` — ``PoolServer``: a standalone memory-node process
+                  (``python -m repro.net.server``) hosting a region and
+                  serving verbs over TCP, plus the ``spawn_pool_servers``
+                  loopback harness tests and benchmarks fork.
+* ``client.py`` — ``RemotePool``: a full ``MemoryPool`` implementation
+                  that marshals verbs to a server, charges the caller's
+                  ``NetLedger`` from measured wire bytes (cross-checked
+                  against the ``Fabric`` model), and plugs into
+                  ``ShardedPool`` so an N-shard pool spans N processes.
+"""
+from repro.net.client import PoolUnavailableError, RemotePool, parse_endpoint
+from repro.net.server import HostRegion, PoolServer, spawn_pool_servers
+
+__all__ = ["RemotePool", "PoolUnavailableError", "parse_endpoint",
+           "PoolServer", "HostRegion", "spawn_pool_servers"]

@@ -1,0 +1,414 @@
+"""RemotePool — the MemoryPool verbs marshaled over a real wire.
+
+A full ``MemoryPool`` implementation whose region lives in a
+``PoolServer`` process: span/row reads are request/response frames
+(doorbell batches pipelined — k request frames on the socket before the
+first response is read), appends are one-sided WRITE frames, and repack/
+migration land as block-granular region writes.  Unlike every earlier
+transport the bytes here actually cross a socket, so the pool keeps a
+``wire`` tally of *measured* frames and payload bytes per verb next to
+the modeled charge, and ``snapshot()["wire_vs_model"]`` cross-checks the
+two — the protocol is constructed so that data-verb payloads equal the
+``Fabric`` model's priced bytes exactly (see ``wire.py``).
+
+Client-side mirror: the pool keeps the host ``Store`` it was built from
+(the compute node built the index; ATTACH uploaded it).  The mirror is
+**control-plane only** — the cached global metadata block the paper lets
+compute instances hold, plus the write staging repack needs.  Every
+index byte the search path consumes arrives through a wire verb; writes
+are applied to both sides deterministically (``layout.insert_vector``
+here, the same routine in the server) and the append response slot is
+cross-checked so the two regions can never silently diverge.
+
+Accounting parity: ``NetLedger`` charges use the measured response
+payload for span reads (== the modeled bytes by protocol construction)
+and the same model formulas as ``LocalPool`` for the ``post_*``
+accounting verbs — so a RemotePool engine's ``stats["net"]`` is
+bit-identical to LocalPool's, while ``snapshot()["wire"]`` additionally
+reports what really moved.
+
+Failure mode: any transport error (refused, reset, timeout, EOF) closes
+the connection and raises ``PoolUnavailableError`` — a killed server is
+a clean exception at the next verb, never a hang.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from collections import Counter
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as LA
+from repro.core.cost_model import RDMA_100G, Fabric, NetLedger
+from repro.core.layout import Store
+from repro.core.scheduler import doorbell_chunks
+from repro.net import wire as W
+from repro.pool.protocol import MemoryPool, _fresh_totals, span_wire_bytes
+
+
+class PoolUnavailableError(ConnectionError):
+    """The pool server cannot be reached (dead, unreachable, or timed
+    out).  Raised instead of hanging on a vanished memory node."""
+
+
+Endpoint = Union[str, tuple]
+
+
+def parse_endpoint(ep: Endpoint) -> tuple:
+    """'host:port' or (host, port) -> (host, port)."""
+    if isinstance(ep, str):
+        host, _, port = ep.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad endpoint {ep!r} (want host:port)")
+        return host, int(port)
+    host, port = ep
+    return str(host), int(port)
+
+
+class RemotePool(MemoryPool):
+
+    kind = "remote"
+
+    def __init__(self, store: Store, endpoint: Endpoint, *,
+                 fabric: Optional[Fabric] = None, timeout_s: float = 60.0,
+                 connect_timeout_s: float = 10.0):
+        self.store = store
+        self.endpoint = parse_endpoint(endpoint)
+        self.fabric = fabric or RDMA_100G
+        self.timeout_s = timeout_s
+        self.verbs: Counter = Counter()
+        self.totals = _fresh_totals()
+        # measured wire traffic (frame headers counted separately from
+        # payloads so the model cross-check sees pure data bytes)
+        self.wire = {"frames_tx": 0, "frames_rx": 0,
+                     "bytes_tx": 0, "bytes_rx": 0,
+                     "payload_by_verb": {}, "model_by_verb": {},
+                     "frames_by_verb": {}, "wire_s": {}}
+        self._sock: Optional[socket.socket] = None
+        self._seq = 0
+        self._lock = threading.Lock()
+        self._connect(connect_timeout_s)
+        self._attach()
+        self._mt_dev = jnp.asarray(self.store.meta_table)
+        self._mt_dirty = False
+
+    # ------------------------------------------------------------ transport
+
+    def _connect(self, connect_timeout_s: float) -> None:
+        try:
+            self._sock = socket.create_connection(
+                self.endpoint, timeout=connect_timeout_s)
+        except OSError as e:
+            raise PoolUnavailableError(
+                f"pool server {self.endpoint} unreachable: {e}") from e
+        self._sock.settimeout(self.timeout_s)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def _fail(self, e: Exception):
+        self.close()
+        raise PoolUnavailableError(
+            f"pool server {self.endpoint} unavailable: {e}") from e
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            finally:
+                self._sock = None
+
+    def __del__(self):  # pragma: no cover - GC cleanup only
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _rpc_many(self, reqs, *, verb: str):
+        """Pipelined round trip: send every (op, payload, flags) frame,
+        then read the responses in order.  One request frame == one
+        doorbell batch == one counted trip."""
+        if self._sock is None:
+            raise PoolUnavailableError(
+                f"pool server {self.endpoint} connection closed")
+        t0 = time.perf_counter()
+        with self._lock:
+            seqs = []
+            try:
+                buf = bytearray()
+                for op, payload, flags in reqs:
+                    self._seq += 1
+                    seqs.append((op, self._seq))
+                    buf += W.pack_frame(op, payload, flags=flags,
+                                        seq=self._seq)
+                    self.wire["frames_tx"] += 1
+                    self.wire["bytes_tx"] += W.HEADER_BYTES + len(payload)
+                self._sock.sendall(bytes(buf))
+                outs, error = [], None
+                for op, seq in seqs:
+                    rop, rflags, rseq, payload = W.recv_frame(self._sock)
+                    self.wire["frames_rx"] += 1
+                    self.wire["bytes_rx"] += W.HEADER_BYTES + len(payload)
+                    if rseq != seq or rop != op:
+                        raise ConnectionError(
+                            f"out-of-order response (seq {rseq} != {seq})")
+                    if rflags & W.FLAG_ERROR and error is None:
+                        # keep draining the pipelined responses — leaving
+                        # them queued would desynchronize every later verb
+                        error = payload.decode("utf-8")
+                    outs.append(payload)
+                if error is not None:
+                    raise RuntimeError(f"pool server error: {error}")
+            except (ConnectionError, socket.timeout, OSError) as e:
+                self._fail(e)
+        self.wire["wire_s"][verb] = (self.wire["wire_s"].get(verb, 0.0)
+                                     + time.perf_counter() - t0)
+        self.wire["frames_by_verb"][verb] = (
+            self.wire["frames_by_verb"].get(verb, 0) + len(reqs))
+        return outs
+
+    def _rpc(self, op, payload=b"", *, flags=0, verb="misc"):
+        return self._rpc_many([(op, payload, flags)], verb=verb)[0]
+
+    def _note(self, verb: str, measured: int, modeled: float) -> None:
+        w = self.wire
+        w["payload_by_verb"][verb] = (w["payload_by_verb"].get(verb, 0)
+                                      + measured)
+        w["model_by_verb"][verb] = (w["model_by_verb"].get(verb, 0.0)
+                                    + modeled)
+
+    def model_dt(self, n_bytes: float, descriptors: float,
+                 trips: float) -> float:
+        """Modeled seconds of one charge slice — lets ShardedPool's
+        placement policies rank remote shards like simulated ones."""
+        f = self.fabric
+        return (trips * f.rtt_s + descriptors * f.per_op_s
+                + n_bytes / f.bw_Bps)
+
+    # ------------------------------------------------------------ staging
+
+    def _attach(self) -> None:
+        payload, flags = W.enc_attach(self.store)
+        self._rpc(W.OP_ATTACH, payload, flags=flags, verb="attach")
+        self._note("attach", len(payload), 0.0)
+
+    def adopt(self, store: Store) -> None:
+        self.store = store
+        self._attach()
+        self._mt_dev = jnp.asarray(self.store.meta_table)
+        self._mt_dirty = False
+
+    def attach_quant(self, group: int) -> None:
+        LA.attach_quant_mirror(self.store, group)
+        self._stage_quant()
+
+    def _stage_quant(self) -> None:
+        """Ship the (already attached) host mirror to the server — the
+        hook a sharded parent calls on every child after attaching the
+        mirror once on the shared host store."""
+        payload = W.enc_attach_quant(self.store)
+        self._rpc(W.OP_ATTACH_QUANT, payload, verb="attach")
+        self._note("attach", len(payload), 0.0)
+
+    def refresh_blocks(self, block_ids) -> None:
+        """Migration landing on this node: ship the group's blocks (and
+        the metadata table, so the destination's overflow counters match
+        the sender's) from the host region."""
+        payload, flags = W.enc_write_blocks(self.store, block_ids)
+        self._rpc(W.OP_WRITE_BLOCKS, payload, flags=flags, verb="migrate")
+        self._note("migrate", len(payload), 0.0)
+
+    # ------------------------------------------------------------ reads
+
+    # read_meta is the shared MemoryPool implementation: the paper's
+    # cached global metadata block is the client mirror — never a wire
+    # round trip
+
+    def server_meta(self):
+        """The server's own metadata table — a coherence probe for tests
+        and tools, not part of the serve path."""
+        payload = self._rpc(W.OP_READ_META, verb="read_meta")
+        return W.dec_meta_resp(payload, self.spec.n_partitions)
+
+    def read_spans(self, pids, *, ledger: Optional[NetLedger],
+                   doorbell: int = 1, quant: bool = False,
+                   quant_graph: bool = True):
+        spec = self.spec
+        pids = np.asarray(pids).reshape(-1)
+        verb = "read_spans_quant" if quant else "read_spans"
+        self.verbs[verb] += len(pids)
+        per_bytes, per_desc = span_wire_bytes(spec, quant=quant,
+                                              quant_graph=quant_graph)
+        flags = ((W.FLAG_QUANT if quant else 0)
+                 | (W.FLAG_GRAPH if quant and quant_graph else 0))
+        chunks = doorbell_chunks(pids, doorbell) if len(pids) else []
+        payloads = self._rpc_many(
+            [(W.OP_READ_SPANS, W.enc_pids(db), flags) for db in chunks],
+            verb=verb)
+        parts = []
+        for db, payload in zip(chunks, payloads):
+            measured = len(payload)
+            self._note(verb, measured, len(db) * per_bytes)
+            # the ledger is charged from the MEASURED response payload —
+            # equal to the modeled bytes by protocol construction, which
+            # wire_vs_model() verifies instead of assumes
+            self._charge(verb, ledger, measured, per_desc * len(db))
+            parts.append(W.dec_spans_resp(spec, payload, m=len(db),
+                                          quant=quant, graph=quant_graph))
+        m = len(pids)
+        if not quant:
+            g = np.concatenate([p[0] for p in parts]) if parts else \
+                np.zeros((0, spec.fetch_blocks, spec.gblk), np.int32)
+            v = np.concatenate([p[1] for p in parts]) if parts else \
+                np.zeros((0, spec.fetch_blocks, spec.vblk), np.float32)
+            return jnp.asarray(g), jnp.asarray(v)
+        qv = np.concatenate([p[0] for p in parts]) if parts else \
+            np.zeros((0, spec.fetch_blocks, spec.vblk), np.int8)
+        qs = np.concatenate([p[1] for p in parts]) if parts else \
+            np.zeros((0, spec.fetch_blocks, spec.n_qgroups), np.float32)
+        if quant_graph:
+            g = np.concatenate([p[2] for p in parts]) if parts else \
+                np.zeros((0, spec.fetch_blocks, spec.gblk), np.int32)
+        else:
+            tails = (np.concatenate([p[2] for p in parts]) if parts else
+                     np.zeros((0, spec.np_max + spec.ov_cap), np.int32))
+            g = W.rebuild_quant_gspans(
+                spec, tails, W.span_sides(self.store.meta_table, pids))
+        assert qv.shape[0] == m
+        return jnp.asarray(g), jnp.asarray(qv), jnp.asarray(qs)
+
+    def _fetch_rows(self, rows, op, verb):
+        """Deduplicated row fetch: the wire moves each distinct region
+        row once; the full (possibly duplicated / dead-lane) tensor is
+        rebuilt client-side — same values ``LocalPool``'s device gather
+        produces, minus the redundant wire bytes."""
+        rows_h = np.asarray(rows)
+        safe = np.maximum(rows_h.astype(np.int64), 0)
+        uniq, inv = np.unique(safe, return_inverse=True)
+        payload = self._rpc(op, W.enc_rows(uniq), verb=verb)
+        return rows_h, uniq, inv, payload
+
+    def read_rows(self, rows):
+        self.verbs["read_rows"] += 1
+        spec = self.spec
+        rows_h, uniq, inv, payload = self._fetch_rows(
+            rows, W.OP_READ_ROWS, "read_rows")
+        self._note("read_rows", len(payload),
+                   len(uniq) * spec.row_bytes())
+        vrows = W.dec_rows_resp(payload, len(uniq), spec.dim)
+        out = vrows[inv].reshape(rows_h.shape + (spec.dim,))
+        return jnp.asarray(out)
+
+    def read_quant_rows(self, rows):
+        self.verbs["read_quant_rows"] += 1
+        spec = self.spec
+        rows_h, uniq, inv, payload = self._fetch_rows(
+            rows, W.OP_READ_QUANT_ROWS, "read_quant_rows")
+        nq = spec.dim // spec.quant_group
+        self._note("read_quant_rows", len(payload),
+                   len(uniq) * (spec.dim + nq * 4))
+        codes, scales = W.dec_quant_rows_resp(payload, len(uniq), spec.dim,
+                                              spec.quant_group)
+        codes = codes[inv].reshape(rows_h.shape + (spec.dim,))
+        scales = scales[inv].reshape(rows_h.shape + (nq,))
+        return jnp.asarray(codes), jnp.asarray(scales)
+
+    # the post_* accounting verbs are the shared MemoryPool
+    # implementations: they charge without moving data, so nothing
+    # crosses the wire and the math is LocalPool's by construction
+
+    # ------------------------------------------------------------ writes
+
+    def append(self, vec, gid: int, pid: int, *,
+               ledger: Optional[NetLedger]) -> int:
+        spec = self.spec
+        vec = np.asarray(vec, np.float32)
+        # stage on the mirror first: a full overflow region is decided
+        # locally (both sides run the same deterministic insert, so a
+        # local -1 means the server would refuse too — no wasted trip)
+        slot = LA.insert_vector(self.store, vec, int(gid), int(pid))
+        if slot < 0:
+            return slot
+        codes = scales = None
+        wire_model = spec.dim * 4 + 8
+        if self.store.qvec_buf is not None:
+            from repro.quant.codec import quantize_groups
+            codes, scales = quantize_groups(vec, spec.quant_group)
+            wire_model += spec.dim + (spec.dim // spec.quant_group) * 4
+            group = int(self.store.meta_table[pid, LA.MT_GROUP])
+            co = LA.overflow_write_coords(spec, group, slot)
+            LA.refresh_quant_blocks(self.store, [co["vec_block"]])
+        payload, flags = W.enc_append(vec, int(gid), int(pid), codes, scales)
+        resp = self._rpc(W.OP_APPEND, payload, flags=flags, verb="append")
+        rslot = W.dec_append_resp(resp)
+        if rslot != slot:
+            raise RuntimeError(
+                f"remote region diverged: append slot {rslot} != "
+                f"mirror slot {slot} (pid {pid})")
+        self.verbs["append"] += 1
+        self._note("append", len(payload), wire_model)
+        if ledger is not None:
+            ledger.write(wire_model, descriptors=1)
+            self.totals["round_trips"] += 1
+            self.totals["descriptors"] += 1
+            self.totals["bytes"] += wire_model
+        self._mt_dirty = True
+        return slot
+
+    def repack(self, group: int, data_lookup) -> bool:
+        """Offline re-pack: rebuild on the compute side (it owns the
+        vectors), then WRITE the rewritten group region to the server in
+        one block-granular frame."""
+        self.verbs["repack"] += 1
+        ok = LA.repack_group(self.store, group, data_lookup)
+        if not ok:
+            return False
+        LA.refresh_quant_group(self.store, group)
+        spec = self.spec
+        blocks = np.arange(group * spec.group_blocks,
+                           (group + 1) * spec.group_blocks)
+        payload, flags = W.enc_write_blocks(self.store, blocks)
+        self._rpc(W.OP_WRITE_BLOCKS, payload, flags=flags, verb="repack")
+        self._note("repack", len(payload), 0.0)
+        self._mt_dirty = True
+        return True
+
+    # ------------------------------------------------------------ stats
+
+    def wire_vs_model(self) -> dict:
+        """Measured payload bytes vs the Fabric model's priced bytes,
+        per data verb.  Span verbs must match exactly (the conformance
+        suite asserts it); row verbs may exceed the model by exactly the
+        rows the compute-side residency policy counts as free."""
+        out = {}
+        for verb, measured in self.wire["payload_by_verb"].items():
+            modeled = self.wire["model_by_verb"].get(verb, 0.0)
+            if not modeled:
+                continue
+            out[verb] = {"measured": int(measured),
+                         "modeled": float(modeled),
+                         "ratio": measured / modeled}
+        return out
+
+    def server_stats(self) -> dict:
+        """The server process's own counters (one wire round trip)."""
+        return W.dec_json(self._rpc(W.OP_STATS, verb="stats"))
+
+    def shutdown_server(self) -> None:
+        """Ask the server process to exit (harness teardown helper)."""
+        try:
+            self._rpc(W.OP_SHUTDOWN, verb="shutdown")
+        except PoolUnavailableError:
+            pass
+
+    def snapshot(self) -> dict:
+        from repro.pool.sim_rdma import fabric_params
+        out = super().snapshot()
+        out["endpoint"] = f"{self.endpoint[0]}:{self.endpoint[1]}"
+        out["fabric"] = fabric_params(self.fabric)   # same schema as sim
+        out["wire"] = {k: (dict(v) if isinstance(v, dict) else v)
+                       for k, v in self.wire.items()}
+        out["wire_vs_model"] = self.wire_vs_model()
+        return out

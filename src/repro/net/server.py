@@ -1,0 +1,428 @@
+"""PoolServer — a standalone memory-pool node process.
+
+Hosts one serialized region (``core/layout.Store``, host numpy buffers)
+and serves every ``MemoryPool`` verb over TCP using the ``wire.py``
+framing.  The data plane is deliberately jax-free: span reads are numpy
+block gathers from the registered region, appends are
+``layout.insert_vector`` host writes — the *compute* side (RemotePool's
+caller) owns all device work, exactly like the paper's memory nodes own
+bytes and nothing else.
+
+Run standalone:
+
+    python -m repro.net.server --port 0        # auto-pick, prints port
+
+or embed (``PoolServer(region=...).start()``) — tests and benchmarks use
+``spawn_pool_servers(n)`` to fork n loopback servers and tear them down
+with a timeout.
+
+Concurrency: a threaded accept loop, one handler thread per connection,
+requests on a connection answered strictly in order (the client
+pipelines doorbell batches by writing k frames before reading k
+responses).  A region-wide lock serializes verb bodies — the region is
+the shared state, and numpy gathers are fast enough that per-verb
+locking is not the bottleneck at this scale.
+
+The server starts EMPTY: a client uploads the region with an ATTACH
+frame (the offline "load the index into the memory pool" step; repeated
+ATTACH replaces the region — one region per server).  ``--demo-n``
+pre-builds a synthetic region (seeded by ``--seed``) for standalone
+poking without a client build.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+
+from repro.core import layout as LA
+from repro.net import wire as W
+
+
+class HostRegion:
+    """The server-side region + verb handlers (pure numpy)."""
+
+    def __init__(self, store=None):
+        self.store = store
+        self.lock = threading.RLock()
+        self.verbs: Counter = Counter()
+        self.payload_tx = 0      # response payload bytes served
+        self.payload_rx = 0      # request payload bytes received
+        self.t0 = time.time()
+
+    # ------------------------------------------------------------ helpers
+
+    def _require(self):
+        if self.store is None:
+            raise RuntimeError("no region attached")
+        return self.store
+
+    def _span_blocks(self, buf, pids):
+        store = self._require()
+        ids = np.stack([store.span_block_ids(int(p)) for p in pids]) \
+            if len(pids) else np.zeros((0, store.spec.fetch_blocks),
+                                       np.int64)
+        return buf[ids.reshape(-1)].reshape(
+            len(pids), store.spec.fetch_blocks, buf.shape[1])
+
+    # ------------------------------------------------------------ verbs
+
+    def attach(self, payload, flags):
+        self.store = W.dec_attach(payload, flags)
+        return b"", 0
+
+    def attach_quant(self, payload, flags):
+        store = self._require()
+        spec, qv, qs = W.dec_attach_quant(payload)
+        if spec.quant_group != store.spec.quant_group:
+            import dataclasses as DC
+            store.spec = DC.replace(store.spec,
+                                    quant_group=spec.quant_group)
+        store.qvec_buf, store.qscale_buf = qv, qs
+        return b"", 0
+
+    def read_spans(self, payload, flags):
+        store = self._require()
+        spec = store.spec
+        pids = W.dec_pids(payload)
+        quant = bool(flags & W.FLAG_QUANT)
+        graph = bool(flags & W.FLAG_GRAPH)
+        if not quant:
+            g = self._span_blocks(store.graph_buf, pids)
+            v = self._span_blocks(store.vec_buf, pids)
+            return W.enc_spans_resp(spec, quant=False, g=g, v=v), 0
+        if store.qvec_buf is None:
+            raise RuntimeError("quant span read without an attached mirror")
+        qv = self._span_blocks(store.qvec_buf, pids)
+        qs = self._span_blocks(store.qscale_buf, pids)
+        if graph:
+            g = self._span_blocks(store.graph_buf, pids)
+            return (W.enc_spans_resp(spec, quant=True, graph=True, qv=qv,
+                                     qs=qs, g=g), flags)
+        return (W.enc_spans_resp(spec, quant=True, graph=False, qv=qv,
+                                 qs=qs, tails=self._gid_tails(pids)), flags)
+
+    def _gid_tails(self, pids) -> np.ndarray:
+        """Slice the two gid runs of each span straight out of the
+        region (blocks are contiguous rows, so a run is contiguous in
+        the flat view) — no need to materialize the full graph span the
+        tails format exists to keep off the wire."""
+        store = self._require()
+        spec = store.spec
+        gflat = store.graph_buf.reshape(-1)           # view, no copy
+        tails = np.empty((len(pids), spec.np_max + spec.ov_cap), np.int32)
+        for i, p in enumerate(pids):
+            row = store.meta_table[int(p)]
+            base = int(row[LA.MT_BLK_START]) * spec.gblk
+            d, o = W.gid_tail_offsets(spec, int(row[LA.MT_SIDE]))
+            tails[i, :spec.np_max] = gflat[base + d:base + d + spec.np_max]
+            tails[i, spec.np_max:] = gflat[base + o:base + o + spec.ov_cap]
+        return tails
+
+    def read_rows(self, payload, flags):
+        store = self._require()
+        rows = W.dec_rows(payload)
+        safe = np.maximum(rows, 0)
+        vrows = store.vec_buf.reshape(-1, store.spec.dim)[safe]
+        return W.enc_rows_resp(vrows), 0
+
+    def read_quant_rows(self, payload, flags):
+        store = self._require()
+        if store.qvec_buf is None:
+            raise RuntimeError("quant row read without an attached mirror")
+        spec = store.spec
+        rows = W.dec_rows(payload)
+        safe = np.maximum(rows, 0)
+        codes = store.qvec_buf.reshape(-1, spec.dim)[safe]
+        scales = store.qscale_buf.reshape(
+            -1, spec.dim // spec.quant_group)[safe]
+        return W.enc_quant_rows_resp(codes, scales), 0
+
+    def read_meta(self, payload, flags):
+        return W.enc_meta_resp(self._require()), 0
+
+    def append(self, payload, flags):
+        store = self._require()
+        spec = store.spec
+        vec, gid, pid, codes, scales = W.dec_append(
+            payload, flags, spec.dim, spec.quant_group or 1)
+        slot = LA.insert_vector(store, vec, gid, pid)
+        if slot >= 0 and store.qvec_buf is not None:
+            # mirror twin of the WRITE: the client shipped the quantized
+            # row; a deterministic block refresh from the f32 region
+            # yields the same bytes, which keeps both paths honest
+            group = int(store.meta_table[pid, LA.MT_GROUP])
+            co = LA.overflow_write_coords(spec, group, slot)
+            LA.refresh_quant_blocks(store, [co["vec_block"]])
+        return W.enc_append_resp(slot), 0
+
+    def write_blocks(self, payload, flags):
+        store = self._require()
+        upd = W.dec_write_blocks(payload, flags, store.spec)
+        ids = upd["ids"]
+        store.graph_buf[ids] = upd["g"]
+        store.vec_buf[ids] = upd["v"]
+        if upd["qv"] is not None:
+            if store.qvec_buf is None:
+                raise RuntimeError("mirror blocks for an unattached mirror")
+            store.qvec_buf[ids] = upd["qv"]
+            store.qscale_buf[ids] = upd["qs"]
+        store.n_base[:] = upd["n_base"]
+        store.meta_table[:] = upd["meta"]
+        return b"", 0
+
+    def stats(self, payload, flags):
+        out = {"verbs": dict(self.verbs),
+               "payload_tx": self.payload_tx,
+               "payload_rx": self.payload_rx,
+               "uptime_s": round(time.time() - self.t0, 3),
+               "attached": self.store is not None}
+        if self.store is not None:
+            out["n_partitions"] = int(self.store.spec.n_partitions)
+            out["region_bytes"] = int(self.store.total_bytes())
+            out["quant_attached"] = self.store.qvec_buf is not None
+        return W.enc_json(out), 0
+
+    # ------------------------------------------------------------ dispatch
+
+    HANDLERS = {
+        W.OP_ATTACH: attach, W.OP_ATTACH_QUANT: attach_quant,
+        W.OP_READ_SPANS: read_spans, W.OP_READ_ROWS: read_rows,
+        W.OP_READ_QUANT_ROWS: read_quant_rows, W.OP_READ_META: read_meta,
+        W.OP_APPEND: append, W.OP_WRITE_BLOCKS: write_blocks,
+        W.OP_STATS: stats,
+    }
+
+    def handle(self, op: int, flags: int, payload: bytes):
+        """One verb -> (response_payload, response_flags)."""
+        if op == W.OP_PING:
+            return payload, 0
+        fn = self.HANDLERS.get(op)
+        if fn is None:
+            raise RuntimeError(f"unknown opcode {op}")
+        with self.lock:
+            self.verbs[W.OP_NAMES.get(op, str(op))] += 1
+            self.payload_rx += len(payload)
+            resp, rflags = fn(self, payload, flags)
+            self.payload_tx += len(resp)
+            return resp, rflags
+
+
+class PoolServer:
+    """Threaded TCP front-end around one ``HostRegion``."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 region: HostRegion | None = None):
+        self.region = region or HostRegion()
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((host, port))
+        self._lsock.listen(32)
+        self.host, self.port = self._lsock.getsockname()[:2]
+        self._stop = threading.Event()
+        self._accept_thread: threading.Thread | None = None
+
+    @property
+    def endpoint(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> "PoolServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True,
+            name=f"poolserver-{self.port}")
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self._accept_loop()
+
+    def stop(self) -> None:
+        self._stop.set()
+        with contextlib.suppress(OSError):
+            self._lsock.close()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # ------------------------------------------------------------ serving
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._lsock.accept()
+            except OSError:
+                break                      # listener closed
+            # daemon handler threads are not tracked: they exit with
+            # their connection, and a long-lived server must not grow a
+            # list entry per client that ever connected
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            while not self._stop.is_set():
+                try:
+                    op, flags, seq, payload = W.recv_frame(conn)
+                except (ConnectionError, OSError, W.WireError):
+                    return                 # client went away / garbage
+                if op == W.OP_SHUTDOWN:
+                    W.send_frame(conn, op, b"", seq=seq)
+                    self.stop()
+                    return
+                try:
+                    resp, rflags = self.region.handle(op, flags, payload)
+                except Exception as e:     # verb error -> error frame
+                    resp = str(e).encode("utf-8")
+                    rflags = W.FLAG_ERROR
+                try:
+                    W.send_frame(conn, op, resp, flags=rflags, seq=seq)
+                except (ConnectionError, OSError):
+                    return
+        finally:
+            with contextlib.suppress(OSError):
+                conn.close()
+
+
+# ------------------------------------------------------------- harness
+
+def _src_path() -> str:
+    import repro
+    # repro may be a namespace package (no __init__.py): use __path__
+    pkg_dir = (os.path.dirname(repro.__file__) if repro.__file__
+               else next(iter(repro.__path__)))
+    return os.path.dirname(os.path.abspath(pkg_dir))
+
+
+@contextlib.contextmanager
+def spawn_pool_servers(n: int = 1, *, host: str = "127.0.0.1", seed: int = 0,
+                       startup_timeout_s: float = 60.0, demo_n: int = 0):
+    """Fork ``n`` loopback pool-server processes; yield their endpoints.
+
+    Each server binds ``--port 0`` (OS-assigned — no CI port clashes) and
+    announces ``POOLSERVER LISTENING host port`` on stdout; teardown
+    sends SIGTERM and escalates to SIGKILL after a timeout, so a hung
+    server can never wedge a test run.
+    """
+    env = os.environ.copy()
+    src = _src_path()
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    procs, endpoints, drains = [], [], []
+    try:
+        for i in range(n):
+            cmd = [sys.executable, "-m", "repro.net.server", "--host", host,
+                   "--port", "0", "--seed", str(seed + i)]
+            if demo_n:
+                cmd += ["--demo-n", str(demo_n)]
+            p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                 stderr=subprocess.STDOUT, text=True,
+                                 env=env)
+            procs.append(p)
+        deadline = time.time() + startup_timeout_s
+        for p in procs:
+            ep = _await_listening(p, deadline)
+            endpoints.append(ep)
+            t = threading.Thread(target=_drain, args=(p,), daemon=True)
+            t.start()
+            drains.append(t)
+        yield endpoints
+    finally:
+        for p in procs:
+            with contextlib.suppress(OSError):
+                p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                with contextlib.suppress(subprocess.TimeoutExpired):
+                    p.wait(timeout=5)
+
+
+def _await_listening(p: subprocess.Popen, deadline: float) -> str:
+    """Read the announce line with a hard deadline (a crashed server hits
+    EOF and reports its captured output instead of hanging)."""
+    out: list[str] = []
+    result: list = []
+
+    def reader():
+        for line in p.stdout:
+            out.append(line)
+            if line.startswith("POOLSERVER LISTENING"):
+                _, _, h, prt = line.split()
+                result.append(f"{h}:{prt}")
+                return
+        result.append(None)               # EOF before announce
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    t.join(max(deadline - time.time(), 0.1))
+    if not result or result[0] is None:
+        with contextlib.suppress(OSError):
+            p.kill()
+        raise RuntimeError("pool server failed to start:\n" + "".join(out))
+    return result[0]
+
+
+def _drain(p: subprocess.Popen) -> None:
+    """Keep consuming server stdout so a chatty server can't fill the
+    pipe and block."""
+    with contextlib.suppress(Exception):
+        for _ in p.stdout:
+            pass
+
+
+def _build_demo_region(n: int, seed: int) -> HostRegion:
+    from repro.core.hnsw import HNSWParams
+    from repro.core.meta import build_meta
+    from repro.data.synthetic import sift_like
+    ds = sift_like(n=n, n_queries=8, seed=seed)
+    meta = build_meta(ds.data, max(8, n // 128), seed=seed, meta_levels=2)
+    store = LA.build_store(ds.data, meta,
+                           sub_params=HNSWParams(M=8, M0=16,
+                                                 ef_construction=60))
+    return HostRegion(store)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="d-HNSW memory-pool node: host a region, serve "
+                    "MemoryPool verbs over TCP")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = auto-pick a free port (printed on stdout)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the --demo-n synthetic region")
+    ap.add_argument("--demo-n", type=int, default=0,
+                    help="pre-build a synthetic region of this many "
+                         "vectors (0 = start empty, await ATTACH)")
+    args = ap.parse_args(argv)
+    region = (_build_demo_region(args.demo_n, args.seed) if args.demo_n
+              else HostRegion())
+    srv = PoolServer(args.host, args.port, region=region)
+    print(f"POOLSERVER LISTENING {srv.host} {srv.port}", flush=True)
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

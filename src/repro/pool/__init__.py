@@ -9,7 +9,10 @@ only through ``MemoryPool`` verbs.  Transports:
 * ``SimulatedRDMAPool`` — + per-verb latency/bandwidth model;
 * ``ShardedPool``       — the region split group-granularly across N
                           child pools with per-shard doorbell fan-out
-                          and pluggable (migrating) placement.
+                          and pluggable (migrating) placement;
+* ``RemotePool``        — (``repro/net``) the verbs marshaled over TCP
+                          to a ``PoolServer`` process, measured wire
+                          bytes cross-checked against the model.
 """
 from repro.pool.compute import ComputeClient
 from repro.pool.local import LocalPool
@@ -18,13 +21,13 @@ from repro.pool.placement import (FrequencyAwarePlacement, PlacementPolicy,
                                   make_placement)
 from repro.pool.protocol import MemoryPool, span_wire_bytes
 from repro.pool.sharded import ShardedPool
-from repro.pool.sim_rdma import SimulatedRDMAPool, fanout_dt
+from repro.pool.sim_rdma import SimulatedRDMAPool, fabric_params, fanout_dt
 
 __all__ = ["MemoryPool", "LocalPool", "SimulatedRDMAPool", "ShardedPool",
            "ComputeClient", "PlacementPolicy", "RoundRobinPlacement",
            "SizeBalancedPlacement", "FrequencyAwarePlacement",
            "make_placement", "make_pool_factory", "span_wire_bytes",
-           "fanout_dt"]
+           "fanout_dt", "fabric_params"]
 
 
 def make_pool_factory(cfg):
@@ -36,8 +39,24 @@ def make_pool_factory(cfg):
         return lambda store: SimulatedRDMAPool(
             store, fabric=cfg.fabric,
             use_gather_kernel=cfg.use_gather_kernel)
+    if cfg.pool == "remote":
+        # lazy import: the net subsystem is only needed when it is used
+        from repro.net.client import RemotePool
+        eps = tuple(cfg.endpoints or ())
+        if not eps:
+            raise ValueError("pool='remote' needs EngineConfig.endpoints")
+        if len(eps) == 1:
+            return lambda store: RemotePool(store, eps[0],
+                                            fabric=cfg.fabric)
+        # several server processes: shard over one RemotePool per node
+        children = [lambda store, ep=ep: RemotePool(store, ep,
+                                                    fabric=cfg.fabric)
+                    for ep in eps]
+        return lambda store: ShardedPool(
+            store, children, placement=make_placement(cfg.placement),
+            parallel=cfg.shard_parallel)
     if cfg.pool == "sharded":
-        def child(fabric):
+        def child(fabric, ep=None):
             if cfg.shard_transport == "local":
                 return lambda store: LocalPool(
                     store, use_gather_kernel=cfg.use_gather_kernel)
@@ -45,6 +64,9 @@ def make_pool_factory(cfg):
                 return lambda store: SimulatedRDMAPool(
                     store, fabric=fabric,
                     use_gather_kernel=cfg.use_gather_kernel)
+            if cfg.shard_transport == "remote":
+                from repro.net.client import RemotePool
+                return lambda store: RemotePool(store, ep, fabric=fabric)
             raise ValueError(
                 f"unknown shard transport {cfg.shard_transport!r}")
 
@@ -53,8 +75,17 @@ def make_pool_factory(cfg):
         if len(fabrics) != cfg.n_shards:
             raise ValueError(f"shard_fabrics has {len(fabrics)} entries "
                              f"for n_shards={cfg.n_shards}")
+        if cfg.shard_transport == "remote":
+            eps = tuple(cfg.endpoints or ())
+            if len(eps) != cfg.n_shards:
+                raise ValueError(f"endpoints has {len(eps)} entries "
+                                 f"for n_shards={cfg.n_shards}")
+        else:
+            # in-process children never take endpoints — ignore any so
+            # zip below can't silently truncate the shard list
+            eps = (None,) * cfg.n_shards
         return lambda store: ShardedPool(
-            store, [child(f) for f in fabrics],
+            store, [child(f, ep) for f, ep in zip(fabrics, eps)],
             placement=make_placement(cfg.placement),
             parallel=cfg.shard_parallel)
     raise ValueError(f"unknown pool transport {cfg.pool!r}")

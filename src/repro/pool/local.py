@@ -9,7 +9,6 @@ bodies are the exact gather/scatter sequences the engine used inline.
 """
 from __future__ import annotations
 
-import math
 from collections import Counter
 from typing import Optional
 
@@ -80,32 +79,10 @@ class LocalPool(MemoryPool):
             self._qs_dev = self._qs_dev.at[dev].set(
                 jnp.asarray(self.store.qscale_buf[ids]))
 
-    # ------------------------------------------------------------ charging
-
-    def _transport(self, verb: str, n_bytes, descriptors, trips) -> None:
-        """Transport hook — LocalPool moves bytes over nothing.  Each
-        argument may be a scalar (one destination) or a per-destination
-        sequence (a sharded fan-out); see ``SimulatedRDMAPool``."""
-
-    def _charge(self, verb: str, ledger: Optional[NetLedger],
-                n_bytes: float, descriptors: int) -> None:
-        if ledger is None:
-            return
-        ledger.read(n_bytes, descriptors=descriptors)
-        trips = math.ceil(descriptors / ledger.fabric.max_doorbell)
-        self.totals["round_trips"] += trips
-        self.totals["descriptors"] += descriptors
-        self.totals["bytes"] += n_bytes
-        self._transport(verb, n_bytes, descriptors, trips)
-
     # ------------------------------------------------------------ reads
-
-    def read_meta(self):
-        self.verbs["read_meta"] += 1
-        if self._mt_dirty:
-            self._mt_dev = jnp.asarray(self.store.meta_table)
-            self._mt_dirty = False
-        return self._mt_dev
+    # (read_meta, the charge rule, and the post_* accounting verbs are
+    # the shared MemoryPool implementations — one copy for every
+    # transport so ledger parity can never drift)
 
     def _gather_blocks(self, buf, ids):
         if self.use_gather_kernel:
@@ -149,27 +126,6 @@ class LocalPool(MemoryPool):
         return DS.gather_quant_rows(self._qv_dev, self._qs_dev, rows,
                                     dim=self.spec.dim,
                                     group=self.spec.quant_group)
-
-    # ------------------------------------------------- accounting posts
-
-    def post_span_reads(self, n: int, *, ledger: NetLedger,
-                        doorbell: int = 1, quant: bool = False,
-                        quant_graph: bool = True, pids=None) -> None:
-        # pids: shard attribution only — a single node ignores it
-        self.verbs["post_span_reads"] += n
-        per_bytes, per_desc = span_wire_bytes(self.spec, quant=quant,
-                                              quant_graph=quant_graph)
-        for db in doorbell_chunks(np.arange(n), doorbell):
-            self._charge("post_span_reads", ledger, len(db) * per_bytes,
-                         per_desc * len(db))
-
-    def post_row_reads(self, groups, *, ledger: NetLedger,
-                       doorbell: int = 1) -> None:
-        row_b = self.spec.row_bytes()
-        self.verbs["post_row_reads"] += len(groups)
-        for chunk in doorbell_chunks(list(groups), doorbell):
-            cnt = sum(c for _, c in chunk)
-            self._charge("post_row_reads", ledger, cnt * row_b, cnt)
 
     # ------------------------------------------------------------ writes
 

@@ -34,10 +34,14 @@ running totals (``totals``) and per-verb invocation counts (``verbs``)
 from __future__ import annotations
 
 import abc
+import math
 from typing import Optional
+
+import numpy as np
 
 from repro.core.cost_model import NetLedger
 from repro.core.layout import LayoutSpec, Store
+from repro.core.scheduler import doorbell_chunks
 
 
 class MemoryPool(abc.ABC):
@@ -47,6 +51,12 @@ class MemoryPool(abc.ABC):
     whatever device/remote representation the transport uses) and
     implement the verbs.  ``spec`` is always ``store.spec`` — a frozen
     ``LayoutSpec`` safe to close jitted functions over.
+
+    The *charge math* (ledger + pool totals + the trips-per-doorbell
+    rule) and the pure-accounting ``post_*`` verbs live HERE, shared by
+    every transport — the conformance suite's exact-ledger-parity gate
+    depends on there being exactly one copy of it.  Transports that
+    model or measure a wire hook ``_transport``.
     """
 
     kind: str = "abstract"
@@ -58,12 +68,18 @@ class MemoryPool(abc.ABC):
     def spec(self) -> LayoutSpec:
         return self.store.spec
 
-    @abc.abstractmethod
     def read_meta(self):
         """Device copy of the global metadata table (per-partition
         offsets/counters).  Compute instances cache it — the paper's
         'global metadata block' — so this verb is never charged; it is
-        restaged lazily after writes move the host counters."""
+        restaged lazily after writes move the host counters.  Concrete
+        pools initialize ``_mt_dev``/``_mt_dirty`` at staging time."""
+        import jax.numpy as jnp
+        self.verbs["read_meta"] += 1
+        if self._mt_dirty:
+            self._mt_dev = jnp.asarray(self.store.meta_table)
+            self._mt_dirty = False
+        return self._mt_dev
 
     @abc.abstractmethod
     def adopt(self, store: Store) -> None:
@@ -98,9 +114,30 @@ class MemoryPool(abc.ABC):
         """Row-granular READ from the quantized mirror: (codes, scales)
         for the dense-resident flat-scan path."""
 
+    # ------------------------------------------------------------ charging
+
+    def _transport(self, verb: str, n_bytes, descriptors, trips) -> None:
+        """Transport hook, called once per charge with the slice it
+        carried.  Default: bytes move over nothing.  Each argument may
+        be a scalar (one destination) or a per-destination sequence (a
+        sharded fan-out); see ``SimulatedRDMAPool``."""
+
+    def _charge(self, verb: str, ledger: Optional[NetLedger],
+                n_bytes: float, descriptors: int) -> None:
+        """THE charge rule: ledger + pool running totals + the
+        trips = ceil(descriptors / max_doorbell) split, identically on
+        every transport."""
+        if ledger is None:
+            return
+        ledger.read(n_bytes, descriptors=descriptors)
+        trips = math.ceil(descriptors / ledger.fabric.max_doorbell)
+        self.totals["round_trips"] += trips
+        self.totals["descriptors"] += descriptors
+        self.totals["bytes"] += n_bytes
+        self._transport(verb, n_bytes, descriptors, trips)
+
     # ------------------------------------------------- accounting posts
 
-    @abc.abstractmethod
     def post_span_reads(self, n: int, *, ledger: NetLedger,
                         doorbell: int = 1, quant: bool = False,
                         quant_graph: bool = True, pids=None) -> None:
@@ -109,13 +146,24 @@ class MemoryPool(abc.ABC):
         resident sweep: spans already moved by a data verb).  ``pids``
         optionally names the spans so a sharded pool can attribute each
         charge to its destination node; single-node pools ignore it."""
+        self.verbs["post_span_reads"] += n
+        per_bytes, per_desc = span_wire_bytes(self.spec, quant=quant,
+                                              quant_graph=quant_graph)
+        for db in doorbell_chunks(np.arange(n), doorbell):
+            self._charge("post_span_reads", ledger, len(db) * per_bytes,
+                         per_desc * len(db))
 
-    @abc.abstractmethod
     def post_row_reads(self, groups, *, ledger: NetLedger,
                        doorbell: int = 1) -> None:
         """Charge row-granular READs.  ``groups`` is [(pid, n_rows)];
         each group is one descriptor batch member, grouped ``doorbell``
         groups per round trip."""
+        row_b = self.spec.row_bytes()
+        groups = list(groups)
+        self.verbs["post_row_reads"] += len(groups)
+        for chunk in doorbell_chunks(groups, doorbell):
+            cnt = sum(c for _, c in chunk)
+            self._charge("post_row_reads", ledger, cnt * row_b, cnt)
 
     # ------------------------------------------------------------ writes
 

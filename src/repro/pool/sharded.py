@@ -41,7 +41,6 @@ multi-node deployment would see over real transports.
 """
 from __future__ import annotations
 
-import math
 from collections import Counter
 from typing import Callable, Optional, Sequence
 
@@ -51,9 +50,8 @@ import numpy as np
 from repro.core import layout as LA
 from repro.core.cost_model import NetLedger
 from repro.core.layout import Store
-from repro.core.scheduler import doorbell_chunks
 from repro.pool.placement import PlacementPolicy, make_placement
-from repro.pool.protocol import MemoryPool, _fresh_totals, span_wire_bytes
+from repro.pool.protocol import MemoryPool, _fresh_totals
 from repro.pool.sim_rdma import fanout_dt
 
 
@@ -176,11 +174,8 @@ class ShardedPool(MemoryPool):
         self._mt_dev = jnp.asarray(self.store.meta_table)
         self._mt_dirty = False
 
-    def read_meta(self):
-        self.verbs["read_meta"] += 1
-        if self._mt_dirty:
-            self._stage_meta()
-        return self._mt_dev
+    # read_meta: the shared MemoryPool implementation (serves the
+    # parent's own cached table — children are never consulted)
 
     def adopt(self, store: Store) -> None:
         self.store = store
@@ -275,20 +270,13 @@ class ShardedPool(MemoryPool):
     def post_span_reads(self, n: int, *, ledger: NetLedger,
                         doorbell: int = 1, quant: bool = False,
                         quant_graph: bool = True, pids=None) -> None:
-        self.verbs["post_span_reads"] += n
         if pids is None:
             # no destination info: price on the caller's fabric, like a
             # single-node pool (callers that know the spans pass pids)
-            per_bytes, per_desc = span_wire_bytes(self.spec, quant=quant,
-                                                  quant_graph=quant_graph)
-            for db in doorbell_chunks(np.arange(n), doorbell):
-                nb, nd = len(db) * per_bytes, per_desc * len(db)
-                ledger.read(nb, descriptors=nd)
-                self.totals["round_trips"] += math.ceil(
-                    nd / ledger.fabric.max_doorbell)
-                self.totals["descriptors"] += nd
-                self.totals["bytes"] += nb
-            return
+            return super().post_span_reads(n, ledger=ledger,
+                                           doorbell=doorbell, quant=quant,
+                                           quant_graph=quant_graph)
+        self.verbs["post_span_reads"] += n
         pids = np.asarray(pids).reshape(-1)
         owners = self._owners_of_pids(pids)
         slices = []
@@ -412,4 +400,10 @@ class ShardedPool(MemoryPool):
         if self.sim_s or any("sim_total_s" in s for s in out["shards"]):
             out["sim_s"] = dict(self.sim_s)
             out["sim_total_s"] = self.sim_total_s
+        wired = [s["wire"] for s in out["shards"] if "wire" in s]
+        if wired:
+            # remote children: measured wire traffic summed over nodes
+            out["wire_total"] = {
+                k: sum(w[k] for w in wired)
+                for k in ("frames_tx", "frames_rx", "bytes_tx", "bytes_rx")}
         return out

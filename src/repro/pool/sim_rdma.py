@@ -87,7 +87,16 @@ class SimulatedRDMAPool(LocalPool):
 
     def snapshot(self) -> dict:
         out = super().snapshot()
-        out["fabric"] = self.fabric.name
+        # full fabric calibration, not just the name: benchmark rows
+        # built from this snapshot are self-describing
+        out["fabric"] = fabric_params(self.fabric)
         out["sim_s"] = dict(self.sim_s)
         out["sim_total_s"] = self.sim_total_s
         return out
+
+
+def fabric_params(f: Fabric) -> dict:
+    """The parameters the latency model prices with, JSON-ready."""
+    return {"name": f.name, "rtt_us": f.rtt_s * 1e6,
+            "bw_GBps": f.bw_Bps / 1e9, "per_op_us": f.per_op_s * 1e6,
+            "max_doorbell": f.max_doorbell}

@@ -275,6 +275,15 @@ class ServeMetrics:
                               if total_served else 0.0)
             if self.pool_snap is not None:
                 out["pool"] = copy.deepcopy(self.pool_snap)
+                # remote transports: roll the MEASURED wire traffic up
+                # next to the modeled ledger totals under ``net``
+                wt = (self.pool_snap.get("wire_total")
+                      or self.pool_snap.get("wire"))
+                if wt:
+                    out["net"]["wire_frames"] = (wt["frames_tx"]
+                                                 + wt["frames_rx"])
+                    out["net"]["wire_bytes_tx"] = wt["bytes_tx"]
+                    out["net"]["wire_bytes_rx"] = wt["bytes_rx"]
             for p in (50, 95, 99):
                 out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
                                    if len(lat) else 0.0)

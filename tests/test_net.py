@@ -1,0 +1,440 @@
+"""repro.net — the real TCP transport behind the MemoryPool verbs.
+
+Three layers of coverage:
+
+* **wire format** — encode/decode round-trips for every verb frame
+  (deterministic edge cases always; randomized property tests when
+  ``hypothesis`` is installed, skipping cleanly otherwise), including
+  zero-descriptor batches, max-size span batches, and int8 payloads.
+* **conformance** — the transport gate from ``tests/test_pool.py``
+  applied to ``RemotePool``: against live loopback ``PoolServer``
+  processes, search + insert must be bit-identical to ``LocalPool``
+  across {naive, full} x {none, int8}, both single-node and as two
+  ``ShardedPool`` children over two server processes; measured wire
+  payload bytes must equal the ``NetLedger``'s modeled charge for span
+  verbs, with trips == frames sent.
+* **failure** — a killed server raises a clean ``PoolUnavailableError``
+  at the next verb (bounded by the socket timeout) instead of hanging.
+
+The module spawns its loopback servers once (module-scoped fixture) and
+re-ATTACHes per engine build — one region per server at a time.
+"""
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # CI fast tier / bare containers
+    HAVE_HYPOTHESIS = False
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G, Fabric, NetLedger
+from repro.core.hnsw import HNSWParams
+from repro.core.layout import build_store
+from repro.core.meta import build_meta
+from repro.net import (PoolUnavailableError, RemotePool, parse_endpoint,
+                       spawn_pool_servers)
+from repro.net import wire as W
+from repro.pool import LocalPool, ShardedPool
+from repro.pool.placement import FrequencyAwarePlacement
+
+CFG = dict(mode="full", search_mode="scan", n_rep=12, b=3, ef=32,
+           cache_frac=0.25, seed=3, fabric=RDMA_100G)
+
+
+@pytest.fixture(scope="module")
+def servers():
+    with spawn_pool_servers(2) as endpoints:
+        yield endpoints
+
+
+@pytest.fixture(scope="module")
+def pds(sift_small):
+    return sift_small.data[:1200], sift_small.queries[:24]
+
+
+def _tiny_store(data, ov_cap=0):
+    meta = build_meta(data, 8, seed=0, meta_levels=2)
+    return build_store(data, meta, ov_cap=ov_cap,
+                       sub_params=HNSWParams(M=4, M0=8, ef_construction=40))
+
+
+def _build(pool, data, **over):
+    cfg = {**CFG, **over, "pool": pool}
+    return DHNSWEngine(EngineConfig(**cfg)).build(data)
+
+
+# ------------------------------------------------------------ wire format
+
+def test_frame_header_roundtrip():
+    buf = W.pack_frame(W.OP_READ_SPANS, b"abc", flags=W.FLAG_QUANT, seq=7)
+    op, flags, seq, length = W.unpack_header(buf[:W.HEADER_BYTES])
+    assert (op, flags, seq, length) == (W.OP_READ_SPANS, W.FLAG_QUANT, 7, 3)
+    assert buf[W.HEADER_BYTES:] == b"abc"
+    # empty payload
+    op, flags, seq, length = W.unpack_header(
+        W.pack_frame(W.OP_PING, b"", seq=0))
+    assert length == 0
+    with pytest.raises(W.WireError):
+        W.unpack_header(b"XXXX" + bytes(W.HEADER_BYTES - 4))
+    with pytest.raises(W.WireError):
+        W.unpack_header(b"short")
+
+
+def test_wire_attach_and_span_frames_roundtrip(pds):
+    """Every buffer of the region survives encode -> decode, and span
+    responses decode to exactly what was gathered — including the
+    zero-descriptor batch and the max-size (every partition) batch."""
+    data, _ = pds
+    store = _tiny_store(data)
+    payload, flags = W.enc_attach(store)
+    back = W.dec_attach(payload, flags)
+    assert np.array_equal(back.graph_buf, store.graph_buf)
+    assert np.array_equal(back.vec_buf, store.vec_buf)
+    assert np.array_equal(back.meta_table, store.meta_table)
+    assert np.array_equal(back.n_base, store.n_base)
+    assert back.spec == store.spec
+
+    spec = store.spec
+    for pids in (np.zeros(0, np.int64),                 # zero descriptors
+                 np.arange(spec.n_partitions)):         # max-size batch
+        assert np.array_equal(W.dec_pids(W.enc_pids(pids)), pids)
+        m = len(pids)
+        ids = (np.stack([store.span_block_ids(int(p)) for p in pids])
+               if m else np.zeros((0, spec.fetch_blocks), np.int64))
+        g = store.graph_buf[ids.reshape(-1)].reshape(m, spec.fetch_blocks,
+                                                     spec.gblk)
+        v = store.vec_buf[ids.reshape(-1)].reshape(m, spec.fetch_blocks,
+                                                   spec.vblk)
+        payload = W.enc_spans_resp(spec, quant=False, g=g, v=v)
+        assert len(payload) == m * spec.partition_bytes()
+        g2, v2 = W.dec_spans_resp(spec, payload, m=m, quant=False)
+        assert np.array_equal(g, g2) and np.array_equal(v, v2)
+
+
+def test_wire_quant_frames_roundtrip(pds):
+    """int8 payloads: quant span responses in both layouts (full graph
+    blocks vs compact gid tails), quant row responses, and the
+    extract/rebuild tail pair restoring every id lane."""
+    data, _ = pds
+    store = _tiny_store(data)
+    from repro.core.layout import attach_quant_mirror
+    attach_quant_mirror(store, 32)
+    spec = store.spec
+    pids = np.array([0, 3, 6])
+    m = len(pids)
+    ids = np.stack([store.span_block_ids(int(p)) for p in pids])
+    qv = store.qvec_buf[ids.reshape(-1)].reshape(m, spec.fetch_blocks, -1)
+    qs = store.qscale_buf[ids.reshape(-1)].reshape(m, spec.fetch_blocks, -1)
+    g = store.graph_buf[ids.reshape(-1)].reshape(m, spec.fetch_blocks, -1)
+    sides = W.span_sides(store.meta_table, pids)
+
+    payload = W.enc_spans_resp(spec, quant=True, graph=True, qv=qv, qs=qs,
+                               g=g)
+    assert len(payload) == m * spec.quant_partition_bytes(
+        include_graph=True)
+    qv2, qs2, g2 = W.dec_spans_resp(spec, payload, m=m, quant=True,
+                                    graph=True)
+    assert np.array_equal(qv, qv2) and np.array_equal(qs, qs2)
+    assert np.array_equal(g, g2)
+
+    tails = W.extract_gid_tails(spec, g, sides)
+    payload = W.enc_spans_resp(spec, quant=True, graph=False, qv=qv, qs=qs,
+                               tails=tails)
+    assert len(payload) == m * spec.quant_partition_bytes(
+        include_graph=False)
+    qv2, qs2, t2 = W.dec_spans_resp(spec, payload, m=m, quant=True,
+                                    graph=False)
+    assert np.array_equal(tails, t2)
+    rebuilt = W.rebuild_quant_gspans(spec, t2, sides)
+    # every id lane restored exactly; non-id lanes are -1 by contract
+    assert np.array_equal(W.extract_gid_tails(spec, rebuilt, sides), tails)
+
+    rows = np.array([0, 5, 130], np.int64)
+    codes = store.qvec_buf.reshape(-1, spec.dim)[rows]
+    scales = store.qscale_buf.reshape(-1, spec.dim // 32)[rows]
+    payload = W.enc_quant_rows_resp(codes, scales)
+    c2, s2 = W.dec_quant_rows_resp(payload, len(rows), spec.dim, 32)
+    assert np.array_equal(codes, c2) and np.array_equal(scales, s2)
+
+
+def test_wire_append_and_write_blocks_roundtrip(pds):
+    data, _ = pds
+    store = _tiny_store(data)
+    spec = store.spec
+    vec = data[0] + 0.25
+    payload, flags = W.enc_append(vec, 42, 3)
+    v2, gid, pid, codes, scales = W.dec_append(payload, flags, spec.dim, 1)
+    assert np.array_equal(np.asarray(vec, np.float32), v2)
+    assert (gid, pid, codes, scales) == (42, 3, None, None)
+    assert len(payload) == spec.dim * 4 + 8 + 8   # model bytes + address
+
+    from repro.quant.codec import quantize_groups
+    from repro.core.layout import attach_quant_mirror
+    attach_quant_mirror(store, 32)
+    codes, scales = quantize_groups(np.asarray(vec, np.float32), 32)
+    payload, flags = W.enc_append(vec, 42, 3, codes, scales)
+    assert flags & W.FLAG_QUANT
+    v2, gid, pid, c2, s2 = W.dec_append(payload, flags, spec.dim, 32)
+    assert np.array_equal(codes, c2) and np.array_equal(scales, s2)
+
+    ids = np.arange(spec.group_blocks)            # one group's blocks
+    payload, flags = W.enc_write_blocks(store, ids)
+    upd = W.dec_write_blocks(payload, flags, store.spec)  # spec now quant
+    assert np.array_equal(upd["ids"], ids)
+    assert np.array_equal(upd["g"], store.graph_buf[ids])
+    assert np.array_equal(upd["v"], store.vec_buf[ids])
+    assert np.array_equal(upd["qv"], store.qvec_buf[ids])
+    assert np.array_equal(upd["meta"], store.meta_table)
+
+    meta_payload = W.enc_meta_resp(store)
+    meta, n_base = W.dec_meta_resp(meta_payload, spec.n_partitions)
+    assert np.array_equal(meta, store.meta_table)
+    assert np.array_equal(n_base, store.n_base)
+
+
+if HAVE_HYPOTHESIS:
+    @given(n=st.integers(0, 200), seed=st.integers(0, 2**32 - 1),
+           dim=st.sampled_from([8, 32, 128]))
+    @settings(max_examples=50, deadline=None)
+    def test_wire_row_frames_property(n, seed, dim):
+        """Randomized round-trips: pid/row batches of any size (zero
+        included) and f32/int8 row payloads reproduce exactly."""
+        rng = np.random.default_rng(seed)
+        rows = rng.integers(-1, 1 << 40, size=n, dtype=np.int64)
+        assert np.array_equal(W.dec_rows(W.enc_rows(rows)), rows)
+        vrows = rng.standard_normal((n, dim)).astype(np.float32)
+        assert np.array_equal(
+            W.dec_rows_resp(W.enc_rows_resp(vrows), n, dim), vrows)
+        codes = rng.integers(-127, 128, size=(n, dim)).astype(np.int8)
+        scales = rng.standard_normal((n, dim // 8)).astype(np.float32)
+        c2, s2 = W.dec_quant_rows_resp(
+            W.enc_quant_rows_resp(codes, scales), n, dim, 8)
+        assert np.array_equal(codes, c2) and np.array_equal(scales, s2)
+
+    @given(op=st.sampled_from(sorted(W.OP_NAMES)),
+           flags=st.integers(0, 0xFFFF), seq=st.integers(0, 2**32 - 1),
+           n=st.integers(0, 4096))
+    @settings(max_examples=100, deadline=None)
+    def test_wire_header_property(op, flags, seq, n):
+        hdr = W.pack_frame(op, bytes(n), flags=flags,
+                           seq=seq)[:W.HEADER_BYTES]
+        assert W.unpack_header(hdr) == (op, flags, seq, n)
+
+
+# ------------------------------------------------------------ conformance
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+@pytest.mark.parametrize("mode", ["naive", "full"])
+def test_remote_bit_identical_search_insert(servers, pds, mode, quant):
+    """The conformance gate: RemotePool — single server, and as two
+    ShardedPool children over two server processes — returns bit-
+    identical search/insert results AND identical NetLedger accounting
+    vs LocalPool, while the measured span wire bytes equal the model."""
+    data, queries = pds
+    base = _build("local", data, mode=mode, quant=quant)
+    d0, g0, st0 = base.search(queries, k=10)
+    new = queries[:3] + 0.001
+    gids0 = base.insert(new)
+    d1, g1, _ = base.search(queries[:8], k=10)
+
+    rem = _build("remote", data, mode=mode, quant=quant,
+                 endpoints=(servers[0],))
+    d, g, st = rem.search(queries, k=10)
+    assert np.array_equal(d0, d) and np.array_equal(g0, g)
+    for key in ("round_trips", "descriptors", "bytes", "bytes_saved"):
+        assert st0["net"][key] == st["net"][key], key
+    assert np.array_equal(gids0, rem.insert(new))
+    d, g, _ = rem.search(queries[:8], k=10)
+    assert np.array_equal(d1, d) and np.array_equal(g1, g)
+    wvm = rem.pool.wire_vs_model()
+    for verb in ("read_spans", "read_spans_quant"):
+        if verb in wvm:
+            assert wvm[verb]["measured"] == wvm[verb]["modeled"], wvm
+
+    # two ShardedPool children over two loopback server processes
+    sh = _build("remote", data, mode=mode, quant=quant,
+                endpoints=tuple(servers))
+    d, g, st = sh.search(queries, k=10)
+    assert np.array_equal(d0, d) and np.array_equal(g0, g)
+    assert st["pool"]["kind"] == "sharded"
+    assert st["pool"]["n_shards"] == 2
+    assert all(s["kind"] == "remote" for s in st["pool"]["shards"])
+    assert np.array_equal(gids0, sh.insert(new))
+    d, g, st = sh.search(queries[:8], k=10)
+    assert np.array_equal(d1, d) and np.array_equal(g1, g)
+    assert st["pool"]["wire_total"]["bytes_rx"] > 0
+
+
+def test_remote_wire_matches_ledger_accounting(servers, pds):
+    """Measured wire bytes == NetLedger accounting, verb by verb: span
+    frames carry exactly the modeled span bytes (trips == frames sent),
+    and a row fetch for the rows ``post_row_reads`` charged moves
+    exactly the charged bytes."""
+    data, _ = pds
+    store = _tiny_store(data)
+    pool = RemotePool(store, servers[0])
+    led = NetLedger(RDMA_100G)
+
+    pids = np.array([0, 2, 3, 5, 6])
+    pool.read_spans(pids, ledger=led, doorbell=2)
+    spans_frames = pool.wire["frames_by_verb"]["read_spans"]
+    assert spans_frames == 3                     # ceil(5 / 2) batches
+    assert led.round_trips == spans_frames       # trips == frames sent
+    wvm = pool.wire_vs_model()["read_spans"]
+    assert wvm["measured"] == wvm["modeled"] == led.bytes
+
+    # rows: charge first (the accounting verb), then move the same rows
+    groups = [(0, 2), (2, 3)]
+    before = led.bytes
+    pool.post_row_reads(groups, ledger=led, doorbell=8)
+    charged = led.bytes - before
+    rows = np.array([0, 1, 130, 131, 132], np.int64)   # 5 distinct rows
+    pool.read_rows(rows)
+    measured = pool.wire["payload_by_verb"]["read_rows"]
+    assert measured == charged == len(rows) * store.spec.row_bytes()
+
+    # quant spans, both layouts
+    pool.attach_quant(32)
+    for graph in (True, False):
+        led_q = NetLedger(RDMA_100G)
+        pool.read_spans(pids, ledger=led_q, doorbell=4, quant=True,
+                        quant_graph=graph)
+        assert led_q.bytes == len(pids) * store.spec.quant_partition_bytes(
+            include_graph=graph)
+    wvm = pool.wire_vs_model()["read_spans_quant"]
+    assert wvm["measured"] == wvm["modeled"]
+
+    # zero-descriptor batch: legal, free, frameless
+    before = dict(pool.wire["frames_by_verb"])
+    g, v = pool.read_spans(np.zeros(0, np.int64), ledger=led)
+    assert g.shape[0] == 0
+    assert pool.wire["frames_by_verb"] == before
+
+
+def test_remote_append_repack_keep_regions_coherent(servers, pds):
+    """Writes land on both sides: appends fill the shared overflow until
+    repack, and after the client-side repack + block WRITE the server
+    region equals the mirror bit for bit."""
+    data, _ = pds
+    extra = {}
+
+    def lookup(gids):
+        out = np.zeros((len(gids), data.shape[1]), np.float32)
+        for i, g in enumerate(int(x) for x in gids):
+            out[i] = data[g] if g < len(data) else extra[g]
+        return out
+
+    s_local, s_rem = _tiny_store(data, ov_cap=8), _tiny_store(data, ov_cap=8)
+    lp = LocalPool(s_local)
+    rp = RemotePool(s_rem, servers[0])
+    lp.attach_quant(32)
+    rp.attach_quant(32)
+    gid = 50_000
+    while True:
+        vec = data[0] + 0.01 * (gid - 50_000 + 1)
+        extra[gid] = vec
+        sl = lp.append(vec, gid, 1, ledger=None)
+        sr = rp.append(vec, gid, 1, ledger=None)
+        assert sl == sr
+        if sl < 0:
+            break
+        gid += 1
+    assert lp.repack(0, lookup) == rp.repack(0, lookup) is True
+    assert np.array_equal(s_local.graph_buf, s_rem.graph_buf)
+    assert np.array_equal(s_local.vec_buf, s_rem.vec_buf)
+    assert np.array_equal(s_local.meta_table, s_rem.meta_table)
+    assert np.array_equal(s_local.qvec_buf, s_rem.qvec_buf)
+    server_meta, _ = rp.server_meta()
+    assert np.array_equal(server_meta, s_rem.meta_table)
+    a = lp.read_spans(np.arange(4), ledger=None)
+    b = rp.read_spans(np.arange(4), ledger=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_remote_migration_restages_destination(servers, pds):
+    """Freq placement over two remote children with unequal fabrics
+    migrates hot groups; the destination server is re-staged over the
+    wire (refresh_blocks) so results stay bit-identical, and appends
+    after the move land on a coherent owner."""
+    data, _ = pds
+    slow = Fabric("slow", rtt_s=100e-6, bw_Bps=0.5e9, per_op_s=5e-6,
+                  max_doorbell=32)
+    s_local, s_rem = _tiny_store(data), _tiny_store(data)
+    lp = LocalPool(s_local)
+    fabrics = (RDMA_100G, slow)
+    sp = ShardedPool(
+        s_rem,
+        [lambda st, ep=ep, f=f: RemotePool(st, ep, fabric=f)
+         for ep, f in zip(servers, fabrics)],
+        placement=FrequencyAwarePlacement(migrate_every=16, max_moves=2))
+    led = NetLedger(RDMA_100G)
+    hot = np.array([2 * g for g in range(4)
+                    if sp.owner_of_group(g) == 1][:2])
+    assert len(hot), "expected some groups on the slow shard"
+    for _ in range(30):
+        sp.read_spans(hot, ledger=led, doorbell=2)
+    snap = sp.snapshot()
+    assert snap["migration"]["n"] >= 1, "hot groups should migrate"
+    migrated = [s for s in snap["shards"]
+                if "migrate" in s["wire"]["payload_by_verb"]]
+    assert migrated, "migration bytes should cross the wire"
+    a = lp.read_spans(np.arange(8), ledger=None)
+    b = sp.read_spans(np.arange(8), ledger=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    vec = data[5] + 0.5
+    assert lp.append(vec, 77_000, int(hot[0]), ledger=None) \
+        == sp.append(vec, 77_000, int(hot[0]), ledger=None) >= 0
+    a = lp.read_spans(np.arange(8), ledger=None)
+    b = sp.read_spans(np.arange(8), ledger=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------- failure
+
+def test_remote_verb_error_does_not_poison_connection(servers, pds):
+    """A server-side verb error inside a pipelined doorbell batch is a
+    RuntimeError for THAT call only: the remaining in-flight responses
+    are drained, so the connection keeps serving (a healthy server must
+    never start looking like a dead one)."""
+    data, _ = pds
+    s_local, s_rem = _tiny_store(data), _tiny_store(data)
+    lp = LocalPool(s_local)
+    pool = RemotePool(s_rem, servers[1])
+    # pid 999 is out of range: the first frame errors server-side while
+    # the second (valid) frame's response is already in flight
+    with pytest.raises(RuntimeError, match="pool server error"):
+        pool.read_spans(np.array([0, 999, 1, 2]), ledger=None, doorbell=2)
+    a = lp.read_spans(np.arange(4), ledger=None)
+    b = pool.read_spans(np.arange(4), ledger=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_remote_server_kill_raises_clean_error(pds):
+    """A vanished server is a PoolUnavailableError at the next verb —
+    bounded by the socket timeout, never a hang — and connecting to a
+    dead endpoint fails the same way."""
+    data, _ = pds
+    store = _tiny_store(data)
+    with spawn_pool_servers(1) as eps:
+        pool = RemotePool(store, eps[0], timeout_s=5.0)
+        pool.read_spans(np.arange(2), ledger=None)
+        endpoint = parse_endpoint(eps[0])
+    # context exit terminated the server process
+    t0 = time.time()
+    with pytest.raises(PoolUnavailableError):
+        pool.read_spans(np.arange(2), ledger=None)
+    assert time.time() - t0 < 10.0, "should fail fast, not hang"
+    # the connection is closed for good: the next verb fails too
+    with pytest.raises(PoolUnavailableError):
+        pool.read_rows(np.array([0, 1]))
+    with pytest.raises(PoolUnavailableError):
+        RemotePool(_tiny_store(data), endpoint, connect_timeout_s=2.0)

@@ -1,0 +1,153 @@
+"""Perf gate: fail CI when a fresh smoke bench regresses vs baseline.
+
+The BENCH_*.json trajectory was write-only — every CI run uploaded the
+smoke blobs as artifacts and nobody compared them.  This gate closes
+the loop: committed baselines live in ``benchmarks/baselines/`` and a
+fresh run must stay within ``--threshold`` (default 25%) of them.
+
+Only DETERMINISTIC metrics are gated — counted verbs (round trips,
+descriptors, bytes) and the fabric-model time they price to, plus
+recall.  Wall-clock fields (``wall_s``, ``qps``, ``p*_ms``) vary with
+the runner and are never compared; that is why ``BENCH_serving.json``
+has no baseline.  On this codebase the gated metrics are exactly
+reproducible, so the 25% slack only exists to let intentional small
+workload tweaks through — any real change should refresh the baseline
+in the same PR (run the smoke bench, copy the blob over, review the
+diff).
+
+Matching: rows are keyed by every scalar field that is not a gated or
+ignored metric (mode/quant/fabric/placement/...).  A baseline row with
+no fresh counterpart fails the gate — silently dropped coverage is a
+regression too; fresh rows with no baseline (new coverage) pass.
+
+Usage (CI runs it after the smoke benches, from the repo root):
+
+    python benchmarks/perf_gate.py
+    python benchmarks/perf_gate.py --threshold 0.10 BENCH_pool.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# metric -> direction a REGRESSION moves; everything else is identity
+# or ignored.  "up" = bigger is worse (bytes, trips, modeled time);
+# "down" = smaller is worse (recall, dedup savings).
+GATED = {
+    "round_trips_per_q": "up", "descriptors_per_q": "up",
+    "kb_per_q": "up", "model_kb_per_q": "up", "wire_kb_per_q": "up",
+    "sim_us_per_q": "up", "byte_imbalance": "up",
+    "round_trips": "up", "mbytes": "up", "rereplicate_mb": "up",
+    "recall": "down", "mbytes_saved": "down", "id_match": "down",
+}
+# measured on the runner's clock, or incidental detail — never gated
+IGNORED = frozenset({
+    "wall_s", "qps", "p50_ms", "p95_ms", "p99_ms", "kill_batch_ms",
+    "wire_frames", "wire_frame_overhead_kb", "span_wire_vs_model",
+    "migrations", "mean_fused_batch", "speedup_vs_serial", "endpoint",
+    "pallas_us", "ref_us", "deaths", "read_retries",
+    "rereplicated_groups", "lost_groups",
+})
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a bench row: its non-metric scalar fields."""
+    return tuple(sorted((k, v) for k, v in row.items()
+                        if k not in GATED and k not in IGNORED
+                        and isinstance(v, (str, bool, int, float))))
+
+
+def compare_rows(where: str, base: dict, fresh: dict,
+                 threshold: float) -> list[str]:
+    fails = []
+    for metric, direction in GATED.items():
+        if metric not in base or metric not in fresh:
+            continue
+        b, f = float(base[metric]), float(fresh[metric])
+        if direction == "up":
+            bad = f > b * (1.0 + threshold) + 1e-9
+        else:
+            bad = f < b * (1.0 - threshold) - 1e-9
+        if bad:
+            fails.append(f"{where}: {metric} {b:g} -> {f:g} "
+                         f"({(f - b) / max(abs(b), 1e-12):+.0%})")
+    return fails
+
+
+def iter_tables(blob: dict):
+    """Yield (name, rows) for every row table in a bench blob; a bare
+    metrics dict (e.g. the pool chaos row) counts as a 1-row table."""
+    for name, val in blob.items():
+        if isinstance(val, list) and val and all(
+                isinstance(r, dict) for r in val):
+            yield name, val
+        elif isinstance(val, dict) and any(k in GATED for k in val):
+            yield name, [val]
+
+
+def gate_file(name: str, base_path: str, fresh_path: str,
+              threshold: float) -> list[str]:
+    with open(base_path) as f:
+        base = json.load(f)
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except OSError:
+        return [f"{name}: fresh blob missing at {fresh_path} — did the "
+                f"smoke bench run?"]
+    fails = []
+    fresh_tables = dict(iter_tables(fresh))
+    for tname, base_rows in iter_tables(base):
+        fresh_rows = {row_key(r): r for r in fresh_tables.get(tname, [])}
+        for brow in base_rows:
+            key = row_key(brow)
+            frow = fresh_rows.get(key)
+            where = f"{name}:{tname}[{', '.join(f'{k}={v}' for k, v in key)}]"
+            if frow is None:
+                fails.append(f"{where}: baseline row has no fresh "
+                             f"counterpart (workload changed? refresh "
+                             f"benchmarks/baselines/)")
+                continue
+            fails.extend(compare_rows(where, brow, frow, threshold))
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("blobs", nargs="*",
+                    default=["BENCH_pool.json", "BENCH_quant.json"],
+                    help="bench blob filenames to gate (must exist in "
+                         "--baseline-dir)")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression that fails the gate")
+    args = ap.parse_args()
+    all_fails = []
+    for name in args.blobs:
+        base_path = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(base_path):
+            print(f"perf-gate: no baseline for {name} "
+                  f"({base_path} missing), skipping")
+            continue
+        fails = gate_file(name, base_path,
+                          os.path.join(args.fresh_dir, name),
+                          args.threshold)
+        status = "FAIL" if fails else "ok"
+        print(f"perf-gate: {name}: {status}")
+        all_fails.extend(fails)
+    for line in all_fails:
+        print(f"  REGRESSION {line}")
+    if all_fails:
+        print(f"perf-gate: {len(all_fails)} regression(s) beyond "
+              f"{args.threshold:.0%} — if intentional, refresh "
+              f"benchmarks/baselines/ in this PR")
+        return 1
+    print("perf-gate: all gated metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

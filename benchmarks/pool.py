@@ -28,9 +28,17 @@ reports the *measured* wire payload bytes and frames, and asserts
 span-verb parity (measured == modeled) — the model validated against
 an actual wire instead of trusted.
 
+The ``--chaos`` sweep is the ROADMAP failover gate: the workload runs
+with ``replication=2`` over REAL loopback ``PoolServer`` processes and
+one server is killed -9 mid-run.  The gate asserts no
+``PoolUnavailableError`` reaches the caller, every batch stays
+bit-identical to ``LocalPool``, and reports per-batch latency
+percentiles (the kill batch pays re-replication once; nothing may hang
+on the dead socket, so p99 stays bounded).
+
 Writes ``BENCH_pool.json``.  ``--smoke`` is the CI crash check: tiny
-config, asserts nothing about perf (the transport parity assert still
-runs — it is a correctness property, not a perf bar).
+config, asserts nothing about perf (the transport parity and chaos
+asserts still run — they are correctness properties, not perf bars).
 """
 from __future__ import annotations
 
@@ -162,6 +170,69 @@ def run_transports(*, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def run_chaos(*, smoke: bool = False) -> dict:
+    """Kill -9 one of two replicated loopback pool servers mid-run.
+
+    The same batch stream is driven through a ``replication=2`` remote
+    pool and a ``LocalPool`` reference in lockstep (same call index, so
+    compute-side caches warm identically).  Halfway through, one
+    ``PoolServer`` gets SIGKILL.  Asserts the failover contract — no
+    error surfaces, results stay bit-identical — and reports per-batch
+    latency percentiles plus the failover counters.
+    """
+    from repro.net import spawn_pool_servers
+    n, n_rep, n_batches = (1500, 12, 8) if smoke else (8_000, 32, 16)
+    ds = sift_like(n=n, n_queries=64, seed=0)
+    kw = dict(mode="full", search_mode="scan", b=3, ef=32, n_rep=n_rep,
+              cache_frac=0.25, doorbell=16, fabric=RDMA_100G, seed=0)
+    ref = DHNSWEngine(EngineConfig(pool="local", **kw)).build(ds.data)
+    per = max(len(ds.queries) // n_batches, 1)
+    kill_at = n_batches // 2
+    lat, mismatches = [], 0
+    # 3 servers so R=2 does NOT fully replicate: the kill strips one
+    # replica from ~2/3 of the groups and forces real re-replication
+    with spawn_pool_servers(3, with_procs=True) as (eps, procs):
+        eng = DHNSWEngine(EngineConfig(pool="remote",
+                                       endpoints=tuple(eps),
+                                       replication=2, **kw)).build(ds.data)
+        for i in range(n_batches):
+            qb = ds.queries[i * per:(i + 1) * per]
+            if i == kill_at:
+                procs[0].kill()
+                procs[0].wait(timeout=10)
+            t0 = time.perf_counter()
+            d, g, _ = eng.search(qb, k=10)
+            lat.append(time.perf_counter() - t0)
+            dr, gr, _ = ref.search(qb, k=10)
+            if not (np.array_equal(d, dr) and np.array_equal(g, gr)):
+                mismatches += 1
+        snap = eng.pool.snapshot()
+    assert mismatches == 0, \
+        f"{mismatches} post-kill batches diverged from LocalPool"
+    fo = snap["failover"]
+    assert fo["deaths"] == 1 and fo["lost_groups"] == 0, fo
+    arr = np.asarray(lat, np.float64) * 1e3
+    # bounded p99: every batch completed (no hang on the dead socket);
+    # the kill batch pays dead-socket detection + re-replication once
+    assert np.all(np.isfinite(arr)) and float(arr.max()) < 60_000.0, arr
+    row = {"replication": 2, "n_batches": n_batches,
+           "kill_batch": kill_at, "deaths": fo["deaths"],
+           "read_retries": fo["read_retries"],
+           "rereplicated_groups": fo["rereplicated_groups"],
+           "rereplicate_mb": round(fo["rereplicate_bytes"] / 1e6, 3),
+           "lost_groups": fo["lost_groups"],
+           "bit_identical_to_local": True,
+           "p50_ms": round(float(np.percentile(arr, 50)), 3),
+           "p99_ms": round(float(np.percentile(arr, 99)), 3),
+           "kill_batch_ms": round(float(arr[kill_at]), 3)}
+    print(f"chaos: kill -9 at batch {kill_at}/{n_batches}, "
+          f"rereplicated {row['rereplicated_groups']} groups "
+          f"({row['rereplicate_mb']} MB), p50 {row['p50_ms']} ms, "
+          f"p99 {row['p99_ms']} ms, kill batch {row['kill_batch_ms']} ms, "
+          f"bit-identical to local", flush=True)
+    return row
+
+
 def straggler_fabrics(n_shards: int, slowdown: float = 8.0) -> tuple:
     """n_shards fabrics, the last one ``slowdown``x worse on every term."""
     base = RDMA_100G
@@ -252,7 +323,8 @@ def _load_blob(out: str, fallback: dict) -> dict:
 
 
 def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
-        shards_only: bool = False, transport_only: bool = False) -> dict:
+        shards_only: bool = False, transport_only: bool = False,
+        chaos_only: bool = False) -> dict:
     if smoke:
         n, n_rep, n_batches = 1500, 12, 2
         modes = ("full",)
@@ -269,6 +341,14 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
             json.dump(blob, f, indent=2)
         print(f"wrote {out} ({len(blob['transport_rows'])} "
               f"transport rows)")
+        return blob
+    if chaos_only:
+        blob = _load_blob(out, {"bench": "pool", "smoke": smoke,
+                                "rows": []})
+        blob["chaos"] = run_chaos(smoke=smoke)
+        with open(out, "w") as f:
+            json.dump(blob, f, indent=2)
+        print(f"wrote {out} (chaos row)")
         return blob
     rows = []
     if not shards_only:
@@ -297,7 +377,8 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
         blob = {"bench": "pool", "smoke": smoke, "n": n, "n_rep": n_rep,
                 "n_batches": n_batches, "rows": rows,
                 "shard_rows": shard_rows,
-                "transport_rows": transport_rows}
+                "transport_rows": transport_rows,
+                "chaos": run_chaos(smoke=smoke)}
     with open(out, "w") as f:
         json.dump(blob, f, indent=2)
     print(f"wrote {out} ({len(blob['rows'])} + {len(shard_rows)} shard "
@@ -314,10 +395,13 @@ def main():
     ap.add_argument("--transport", action="store_true",
                     help="run only the transport comparison (local vs "
                          "sim_rdma vs loopback remote; spawns a server)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the failover chaos gate (replication=2 "
+                         "over loopback servers, kill -9 one mid-run)")
     ap.add_argument("--out", default="BENCH_pool.json")
     args = ap.parse_args()
     run(smoke=args.smoke, out=args.out, shards_only=args.shards,
-        transport_only=args.transport)
+        transport_only=args.transport, chaos_only=args.chaos)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ one request at a time.
 instances, or pass nothing and the demo forks ``--shards`` loopback
 servers itself.  The summary then includes a per-endpoint verb/byte
 table with the *measured* wire traffic next to the modeled ledger.
+
+``--replication 2`` (sharded/remote pools) keeps every group on two
+distinct memory nodes: reads are served from the best live replica and
+the fleet survives a node death mid-traffic (see docs/operations.md
+for the failure semantics and the snapshot fields this demo prints).
 """
 import argparse
 import contextlib
@@ -76,6 +81,11 @@ def main():
     ap.add_argument("--placement", default="round_robin",
                     choices=("round_robin", "size_balanced", "freq"),
                     help="group placement policy under --pool sharded")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="replicas of every group across distinct "
+                         "memory nodes (sharded/remote pools; >= 2 "
+                         "survives a node death with transparent "
+                         "failover, see docs/operations.md)")
     ap.add_argument("--endpoints", default="",
                     help="comma-separated host:port pool servers for "
                          "--pool remote (empty = fork --shards loopback "
@@ -99,7 +109,8 @@ def main():
                                        quant="int8" if args.quant else "none",
                                        pool=args.pool, n_shards=args.shards,
                                        placement=args.placement,
-                                       endpoints=endpoints)
+                                       endpoints=endpoints,
+                                       replication=args.replication)
                           ).build(ds.data)
         run_demo(args, ds, eng)
 
@@ -186,7 +197,14 @@ def run_demo(args, ds, eng):
     if pool and pool.get("kind") == "sharded":
         print(f"\n  sharded pool: {pool['n_shards']} memory nodes, "
               f"placement={pool['placement']}, "
+              f"replication={pool.get('replication', 1)}, "
               f"{pool['migration']['n']} migrations")
+        fo = pool.get("failover", {})
+        if fo.get("deaths") or fo.get("lost_groups"):
+            print(f"    failover: {fo['deaths']} deaths, "
+                  f"{fo['read_retries']} read retries, "
+                  f"{fo['rereplicated_groups']} groups re-replicated, "
+                  f"{fo['lost_groups']} lost")
         for i, sh in enumerate(pool["shards"]):
             tot = sh["totals"]
             verbs = sum(v for k, v in sh["verbs"].items()

@@ -104,6 +104,16 @@ class EngineConfig:
     shard_parallel: bool = True     # shards answer doorbell batches
                                     # concurrently (trips/modeled time
                                     # reduce by max); False sums
+    # replication: copies of every group across distinct shards (clamped
+    # to the shard count).  R >= 2 makes the sharded/remote pool survive
+    # a node death: reads fail over to a surviving replica and the dead
+    # node's groups re-replicate from the host region.  R = 1 keeps the
+    # pre-replication behavior (a death surfaces PoolUnavailableError).
+    replication: int = 1
+    # per-shard capacity budgets in bytes (len == shard count); groups
+    # that would overflow a shard spill to the next-best one.  None =
+    # unbounded shards.
+    shard_budgets: Optional[tuple] = None
     # stage-1 flat kernel route: "off" keeps the per-pair jnp path;
     # "auto" routes flat (scan-mode) stage 1 through the fused
     # quant_topk Pallas kernel when the quantized tier is dense-resident
@@ -140,6 +150,10 @@ class DHNSWEngine:
                     "shard_transport='remote' needs one endpoint per shard"
         if self.cfg.pool == "remote":
             assert self.cfg.endpoints, "pool='remote' needs endpoints"
+        assert self.cfg.replication >= 1, self.cfg.replication
+        if self.cfg.replication > 1:
+            assert self.cfg.pool in ("sharded", "remote"), \
+                "replication needs a multi-node pool (sharded/remote)"
         self.client = ComputeClient(self.cfg, make_pool_factory(self.cfg))
 
     # ------------------------------------------------------------ lifecycle

@@ -47,13 +47,10 @@ from repro.core.cost_model import RDMA_100G, Fabric, NetLedger
 from repro.core.layout import Store
 from repro.core.scheduler import doorbell_chunks
 from repro.net import wire as W
-from repro.pool.protocol import MemoryPool, _fresh_totals, span_wire_bytes
+from repro.pool.protocol import (MemoryPool, PoolUnavailableError,
+                                 _fresh_totals, span_wire_bytes)
 
-
-class PoolUnavailableError(ConnectionError):
-    """The pool server cannot be reached (dead, unreachable, or timed
-    out).  Raised instead of hanging on a vanished memory node."""
-
+__all__ = ["RemotePool", "PoolUnavailableError", "parse_endpoint"]
 
 Endpoint = Union[str, tuple]
 
@@ -70,6 +67,16 @@ def parse_endpoint(ep: Endpoint) -> tuple:
 
 
 class RemotePool(MemoryPool):
+    """MemoryPool over TCP: verbs marshaled to a ``PoolServer``.
+
+    Keeps a host mirror of the region (writes run the same
+    deterministic insert on both sides), counts every byte that crosses
+    the socket per verb (``wire``), and cross-checks measured payloads
+    against the ledger model (``wire_vs_model``).  A dead or
+    unreachable server raises ``PoolUnavailableError`` instead of
+    hanging — the hook a replicated ``ShardedPool`` parent fails over
+    on.
+    """
 
     kind = "remote"
 
@@ -114,6 +121,7 @@ class RemotePool(MemoryPool):
             f"pool server {self.endpoint} unavailable: {e}") from e
 
     def close(self) -> None:
+        """Drop the connection (idempotent); the server keeps running."""
         if self._sock is not None:
             try:
                 self._sock.close()
@@ -195,12 +203,14 @@ class RemotePool(MemoryPool):
         self._note("attach", len(payload), 0.0)
 
     def adopt(self, store: Store) -> None:
+        """See ``MemoryPool.adopt``; re-uploads the full region."""
         self.store = store
         self._attach()
         self._mt_dev = jnp.asarray(self.store.meta_table)
         self._mt_dirty = False
 
     def attach_quant(self, group: int) -> None:
+        """See ``MemoryPool.attach_quant``; uploads the mirror."""
         LA.attach_quant_mirror(self.store, group)
         self._stage_quant()
 
@@ -235,6 +245,9 @@ class RemotePool(MemoryPool):
     def read_spans(self, pids, *, ledger: Optional[NetLedger],
                    doorbell: int = 1, quant: bool = False,
                    quant_graph: bool = True):
+        """See ``MemoryPool.read_spans``; one doorbell batch is one
+        request frame, and the measured response payload must equal the
+        modeled ``span_wire_bytes`` charge (``wire_vs_model``)."""
         spec = self.spec
         pids = np.asarray(pids).reshape(-1)
         verb = "read_spans_quant" if quant else "read_spans"
@@ -291,6 +304,8 @@ class RemotePool(MemoryPool):
         return rows_h, uniq, inv, payload
 
     def read_rows(self, rows):
+        """See ``MemoryPool.read_rows``; unique rows cross the wire once
+        (``n_uniq * row_bytes()``), duplicates rebuilt client-side."""
         self.verbs["read_rows"] += 1
         spec = self.spec
         rows_h, uniq, inv, payload = self._fetch_rows(
@@ -302,6 +317,8 @@ class RemotePool(MemoryPool):
         return jnp.asarray(out)
 
     def read_quant_rows(self, rows):
+        """See ``MemoryPool.read_quant_rows``; ships int8 codes + f32
+        group scales per unique row."""
         self.verbs["read_quant_rows"] += 1
         spec = self.spec
         rows_h, uniq, inv, payload = self._fetch_rows(
@@ -323,6 +340,9 @@ class RemotePool(MemoryPool):
 
     def append(self, vec, gid: int, pid: int, *,
                ledger: Optional[NetLedger]) -> int:
+        """See ``MemoryPool.append``; charges the modeled write bytes
+        while the wire carries the same payload + the 8-byte partition
+        address, and asserts the server landed the identical slot."""
         spec = self.spec
         vec = np.asarray(vec, np.float32)
         # stage on the mirror first: a full overflow region is decided
@@ -404,6 +424,8 @@ class RemotePool(MemoryPool):
             pass
 
     def snapshot(self) -> dict:
+        """See ``MemoryPool.snapshot``; adds endpoint, fabric, measured
+        wire counters, and the wire-vs-model cross-check."""
         from repro.pool.sim_rdma import fabric_params
         out = super().snapshot()
         out["endpoint"] = f"{self.endpoint[0]}:{self.endpoint[1]}"

@@ -76,10 +76,12 @@ class HostRegion:
     # ------------------------------------------------------------ verbs
 
     def attach(self, payload, flags):
+        """Adopt a full uploaded region as this node's source of truth."""
         self.store = W.dec_attach(payload, flags)
         return b"", 0
 
     def attach_quant(self, payload, flags):
+        """Adopt an uploaded int8 + codebook mirror of the region."""
         store = self._require()
         spec, qv, qs = W.dec_attach_quant(payload)
         if spec.quant_group != store.spec.quant_group:
@@ -90,6 +92,8 @@ class HostRegion:
         return b"", 0
 
     def read_spans(self, payload, flags):
+        """Serve one doorbell batch of span READs; the response payload
+        is exactly the modeled span bytes (see ``wire.enc_spans_resp``)."""
         store = self._require()
         spec = store.spec
         pids = W.dec_pids(payload)
@@ -128,6 +132,7 @@ class HostRegion:
         return tails
 
     def read_rows(self, payload, flags):
+        """Serve a row-granular READ: ``n_rows * row_bytes()`` f32."""
         store = self._require()
         rows = W.dec_rows(payload)
         safe = np.maximum(rows, 0)
@@ -135,6 +140,7 @@ class HostRegion:
         return W.enc_rows_resp(vrows), 0
 
     def read_quant_rows(self, payload, flags):
+        """Serve a quant-mirror row READ: codes + group scales."""
         store = self._require()
         if store.qvec_buf is None:
             raise RuntimeError("quant row read without an attached mirror")
@@ -147,9 +153,13 @@ class HostRegion:
         return W.enc_quant_rows_resp(codes, scales), 0
 
     def read_meta(self, payload, flags):
+        """Ship the metadata table + base counts (client cache refresh)."""
         return W.enc_meta_resp(self._require()), 0
 
     def append(self, payload, flags):
+        """Land a one-sided WRITE in the named partition's overflow
+        region; replies with the slot so the client can cross-check its
+        mirror ran the identical deterministic insert."""
         store = self._require()
         spec = store.spec
         vec, gid, pid, codes, scales = W.dec_append(
@@ -165,6 +175,8 @@ class HostRegion:
         return W.enc_append_resp(slot), 0
 
     def write_blocks(self, payload, flags):
+        """Block-granular region WRITE (repack result / migration /
+        replica sync): overwrite the named blocks + metadata."""
         store = self._require()
         upd = W.dec_write_blocks(payload, flags, store.spec)
         ids = upd["ids"]
@@ -180,6 +192,7 @@ class HostRegion:
         return b"", 0
 
     def stats(self, payload, flags):
+        """Control-plane JSON: verb counts, payload totals, region info."""
         out = {"verbs": dict(self.verbs),
                "payload_tx": self.payload_tx,
                "payload_rx": self.payload_rx,
@@ -232,11 +245,13 @@ class PoolServer:
 
     @property
     def endpoint(self) -> str:
+        """``host:port`` actually bound (port 0 resolves at bind)."""
         return f"{self.host}:{self.port}"
 
     # ------------------------------------------------------------ lifecycle
 
     def start(self) -> "PoolServer":
+        """Serve in a daemon thread; returns self for chaining."""
         self._accept_thread = threading.Thread(
             target=self._accept_loop, daemon=True,
             name=f"poolserver-{self.port}")
@@ -244,9 +259,11 @@ class PoolServer:
         return self
 
     def serve_forever(self) -> None:
+        """Serve on the calling thread until ``stop()`` (CLI mode)."""
         self._accept_loop()
 
     def stop(self) -> None:
+        """Stop accepting and close the listener (idempotent)."""
         self._stop.set()
         with contextlib.suppress(OSError):
             self._lsock.close()
@@ -309,13 +326,19 @@ def _src_path() -> str:
 
 @contextlib.contextmanager
 def spawn_pool_servers(n: int = 1, *, host: str = "127.0.0.1", seed: int = 0,
-                       startup_timeout_s: float = 60.0, demo_n: int = 0):
+                       startup_timeout_s: float = 60.0, demo_n: int = 0,
+                       with_procs: bool = False):
     """Fork ``n`` loopback pool-server processes; yield their endpoints.
 
     Each server binds ``--port 0`` (OS-assigned — no CI port clashes) and
     announces ``POOLSERVER LISTENING host port`` on stdout; teardown
     sends SIGTERM and escalates to SIGKILL after a timeout, so a hung
     server can never wedge a test run.
+
+    ``with_procs=True`` yields ``(endpoints, procs)`` instead — the
+    ``subprocess.Popen`` handles let chaos tests and benchmarks kill -9
+    individual servers mid-run to exercise the failover path; teardown
+    copes with already-dead processes.
     """
     env = os.environ.copy()
     src = _src_path()
@@ -339,7 +362,7 @@ def spawn_pool_servers(n: int = 1, *, host: str = "127.0.0.1", seed: int = 0,
             t = threading.Thread(target=_drain, args=(p,), daemon=True)
             t.start()
             drains.append(t)
-        yield endpoints
+        yield (endpoints, procs) if with_procs else endpoints
     finally:
         for p in procs:
             with contextlib.suppress(OSError):
@@ -399,6 +422,7 @@ def _build_demo_region(n: int, seed: int) -> HostRegion:
 
 
 def main(argv=None) -> int:
+    """CLI entry point: host one memory-pool node (see --help)."""
     ap = argparse.ArgumentParser(
         description="d-HNSW memory-pool node: host a region, serve "
                     "MemoryPool verbs over TCP")

@@ -82,6 +82,7 @@ class WireError(ValueError):
 
 def pack_frame(op: int, payload: bytes = b"", *, flags: int = 0,
                seq: int = 0) -> bytes:
+    """Header (20 B) + payload; the unit every byte counter sees."""
     return HEADER.pack(MAGIC, VERSION, op, flags, seq & 0xFFFFFFFF,
                        len(payload)) + payload
 
@@ -118,11 +119,13 @@ _SPEC = struct.Struct("<7q")
 
 
 def enc_spec(spec: LayoutSpec) -> bytes:
+    """LayoutSpec as seven little-endian i64 (56 B, fixed)."""
     return _SPEC.pack(spec.dim, spec.deg, spec.np_max, spec.ov_cap,
                       spec.slot_vecs, spec.n_partitions, spec.quant_group)
 
 
 def dec_spec(payload: bytes, off: int = 0):
+    """-> (LayoutSpec, new_off); inverse of ``enc_spec``."""
     vals = _SPEC.unpack_from(payload, off)
     spec = LayoutSpec(dim=vals[0], deg=vals[1], np_max=vals[2],
                       ov_cap=vals[3], slot_vecs=vals[4], n_partitions=vals[5],
@@ -147,6 +150,7 @@ def enc_attach(store: Store):
 
 
 def dec_attach(payload: bytes, flags: int) -> Store:
+    """Rebuild a full owned ``Store`` from an attach payload."""
     spec, off = dec_spec(payload)
     P, nb = spec.n_partitions, spec.n_blocks
     n_base, off = _take(payload, off, np.int32, (P,))
@@ -164,6 +168,7 @@ def dec_attach(payload: bytes, flags: int) -> Store:
 
 
 def enc_attach_quant(store: Store) -> bytes:
+    """Quantized-mirror upload: spec + int8 codes + f32 codebooks."""
     return b"".join([enc_spec(store.spec), _b(store.qvec_buf, np.int8),
                      _b(store.qscale_buf, np.float32)])
 
@@ -188,6 +193,7 @@ def enc_pids(pids) -> bytes:
 
 
 def dec_pids(payload: bytes) -> np.ndarray:
+    """Inverse of ``enc_pids`` -> i64 partition ids."""
     (n,) = struct.unpack_from("<I", payload, 0)
     arr, off = _take(payload, 4, np.int64, (n,))
     if off != len(payload):
@@ -274,6 +280,7 @@ def dec_spans_resp(spec: LayoutSpec, payload: bytes, *, m: int, quant: bool,
 # ----------------------------------------------------------------- rows
 
 def enc_rows(rows) -> bytes:
+    """Row-READ descriptor batch: u32 count + i64 row addresses."""
     rows = np.asarray(rows, np.int64).reshape(-1)
     return struct.pack("<I", len(rows)) + _b(rows, np.int64)
 
@@ -282,10 +289,12 @@ dec_rows = dec_pids      # identical encoding: u32 count + i64 addresses
 
 
 def enc_rows_resp(vrows: np.ndarray) -> bytes:
+    """Row READ response: exactly ``n_rows * row_bytes()`` f32."""
     return _b(vrows, np.float32)
 
 
 def dec_rows_resp(payload: bytes, n: int, dim: int) -> np.ndarray:
+    """-> (n, dim) f32 rows; inverse of ``enc_rows_resp``."""
     arr, off = _take(payload, 0, np.float32, (n, dim))
     if off != len(payload):
         raise WireError("rows response size mismatch")
@@ -293,10 +302,13 @@ def dec_rows_resp(payload: bytes, n: int, dim: int) -> np.ndarray:
 
 
 def enc_quant_rows_resp(codes: np.ndarray, scales: np.ndarray) -> bytes:
+    """Quant row response: int8 codes + f32 group scales, the modeled
+    ``quant_row_bytes()`` per row."""
     return _b(codes, np.int8) + _b(scales, np.float32)
 
 
 def dec_quant_rows_resp(payload: bytes, n: int, dim: int, group: int):
+    """-> (codes (n, dim) i8, scales (n, dim/group) f32)."""
     codes, off = _take(payload, 0, np.int8, (n, dim))
     scales, off = _take(payload, off, np.float32, (n, dim // group))
     if off != len(payload):
@@ -338,10 +350,12 @@ def dec_append(payload: bytes, flags: int, dim: int, group: int):
 
 
 def enc_append_resp(slot: int) -> bytes:
+    """Append acknowledgment: the i64 overflow slot the WRITE landed in."""
     return struct.pack("<q", slot)
 
 
 def dec_append_resp(payload: bytes) -> int:
+    """-> overflow slot index from an append response."""
     return struct.unpack("<q", payload)[0]
 
 
@@ -385,10 +399,13 @@ def dec_write_blocks(payload: bytes, flags: int, spec: LayoutSpec):
 
 
 def enc_meta_resp(store: Store) -> bytes:
+    """Metadata READ response: the full meta table + per-partition base
+    counts (the client refreshes its cached copy wholesale)."""
     return _b(store.meta_table, np.int32) + _b(store.n_base, np.int32)
 
 
 def dec_meta_resp(payload: bytes, n_partitions: int):
+    """-> (meta_table, n_base); inverse of ``enc_meta_resp``."""
     meta, off = _take(payload, 0, np.int32, (n_partitions, META_COLS))
     n_base, off = _take(payload, off, np.int32, (n_partitions,))
     if off != len(payload):
@@ -399,10 +416,12 @@ def dec_meta_resp(payload: bytes, n_partitions: int):
 # ---------------------------------------------------------- json / misc
 
 def enc_json(obj) -> bytes:
+    """Control-plane payload (stats/errors): utf-8 JSON, never priced."""
     return json.dumps(obj).encode("utf-8")
 
 
 def dec_json(payload: bytes):
+    """Inverse of ``enc_json``."""
     return json.loads(payload.decode("utf-8"))
 
 
@@ -429,6 +448,8 @@ def recv_exact(sock, n: int) -> bytes:
 
 def send_frame(sock, op: int, payload: bytes = b"", *, flags: int = 0,
                seq: int = 0) -> int:
+    """Pack + sendall one frame -> total bytes written (header included),
+    which is what the ``bytes_tx`` wire counter records."""
     buf = pack_frame(op, payload, flags=flags, seq=seq)
     sock.sendall(buf)
     return len(buf)

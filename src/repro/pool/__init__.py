@@ -54,7 +54,9 @@ def make_pool_factory(cfg):
                     for ep in eps]
         return lambda store: ShardedPool(
             store, children, placement=make_placement(cfg.placement),
-            parallel=cfg.shard_parallel)
+            parallel=cfg.shard_parallel,
+            replication=getattr(cfg, "replication", 1),
+            shard_budgets=getattr(cfg, "shard_budgets", None))
     if cfg.pool == "sharded":
         def child(fabric, ep=None):
             if cfg.shard_transport == "local":
@@ -87,5 +89,7 @@ def make_pool_factory(cfg):
         return lambda store: ShardedPool(
             store, [child(f, ep) for f, ep in zip(fabrics, eps)],
             placement=make_placement(cfg.placement),
-            parallel=cfg.shard_parallel)
+            parallel=cfg.shard_parallel,
+            replication=getattr(cfg, "replication", 1),
+            shard_budgets=getattr(cfg, "shard_budgets", None))
     raise ValueError(f"unknown pool transport {cfg.pool!r}")

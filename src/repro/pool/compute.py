@@ -54,11 +54,14 @@ class ComputeClient:
 
     @property
     def store(self):
+        """The pool's host ``Store`` (compat view for tests/benchmarks)."""
         return self.pool.store
 
     # ------------------------------------------------------------ build
 
     def build(self, data: np.ndarray) -> "ComputeClient":
+        """Partition ``data``, build the meta-HNSW + serialized region,
+        hand the region to the pool, and warm the compute-side caches."""
         cfg = self.cfg
         data = np.asarray(data, np.float32)
         self._data = data

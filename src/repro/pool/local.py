@@ -24,6 +24,8 @@ from repro.pool.protocol import MemoryPool, _fresh_totals, span_wire_bytes
 
 
 class LocalPool(MemoryPool):
+    """In-process transport: verbs are device gathers/scatters on the
+    staged region; charges follow the shared ``MemoryPool`` rule."""
 
     kind = "local"
 
@@ -49,10 +51,12 @@ class LocalPool(MemoryPool):
             self._qv_dev = self._qs_dev = None
 
     def adopt(self, store: Store) -> None:
+        """See ``MemoryPool.adopt``."""
         self.store = store
         self._stage_all()
 
     def attach_quant(self, group: int) -> None:
+        """See ``MemoryPool.attach_quant``."""
         LA.attach_quant_mirror(self.store, group)
         self._stage_quant()
 
@@ -93,6 +97,9 @@ class LocalPool(MemoryPool):
     def read_spans(self, pids, *, ledger: Optional[NetLedger],
                    doorbell: int = 1, quant: bool = False,
                    quant_graph: bool = True):
+        """See ``MemoryPool.read_spans``; charges
+        ``span_wire_bytes(spec, quant=...)`` per span, ``doorbell``
+        descriptors per round trip."""
         spec = self.spec
         pids = np.asarray(pids).reshape(-1)
         self.verbs["read_spans_quant" if quant else "read_spans"] += len(pids)
@@ -118,10 +125,13 @@ class LocalPool(MemoryPool):
         return g, qv, qs
 
     def read_rows(self, rows):
+        """See ``MemoryPool.read_rows``; charged via ``post_row_reads``."""
         self.verbs["read_rows"] += 1
         return DS.gather_rows(self._v_dev, rows, dim=self.spec.dim)
 
     def read_quant_rows(self, rows):
+        """See ``MemoryPool.read_quant_rows``; charged via
+        ``post_row_reads`` (quant rows are priced by the caller)."""
         self.verbs["read_quant_rows"] += 1
         return DS.gather_quant_rows(self._qv_dev, self._qs_dev, rows,
                                     dim=self.spec.dim,
@@ -131,6 +141,8 @@ class LocalPool(MemoryPool):
 
     def append(self, vec, gid: int, pid: int, *,
                ledger: Optional[NetLedger]) -> int:
+        """See ``MemoryPool.append``; charges vector + 8 B id, plus
+        codes + codebook scales when the quantized mirror is attached."""
         spec = self.spec
         vec = np.asarray(vec, np.float32)
         slot = LA.insert_vector(self.store, vec, int(gid), int(pid))
@@ -163,6 +175,8 @@ class LocalPool(MemoryPool):
         return slot
 
     def repack(self, group: int, data_lookup) -> bool:
+        """See ``MemoryPool.repack``; in-process, so nothing is charged
+        (the offline repack is not on the query wire)."""
         self.verbs["repack"] += 1
         ok = LA.repack_group(self.store, group, data_lookup)
         if ok:

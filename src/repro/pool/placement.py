@@ -24,6 +24,21 @@ evolution under load:
   critical path.  Counters decay after each rebalance so stale heat
   ages out instead of pinning history forever.
 
+Replication and capacity (both beyond the policies themselves) are
+layered on top by two pure functions:
+
+* ``apply_budgets``     — enforce per-shard byte budgets on an existing
+  assignment: an overflowing group spills to the *next-best* shard
+  (cheapest, then least loaded, among shards with room), and only when
+  no shard has room does it land on the globally least-loaded one — the
+  budgets are capacity targets, not hard admission control, because the
+  region has to live somewhere.
+* ``place_replicated``  — expand a primary assignment to an
+  ``(n_groups, n_replicas)`` replica matrix: column 0 is the (budgeted)
+  primary, every further column picks a *distinct* shard per group
+  ranked by (has-room, cost, load).  ``ShardedPool`` serves reads from
+  the fastest/least-loaded live replica and fans writes to all of them.
+
 Policies are stateful and owned by ONE pool each (``place`` resets the
 state); ``make_placement`` accepts either a policy name or an instance.
 """
@@ -62,11 +77,13 @@ class PlacementPolicy(abc.ABC):
 
 
 class RoundRobinPlacement(PlacementPolicy):
+    """Static baseline: group g lives on shard g % n_shards."""
 
     name = "round_robin"
 
     def place(self, n_groups: int, n_shards: int, *, group_sizes=None,
               shard_costs=None) -> np.ndarray:
+        """See ``PlacementPolicy.place``; sizes and costs are ignored."""
         return np.arange(n_groups, dtype=np.int64) % max(n_shards, 1)
 
 
@@ -79,6 +96,7 @@ class SizeBalancedPlacement(PlacementPolicy):
 
     def place(self, n_groups: int, n_shards: int, *, group_sizes=None,
               shard_costs=None) -> np.ndarray:
+        """See ``PlacementPolicy.place``; LPT over ``group_sizes``."""
         n_shards = max(n_shards, 1)
         sizes = (np.ones(n_groups) if group_sizes is None
                  else np.asarray(group_sizes, np.float64))
@@ -116,11 +134,15 @@ class FrequencyAwarePlacement(PlacementPolicy):
 
     def place(self, n_groups: int, n_shards: int, *, group_sizes=None,
               shard_costs=None) -> np.ndarray:
+        """See ``PlacementPolicy.place``; round-robin start, resets the
+        access counters that drive later ``plan_moves``."""
         self._counts = np.zeros(n_groups, np.float64)
         self._since = 0
         return np.arange(n_groups, dtype=np.int64) % max(n_shards, 1)
 
     def note_access(self, group: int) -> bool:
+        """See ``PlacementPolicy.note_access``; True every
+        ``migrate_every`` accesses."""
         if group < len(self._counts):
             self._counts[group] += 1.0
         self._since += 1
@@ -143,6 +165,8 @@ class FrequencyAwarePlacement(PlacementPolicy):
 
     def plan_moves(self, owner: np.ndarray, *, group_sizes=None,
                    shard_costs=None) -> list[tuple[int, int, int]]:
+        """See ``PlacementPolicy.plan_moves``; greedy hottest-group
+        moves off the busiest shard while the max load strictly drops."""
         owner = np.asarray(owner).copy()
         n_shards = int(owner.max()) + 1 if len(owner) else 1
         if shard_costs is not None:
@@ -173,6 +197,103 @@ class FrequencyAwarePlacement(PlacementPolicy):
             moves.append((g, src, dst))
         self._counts *= self.decay
         return moves
+
+
+# ------------------------------------------------------- capacity layer
+
+def _norm_sizes(n_groups: int, group_sizes) -> np.ndarray:
+    """Per-group size signal (live rows or bytes); uniform 1 when the
+    caller has none — budgets then count groups instead of bytes."""
+    if group_sizes is None:
+        return np.ones(n_groups, np.float64)
+    return np.asarray(group_sizes, np.float64)
+
+
+def _shard_rank(costs: np.ndarray, loads: np.ndarray) -> np.ndarray:
+    """Shards ordered best-first: cheapest (modeled seconds per span)
+    wins, load breaks cost ties, index keeps it deterministic."""
+    return np.lexsort((np.arange(len(costs)), loads, costs))
+
+
+def apply_budgets(owner: np.ndarray, *, group_sizes=None,
+                  shard_budgets: Optional[Sequence[float]] = None,
+                  shard_costs: Optional[Sequence[float]] = None
+                  ) -> np.ndarray:
+    """Capacity-aware repair of a group -> shard assignment.
+
+    Groups are kept where the policy put them while the owning shard
+    stays within its budget (``shard_budgets[s]`` in the same unit as
+    ``group_sizes``, typically bytes).  A group that would overflow its
+    shard *spills to the next-best shard* — cheapest, then least
+    loaded, among the shards that still have room — processed biggest
+    group first so the large spans get first pick of the remaining
+    capacity.  When every shard is full the group lands on the globally
+    least-loaded one: budgets shape placement, they never reject data.
+    Returns a new owner array; the input is not mutated.
+    """
+    owner = np.asarray(owner, np.int64).copy()
+    if shard_budgets is None or not len(owner):
+        return owner
+    n_shards = max(int(owner.max()) + 1, len(shard_budgets))
+    sizes = _norm_sizes(len(owner), group_sizes)
+    budgets = np.asarray(shard_budgets, np.float64)
+    costs = (np.asarray(shard_costs, np.float64) if shard_costs is not None
+             else np.zeros(n_shards))
+    loads = np.zeros(n_shards, np.float64)
+    for g in np.argsort(-sizes, kind="stable"):
+        s = int(owner[g])
+        if loads[s] + sizes[g] <= budgets[s]:
+            loads[s] += sizes[g]
+            continue
+        room = loads + sizes[g] <= budgets
+        cand = _shard_rank(costs, loads)
+        cand = [c for c in cand if room[c]]
+        s2 = int(cand[0]) if cand else int(np.argmin(loads))
+        owner[g] = s2
+        loads[s2] += sizes[g]
+    return owner
+
+
+def place_replicated(owner: np.ndarray, n_shards: int, n_replicas: int, *,
+                     group_sizes=None,
+                     shard_budgets: Optional[Sequence[float]] = None,
+                     shard_costs: Optional[Sequence[float]] = None
+                     ) -> np.ndarray:
+    """Expand a primary assignment into an (n_groups, R) replica matrix.
+
+    Column 0 is ``owner`` verbatim (already budget-repaired by the
+    caller); each further column assigns every group one more *distinct*
+    shard, chosen best-first by (still-has-room, cost, load) with loads
+    accumulated across all columns — so replicas both avoid their own
+    primaries and spread by capacity.  ``n_replicas`` is clamped to
+    ``n_shards`` (R distinct shards cannot exceed the fleet).
+    """
+    owner = np.asarray(owner, np.int64)
+    r = max(1, min(int(n_replicas), int(n_shards)))
+    reps = np.full((len(owner), r), -1, np.int64)
+    reps[:, 0] = owner
+    if r == 1:
+        return reps
+    sizes = _norm_sizes(len(owner), group_sizes)
+    budgets = (np.asarray(shard_budgets, np.float64)
+               if shard_budgets is not None
+               else np.full(n_shards, np.inf))
+    costs = (np.asarray(shard_costs, np.float64) if shard_costs is not None
+             else np.zeros(n_shards))
+    loads = np.zeros(n_shards, np.float64)
+    for g in range(len(owner)):
+        loads[owner[g]] += sizes[g]
+    for col in range(1, r):
+        for g in np.argsort(-sizes, kind="stable"):
+            taken = set(reps[g, :col].tolist())
+            cand = [int(s) for s in _shard_rank(costs, loads)
+                    if s not in taken]
+            with_room = [s for s in cand
+                         if loads[s] + sizes[g] <= budgets[s]]
+            s = (with_room or cand)[0]
+            reps[g, col] = s
+            loads[s] += sizes[g]
+    return reps
 
 
 _POLICIES = {

@@ -44,6 +44,19 @@ from repro.core.layout import LayoutSpec, Store
 from repro.core.scheduler import doorbell_chunks
 
 
+class PoolUnavailableError(ConnectionError):
+    """A memory node cannot be reached (dead, unreachable, or timed out).
+
+    Raised by transports instead of hanging on a vanished node.  Callers
+    that hold replicas (``ShardedPool`` with ``replication >= 2``) catch
+    it, mark the shard dead, and transparently retry on a surviving
+    replica; everyone else surfaces it — a single-replica pool has
+    nothing to fail over to.  Defined here (not in ``repro.net``) so the
+    failover tier never has to import the transport it is recovering
+    from.
+    """
+
+
 class MemoryPool(abc.ABC):
     """Abstract memory-pool transport.
 
@@ -66,6 +79,7 @@ class MemoryPool(abc.ABC):
 
     @property
     def spec(self) -> LayoutSpec:
+        """The region's frozen ``LayoutSpec`` (= ``store.spec``)."""
         return self.store.spec
 
     def read_meta(self):

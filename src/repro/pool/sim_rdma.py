@@ -50,6 +50,8 @@ def fanout_dt(dts: Sequence[float], parallel: bool) -> float:
 
 
 class SimulatedRDMAPool(LocalPool):
+    """LocalPool + a per-verb latency/bandwidth model: every charge
+    slice is priced on this node's ``Fabric`` into ``sim_s``."""
 
     kind = "sim_rdma"
 
@@ -83,9 +85,12 @@ class SimulatedRDMAPool(LocalPool):
 
     @property
     def sim_total_s(self) -> float:
+        """Total modeled wire seconds across all verbs."""
         return sum(self.sim_s.values())
 
     def snapshot(self) -> dict:
+        """See ``MemoryPool.snapshot``; adds fabric calibration and the
+        per-verb modeled-seconds breakdown."""
         out = super().snapshot()
         # full fabric calibration, not just the name: benchmark rows
         # built from this snapshot are self-describing

@@ -284,6 +284,17 @@ class ServeMetrics:
                                                  + wt["frames_rx"])
                     out["net"]["wire_bytes_tx"] = wt["bytes_tx"]
                     out["net"]["wire_bytes_rx"] = wt["bytes_rx"]
+                # replicated pools: surface liveness + failover next to
+                # the latency numbers so an operator sees a mid-run node
+                # death (deaths > 0, alive count down) without digging
+                # through the full per-shard snapshot
+                if "failover" in self.pool_snap:
+                    out["failover"] = dict(self.pool_snap["failover"])
+                    out["failover"]["replication"] = self.pool_snap.get(
+                        "replication", 1)
+                    alive = self.pool_snap.get("alive")
+                    if alive is not None:
+                        out["failover"]["alive_shards"] = int(sum(alive))
             for p in (50, 95, 99):
                 out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
                                    if len(lat) else 0.0)

@@ -438,3 +438,36 @@ def test_remote_server_kill_raises_clean_error(pds):
         pool.read_rows(np.array([0, 1]))
     with pytest.raises(PoolUnavailableError):
         RemotePool(_tiny_store(data), endpoint, connect_timeout_s=2.0)
+
+
+def test_replicated_remote_survives_kill9_mid_search(pds):
+    """The ROADMAP chaos gate at test scale: two loopback PoolServers
+    behind a replicated pool (replication=2); kill -9 one server and
+    keep searching — no PoolUnavailableError surfaces, results stay
+    bit-identical to LocalPool, the dead shard's groups re-replicate
+    onto the survivor, and inserts keep landing on both regions."""
+    data, queries = pds
+    base = _build("local", data)
+    with spawn_pool_servers(2, with_procs=True) as (eps, procs):
+        eng = _build("remote", data, endpoints=tuple(eps), replication=2)
+        d0, g0, _ = base.search(queries, k=10)
+        d1, g1, st = eng.search(queries, k=10)
+        assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+        assert st["pool"]["replication"] == 2
+
+        procs[0].kill()                        # SIGKILL, no goodbye
+        procs[0].wait(timeout=10)
+        d2, g2, st = eng.search(queries, k=10)  # discovers the death
+        assert np.array_equal(d0, d2) and np.array_equal(g0, g2)
+        fo = st["pool"]["failover"]
+        assert fo["deaths"] == 1
+        assert fo["read_retries"] >= 1
+        assert fo["lost_groups"] == 0
+        assert st["pool"]["alive"] == [False, True]
+
+        # writes after the death: both engines agree bit for bit
+        new = queries[:2] + 0.001
+        assert np.array_equal(base.insert(new), eng.insert(new))
+        da, ga, _ = base.search(queries[:8], k=10)
+        db, gb, _ = eng.search(queries[:8], k=10)
+        assert np.array_equal(da, db) and np.array_equal(ga, gb)

@@ -364,3 +364,211 @@ def test_sim_latency_scales_with_fabric(pds):
     assert sts["pool"]["sim_total_s"] > stf["pool"]["sim_total_s"]
     # and the ledger PRICES the same counts differently too
     assert sts["net"]["latency_s"] > stf["net"]["latency_s"]
+
+
+# ------------------------------------------------------- capacity layer
+
+def test_apply_budgets_keeps_within_budget_and_spills():
+    """A group that would overflow its shard spills to the next-best
+    shard with room (cheapest, then least loaded); in-budget groups
+    stay exactly where the policy put them."""
+    from repro.pool.placement import apply_budgets
+    owner = np.array([0, 0, 0, 0, 1, 1], np.int64)
+    sizes = np.array([10, 10, 10, 10, 10, 10], np.float64)
+    out = apply_budgets(owner, group_sizes=sizes,
+                        shard_budgets=[25, 25, 100],
+                        shard_costs=[0.0, 0.0, 0.0])
+    loads = [sizes[out == s].sum() for s in range(3)]
+    assert loads[0] <= 25 and loads[1] <= 25
+    # shard 0's overflow landed somewhere with room, not nowhere
+    assert sizes.sum() == sum(loads)
+    # groups that fit keep their policy assignment
+    assert (out[:2] == 0).all()
+
+
+def test_apply_budgets_never_rejects_data():
+    """When every shard is over budget the group still lands on the
+    least-loaded shard — budgets shape placement, never drop groups."""
+    from repro.pool.placement import apply_budgets
+    owner = np.zeros(6, np.int64)
+    out = apply_budgets(owner, group_sizes=np.full(6, 10.0),
+                        shard_budgets=[5, 5])
+    assert set(out.tolist()) <= {0, 1}
+    loads = [float((out == s).sum()) for s in (0, 1)]
+    assert abs(loads[0] - loads[1]) <= 1
+
+
+def test_place_replicated_distinct_shards_and_clamp():
+    """Replica matrix: column 0 is the primary verbatim, further
+    columns are distinct shards per group; R clamps to n_shards."""
+    from repro.pool.placement import place_replicated
+    owner = np.array([0, 1, 2, 0, 1], np.int64)
+    reps = place_replicated(owner, 3, 2)
+    assert reps.shape == (5, 2)
+    assert np.array_equal(reps[:, 0], owner)
+    for row in reps:
+        assert row[0] != row[1]
+    # R > n_shards clamps: no group can hold two copies on one shard
+    reps4 = place_replicated(owner, 3, 4)
+    assert reps4.shape == (5, 3)
+    for row in reps4:
+        assert len(set(row.tolist())) == 3
+    # one shard: replication collapses to the primary column
+    assert place_replicated(np.zeros(4, np.int64), 1, 3).shape == (4, 1)
+
+
+def test_place_replicated_respects_budgets():
+    """Replica columns prefer shards with room: with ample capacity on
+    one spare shard, all secondaries land there before any shard goes
+    over budget."""
+    from repro.pool.placement import place_replicated
+    owner = np.array([0, 1, 0, 1], np.int64)
+    reps = place_replicated(owner, 3, 2, group_sizes=np.full(4, 10.0),
+                            shard_budgets=[20.0, 20.0, 100.0])
+    assert (reps[:, 1] == 2).all()
+
+
+# ----------------------------------------------------------- replication
+
+class _DeadChild:
+    """Stub standing in for a vanished memory node: every verb raises
+    ``PoolUnavailableError`` exactly like a RemotePool with a dead
+    socket."""
+
+    _VERBS = ("read_spans", "read_rows", "read_quant_rows", "append",
+              "repack", "refresh_blocks", "adopt", "_stage_quant",
+              "snapshot", "close")
+
+    def __getattr__(self, name):
+        from repro.pool.protocol import PoolUnavailableError
+        if name in self._VERBS:
+            def boom(*a, **k):
+                raise PoolUnavailableError("node down (test stub)")
+            return boom
+        raise AttributeError(name)
+
+
+def test_replicated_pool_bit_identical_with_parity(pds):
+    """replication=2 changes WHERE bytes live, never the results or the
+    request-side accounting: search is bit-identical to LocalPool and
+    the ledger parity of the conformance gate holds at R=2."""
+    data, queries = pds
+    base = _build("local", data)
+    eng = _build("sharded", data, n_shards=3, replication=2)
+    d0, g0, st0 = base.search(queries, k=10)
+    d1, g1, st1 = eng.search(queries, k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+    for key in ("round_trips", "descriptors", "bytes", "bytes_saved"):
+        assert st0["net"][key] == st1["net"][key], key
+    snap = st1["pool"]
+    assert snap["replication"] == 2
+    assert sum(snap["replicas_by_shard"]) == 2 * base.store.spec.n_groups
+    # every group serves from exactly one live replica
+    assert sum(snap["groups_by_shard"]) == base.store.spec.n_groups
+
+
+def test_replica_selection_prefers_cheapest_live_shard(pds):
+    """Reads are served by the fastest live replica: with one fast and
+    one straggler shard at R=2 every group's serving replica is the
+    fast shard, and the straggler receives no span traffic."""
+    data, _ = pds
+    slow = Fabric("slow", rtt_s=200e-6, bw_Bps=0.125e9, per_op_s=25e-6,
+                  max_doorbell=32)
+    s, _ = _tiny_store(data)
+    pool = ShardedPool(
+        s, [lambda st: SimulatedRDMAPool(st, fabric=RDMA_100G),
+            lambda st: SimulatedRDMAPool(st, fabric=slow)],
+        replication=2)
+    assert all(pool.owner_of_group(g) == 0
+               for g in range(s.spec.n_groups))
+    led = NetLedger(RDMA_100G)
+    pool.read_spans(np.arange(6), ledger=led, doorbell=3)
+    assert pool.children[1].verbs.get("read_spans", 0) == 0
+
+
+def test_failover_mid_stream_is_transparent(pds):
+    """Kill one shard between searches at replication=2: the next
+    search transparently retries on the survivors, results stay
+    bit-identical to LocalPool, the dead shard's groups re-replicate,
+    and subsequent inserts still fan to the remaining replicas."""
+    data, queries = pds
+    base = _build("local", data)
+    eng = _build("sharded", data, n_shards=3, replication=2)
+    base.search(queries, k=10)
+    eng.search(queries, k=10)
+    pool = eng.pool
+    pool.children[0] = _DeadChild()
+    d0, g0, st0 = base.search(queries, k=10)
+    d1, g1, st1 = eng.search(queries, k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+    # ledger parity survives the retry: the dead slice charged nothing,
+    # the surviving replica charged exactly once
+    for key in ("round_trips", "descriptors", "bytes"):
+        assert st0["net"][key] == st1["net"][key], key
+    fo = st1["pool"]["failover"]
+    assert fo["deaths"] == 1
+    assert fo["read_retries"] >= 1
+    assert fo["lost_groups"] == 0
+    assert fo["rereplicated_groups"] >= 1
+    assert st1["pool"]["alive"] == [False, True, True]
+    # writes after the death: inserted vectors remain searchable and
+    # identical to the single-pool engine
+    new = queries[:2] + 0.001
+    assert np.array_equal(base.insert(new), eng.insert(new))
+    d2, g2, _ = base.search(queries[:8], k=10)
+    d3, g3, _ = eng.search(queries[:8], k=10)
+    assert np.array_equal(d2, d3) and np.array_equal(g2, g3)
+    assert pool.replication_io["fanout_writes"] >= 1
+
+
+def test_single_replica_death_still_surfaces(pds):
+    """replication=1 has nothing to fail over to: a dead shard's groups
+    raise PoolUnavailableError, exactly the pre-replication contract."""
+    from repro.pool.protocol import PoolUnavailableError
+    data, queries = pds
+    eng = _build("sharded", data, n_shards=2, replication=1)
+    eng.search(queries[:4], k=10)
+    eng.pool.children[0] = _DeadChild()
+    with pytest.raises(PoolUnavailableError):
+        eng.search(queries[:4], k=10)
+
+
+def test_elastic_add_remove_shard(pds):
+    """Live fleet changes: add_shard migrates only the groups the
+    policy newly maps there; remove_shard drains through re-replication.
+    Results stay bit-identical throughout."""
+    data, queries = pds
+    base = _build("local", data)
+    eng = _build("sharded", data, n_shards=2, replication=2)
+    d0, g0, _ = base.search(queries, k=10)
+    pool = eng.pool
+    new = pool.add_shard(lambda st: LocalPool(st))
+    assert new == 2 and pool.n_shards == 3
+    d1, g1, _ = eng.search(queries, k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+    assert pool.elastic["added"] == 1
+    assert pool.elastic["moved_groups"] >= 1
+    pool.remove_shard(0)
+    d2, g2, _ = eng.search(queries, k=10)
+    assert np.array_equal(d0, d2) and np.array_equal(g0, g2)
+    snap = pool.snapshot()
+    assert snap["alive"] == [False, True, True]
+    assert snap["failover"]["deaths"] == 0      # planned, not a death
+    assert snap["elastic"]["removed"] == 1
+    assert snap["failover"]["lost_groups"] == 0
+
+
+def test_shard_budgets_cap_primary_load(pds):
+    """Per-shard byte budgets bound how many groups a shard owns: with
+    one group's footprint as shard 0's budget, at most one primary can
+    live there and the rest spill — results unchanged."""
+    data, queries = pds
+    base = _build("local", data)
+    eng_free = _build("sharded", data, n_shards=2)
+    fp = eng_free.pool._group_footprint_bytes()
+    eng = _build("sharded", data, n_shards=2,
+                 shard_budgets=(fp, fp * 64))
+    d0, g0, _ = base.search(queries, k=10)
+    d1, g1, st = eng.search(queries, k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+    assert st["pool"]["groups_by_shard"][0] <= 1

@@ -31,14 +31,16 @@ import numpy as np
 from repro.core import DHNSWEngine, EngineConfig, recall_at_k
 from repro.core.cost_model import RDMA_100G
 from repro.data.synthetic import sift_like
+from repro.obs.trace import TRACER
 
 
 def run_cell(data, queries, gt, *, quant: str, exact_frac: float,
              rerank_m: int, n_rep: int, n_batches: int, k: int = 10,
-             quant_kernel: str = "off", cache_frac: float = 0.25) -> dict:
+             quant_kernel: str = "off", cache_frac: float = 0.25,
+             seed: int = 0) -> dict:
     cfg = EngineConfig(mode="full", search_mode="scan", b=6, ef=48,
                        n_rep=n_rep, cache_frac=cache_frac, doorbell=16,
-                       fabric=RDMA_100G, seed=0, quant=quant,
+                       fabric=RDMA_100G, seed=seed, quant=quant,
                        exact_frac=exact_frac, rerank_m=rerank_m,
                        quant_kernel=quant_kernel)
     eng = DHNSWEngine(cfg).build(data)
@@ -68,7 +70,8 @@ def run_cell(data, queries, gt, *, quant: str, exact_frac: float,
     return row
 
 
-def kernel_ab(n: int = 4096, d: int = 128, k: int = 10) -> dict:
+def kernel_ab(n: int = 4096, d: int = 128, k: int = 10,
+              seed: int = 0) -> dict:
     """Fused int8 Pallas kernel vs the pure-jnp oracle on a flat DB."""
     import jax
     import jax.numpy as jnp
@@ -76,7 +79,7 @@ def kernel_ab(n: int = 4096, d: int = 128, k: int = 10) -> dict:
     from repro.kernels.quant_topk.ops import quant_topk
     from repro.quant.codec import quantize_groups
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     x = rng.standard_normal((n, d)).astype(np.float32)
     q = rng.standard_normal((64, d)).astype(np.float32)
     codes, scales = quantize_groups(x, 32)
@@ -97,20 +100,30 @@ def kernel_ab(n: int = 4096, d: int = 128, k: int = 10) -> dict:
             "ref_us": out["ref_us"]}
 
 
-def run(*, smoke: bool = False, out: str = "BENCH_quant.json") -> dict:
+def run(*, smoke: bool = False, out: str = "BENCH_quant.json",
+        seed: int = 0, trace_out: str | None = None) -> dict:
+    # --trace records the kernel A/B through repro.obs: every
+    # quant_topk call becomes a ``kernel.quant_topk`` span tagged with
+    # impl=pallas|ref, so `python -m repro.obs.report` can put a number
+    # on the Pallas-vs-oracle gap per call (not just the 1-shot *_us)
+    if trace_out:
+        TRACER.configure()
+        TRACER.set_phase("kernel_ab")
     if smoke:
         n, n_rep, n_batches = 1500, 12, 2
         splits, pools = (0.25,), (0,)
-        kab = kernel_ab(n=512, d=64, k=5)
+        kab = kernel_ab(n=512, d=64, k=5, seed=seed)
     else:
         n, n_rep, n_batches = 20_000, 64, 4
         splits, pools = (0.0, 0.25, 0.5), (0, 20, 40)
-        kab = kernel_ab()
-    ds = sift_like(n=n, n_queries=256, seed=0)
+        kab = kernel_ab(seed=seed)
+    if trace_out:
+        TRACER.set_phase(None)
+    ds = sift_like(n=n, n_queries=256, seed=seed)
 
     rows = [run_cell(ds.data, ds.queries, ds.gt_ids, quant="none",
                      exact_frac=0.25, rerank_m=0, n_rep=n_rep,
-                     n_batches=n_batches)]
+                     n_batches=n_batches, seed=seed)]
     base = rows[0]["mbytes"]
     print(f"{'quant':6s} {'split':>5s} {'m':>4s} {'recall':>7s} "
           f"{'MB':>9s} {'saved MB':>9s} {'reduction':>9s}")
@@ -120,7 +133,7 @@ def run(*, smoke: bool = False, out: str = "BENCH_quant.json") -> dict:
         for m in pools:
             row = run_cell(ds.data, ds.queries, ds.gt_ids, quant="int8",
                            exact_frac=split, rerank_m=m, n_rep=n_rep,
-                           n_batches=n_batches)
+                           n_batches=n_batches, seed=seed)
             row["bytes_reduction"] = round(base / max(row["mbytes"], 1e-9), 2)
             rows.append(row)
             print(f"{'int8':6s} {split:5.2f} {m:4d} {row['recall']:7.4f} "
@@ -134,7 +147,7 @@ def run(*, smoke: bool = False, out: str = "BENCH_quant.json") -> dict:
         row = run_cell(ds.data, ds.queries, ds.gt_ids, quant="int8",
                        exact_frac=0.25, rerank_m=0, n_rep=n_rep,
                        n_batches=n_batches, quant_kernel=qk,
-                       cache_frac=0.6)
+                       cache_frac=0.6, seed=seed)
         row["bytes_reduction"] = round(base / max(row["mbytes"], 1e-9), 2)
         rows.append(row)
         tag = {"auto": "flatk", "ref": "flatr"}[qk]
@@ -145,6 +158,11 @@ def run(*, smoke: bool = False, out: str = "BENCH_quant.json") -> dict:
 
     print(f"kernel A/B: id_match {kab['id_match']:.3f}  "
           f"pallas {kab['pallas_us']} us vs ref {kab['ref_us']} us")
+    if trace_out:
+        n_spans = TRACER.save(trace_out)
+        TRACER.disable()
+        print(f"wrote {trace_out} ({n_spans} spans) — inspect with "
+              f"`python -m repro.obs.report {trace_out}`")
     blob = {"bench": "quant", "smoke": smoke, "n": n, "n_rep": n_rep,
             "n_batches": n_batches, "rows": rows, "kernel": kab}
     with open(out, "w") as f:
@@ -158,8 +176,13 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config; crash-check only")
     ap.add_argument("--out", default="BENCH_quant.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record the kernel A/B (and the sweep) with "
+                         "repro.obs; write Chrome-trace JSON to FILE")
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out)
+    run(smoke=args.smoke, out=args.out, seed=args.seed,
+        trace_out=args.trace)
 
 
 if __name__ == "__main__":

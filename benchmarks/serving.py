@@ -13,10 +13,28 @@ C closed-loop client threads each issue single-query requests:
                   doorbell grouping, and cache reuse amortize across
                   requesters.
 
-Emits throughput + latency percentiles per (mode, C, impl) and writes
-``BENCH_serving.json`` for the perf-trajectory file.  ``--smoke`` runs a
-tiny CI-sized config whose only job is to exercise the path end-to-end
-(fails on crash, never on perf).
+Two passes per (mode, C):
+
+  * a DETERMINISTIC counted pass (the ``counted`` table): a single
+    submitter issues waves of exactly C requests against a batcher with
+    ``max_batch=C`` and an effectively-infinite window, so every fused
+    window is exactly the wave in submission order.  Per-query round
+    trips / descriptors / KB come from the NetLedger and
+    ``mean_fused_batch`` from the batcher — no wall clock anywhere, so
+    these rows are gated by ``benchmarks/perf_gate.py``.
+  * the wall-clock sweep (the ``rows`` table): closed-loop client
+    threads, throughput + latency percentiles.  Timing-dependent, never
+    gated (the observed fusion is reported as ``fused_batch_obs``).
+
+``--trace FILE`` additionally records the wall-clock sweep through
+``repro.obs``: measured serial/batched sections are phase-tagged, every
+request gets a ``request`` bench span, and the Chrome-trace JSON is
+written to FILE for ``python -m repro.obs.report`` (this is how the
+batched-vs-serial gap gets its stage-level diagnosis).
+
+Emits ``BENCH_serving.json`` for the perf-trajectory file.  ``--smoke``
+runs a tiny CI-sized config; its wall-clock side only has to not crash,
+its counted side must match ``benchmarks/baselines/BENCH_serving.json``.
 """
 from __future__ import annotations
 
@@ -30,13 +48,15 @@ import numpy as np
 from repro.core import DHNSWEngine, EngineConfig
 from repro.core.cost_model import RDMA_100G
 from repro.data.synthetic import sift_like
+from repro.obs.trace import TRACER
 from repro.serve.batcher import BatchPolicy, MicroBatcher
 
 
-def build_engine(mode: str, data: np.ndarray, n_rep: int) -> DHNSWEngine:
+def build_engine(mode: str, data: np.ndarray, n_rep: int,
+                 seed: int = 0) -> DHNSWEngine:
     cfg = EngineConfig(mode=mode, search_mode="scan", b=3, ef=32,
                        n_rep=n_rep, cache_frac=0.15, doorbell=16,
-                       fabric=RDMA_100G, seed=0)
+                       fabric=RDMA_100G, seed=seed)
     return DHNSWEngine(cfg).build(data)
 
 
@@ -44,6 +64,54 @@ def _percentiles(lat: list[float]) -> dict:
     arr = np.asarray(lat, np.float64) * 1e3
     return {f"p{p}_ms": round(float(np.percentile(arr, p)), 3)
             for p in (50, 95, 99)}
+
+
+def _per_q(tot: dict, nq: int) -> dict:
+    """Ledger totals -> the gated per-query metrics."""
+    return {"round_trips_per_q": round(tot["round_trips"] / nq, 4),
+            "descriptors_per_q": round(tot["descriptors"] / nq, 4),
+            "kb_per_q": round(tot["bytes"] / nq / 1024.0, 4)}
+
+
+def counted_pass(mode: str, data, queries, *, n_rep: int, C: int, k: int,
+                 waves: int, seed: int) -> list[dict]:
+    """Deterministic serial-vs-batched comparison at concurrency C.
+
+    Both impls see the same request stream (``waves`` waves of C
+    single-query requests, queries cycled in submission order) on a
+    FRESH engine each, so cache state evolves identically run to run.
+    The batcher is pinned to ``max_batch=C`` with a huge window: the
+    dispatcher only closes a window at C rows, so every wave fuses into
+    exactly one engine call and ``mean_fused_batch == C`` by
+    construction — any drift is a scheduling regression.
+    """
+    nq = C * waves
+
+    eng = build_engine(mode, data, n_rep, seed=seed)
+    tot = {"round_trips": 0.0, "descriptors": 0.0, "bytes": 0.0}
+    for i in range(nq):
+        _, _, st = eng.search(queries[i % len(queries)][None], k=k)
+        for key in tot:
+            tot[key] += float(st["net"][key])
+    rows = [{"impl": "serial", **_per_q(tot, nq), "mean_fused_batch": 1.0}]
+
+    eng = build_engine(mode, data, n_rep, seed=seed)
+    with MicroBatcher(eng, BatchPolicy(max_batch=C,
+                                       max_wait_s=30.0)) as mb:
+        for w in range(waves):
+            futs = [mb.submit_search(queries[(w * C + i) % len(queries)],
+                                     k=k) for i in range(C)]
+            for f in futs:
+                f.result()
+        snap = mb.metrics.snapshot()
+    net = snap["net"]
+    rows.append({"impl": "batched",
+                 **_per_q({"round_trips": net["round_trips"],
+                           "descriptors": net["descriptors"],
+                           "bytes": net["bytes_fetched"]}, nq),
+                 "mean_fused_batch":
+                     round(float(snap["mean_fused_batch"]), 2)})
+    return rows
 
 
 def run_clients(n_clients: int, per_client: int, queries: np.ndarray,
@@ -79,13 +147,14 @@ def run_clients(n_clients: int, per_client: int, queries: np.ndarray,
 
 
 def sweep(mode: str, data, queries, *, n_rep: int, clients: tuple[int, ...],
-          per_client: int, k: int) -> list[dict]:
-    eng = build_engine(mode, data, n_rep)
+          per_client: int, k: int, seed: int = 0) -> list[dict]:
+    eng = build_engine(mode, data, n_rep, seed=seed)
     lock = threading.Lock()
 
     def serial_call(q):
-        with lock:
-            eng.search(q[None], k=k)
+        with TRACER.span("request", tier="bench", impl="serial"):
+            with lock:
+                eng.search(q[None], k=k)
 
     rows = []
     warm = max(2, per_client // 3)
@@ -94,18 +163,28 @@ def sweep(mode: str, data, queries, *, n_rep: int, clients: tuple[int, ...],
         # (fused batch, round pad, merge lanes) shapes, so drive enough
         # warmup traffic through BOTH paths that measured windows reuse
         # compiled code, as a long-running server does
+        TRACER.set_phase("warmup")
         run_clients(C, warm, queries, serial_call)
+        TRACER.set_phase("serial")
         serial = run_clients(C, per_client, queries, serial_call)
         with MicroBatcher(eng, BatchPolicy(max_batch=max(64, 2 * C),
                                            max_wait_s=4e-3)) as mb:
-            run_clients(C, 2 * warm, queries, lambda q: mb.search(q, k=k))
-            batched = run_clients(C, per_client, queries,
-                                  lambda q: mb.search(q, k=k))
+            def batched_call(q):
+                with TRACER.span("request", tier="bench", impl="batched"):
+                    mb.search(q, k=k)
+
+            TRACER.set_phase("warmup")
+            run_clients(C, 2 * warm, queries, batched_call)
+            TRACER.set_phase("batched")
+            batched = run_clients(C, per_client, queries, batched_call)
             fused = mb.metrics.snapshot()["mean_fused_batch"]
+        TRACER.set_phase(None)
         speedup = round(batched["qps"] / max(serial["qps"], 1e-9), 2)
         for impl, res in (("serial", serial), ("batched", batched)):
             rows.append({"mode": mode, "clients": C, "impl": impl, **res})
-        rows[-1]["mean_fused_batch"] = round(fused, 2)
+        # observed fusion under wall-clock timing — informational only;
+        # the deterministic counterpart in the ``counted`` table is gated
+        rows[-1]["fused_batch_obs"] = round(fused, 2)
         rows[-1]["speedup_vs_serial"] = speedup
         print(f"{mode:12s} C={C:3d}  serial {serial['qps']:8.1f} qps "
               f"(p95 {serial['p95_ms']:7.1f} ms) | batched "
@@ -115,36 +194,67 @@ def sweep(mode: str, data, queries, *, n_rep: int, clients: tuple[int, ...],
 
 
 def run(*, smoke: bool = False, out: str = "BENCH_serving.json",
-        modes=("naive", "no_doorbell", "full")) -> list[dict]:
+        modes=("naive", "no_doorbell", "full"), seed: int = 0,
+        trace_out: str | None = None, skip_wallclock: bool = False) -> dict:
     if smoke:
-        n, n_rep, clients, per_client = 2000, 16, (1, 4), 4
+        n, n_rep, clients, per_client, waves = 2000, 16, (1, 4), 4, 2
         modes = ["full"]
     else:
-        n, n_rep, clients, per_client = 20_000, 64, (1, 4, 8, 16), 25
-    ds = sift_like(n=n, n_queries=64, seed=0)
+        n, n_rep, clients, per_client, waves = (20_000, 64, (1, 4, 8, 16),
+                                                25, 3)
+    ds = sift_like(n=n, n_queries=64, seed=seed)
 
-    rows = []
+    counted = []
     for mode in modes:
-        rows.extend(sweep(mode, ds.data, ds.queries, n_rep=n_rep,
-                          clients=clients, per_client=per_client, k=10))
+        for C in clients:
+            for row in counted_pass(mode, ds.data, ds.queries, n_rep=n_rep,
+                                    C=C, k=10, waves=waves, seed=seed):
+                counted.append({"mode": mode, "clients": C, **row})
+            b, s = counted[-1], counted[-2]
+            print(f"counted {mode:12s} C={C:3d}  trips/q "
+                  f"{s['round_trips_per_q']:7.2f} -> "
+                  f"{b['round_trips_per_q']:7.2f}  KB/q "
+                  f"{s['kb_per_q']:8.2f} -> {b['kb_per_q']:8.2f}  "
+                  f"fused {b['mean_fused_batch']:.2f}", flush=True)
 
-    blob = {"bench": "serving", "smoke": smoke, "n": n,
-            "clients": list(clients), "per_client": per_client, "rows": rows}
+    if trace_out:
+        TRACER.configure()
+    rows = []
+    if not skip_wallclock:
+        for mode in modes:
+            rows.extend(sweep(mode, ds.data, ds.queries, n_rep=n_rep,
+                              clients=clients, per_client=per_client, k=10,
+                              seed=seed))
+    if trace_out:
+        n_spans = TRACER.save(trace_out)
+        TRACER.disable()
+        print(f"wrote {trace_out} ({n_spans} spans) — inspect with "
+              f"`python -m repro.obs.report {trace_out}`")
+
+    blob = {"bench": "serving", "smoke": smoke, "n": n, "seed": seed,
+            "clients": list(clients), "per_client": per_client,
+            "waves": waves, "counted": counted, "rows": rows}
     with open(out, "w") as f:
         json.dump(blob, f, indent=2)
-    print(f"wrote {out} ({len(rows)} rows)")
-    return rows
+    print(f"wrote {out} ({len(counted)} counted + {len(rows)} rows)")
+    return blob
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI config; crash-check only")
+                    help="tiny CI config; counted rows are perf-gated, "
+                         "wall-clock rows are crash-check only")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record the wall-clock sweep with repro.obs and "
+                         "write Chrome-trace JSON to FILE")
     ap.add_argument("--modes", nargs="*",
                     default=["naive", "no_doorbell", "full"])
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out, modes=args.modes)
+    run(smoke=args.smoke, out=args.out, modes=args.modes, seed=args.seed,
+        trace_out=args.trace)
 
 
 if __name__ == "__main__":

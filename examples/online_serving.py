@@ -20,6 +20,12 @@ table with the *measured* wire traffic next to the modeled ledger.
 distinct memory nodes: reads are served from the best live replica and
 the fleet survives a node death mid-traffic (see docs/operations.md
 for the failure semantics and the snapshot fields this demo prints).
+
+``--trace FILE`` records the whole demo through ``repro.obs`` (serve /
+compute / pool / net spans; with ``--pool remote`` also the harvested
+server-side service times), writes Chrome-trace JSON to FILE, and
+prints the per-stage breakdown report at the end — see
+docs/observability.md.
 """
 import argparse
 import contextlib
@@ -90,7 +96,15 @@ def main():
                     help="comma-separated host:port pool servers for "
                          "--pool remote (empty = fork --shards loopback "
                          "servers)")
+    ap.add_argument("--trace", default="", metavar="FILE",
+                    help="record spans with repro.obs, write "
+                         "Chrome-trace JSON to FILE, and print the "
+                         "stage breakdown report")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs.trace import TRACER
+        TRACER.configure()
 
     endpoints = tuple(e for e in args.endpoints.split(",") if e) or None
     with contextlib.ExitStack() as stack:
@@ -174,6 +188,8 @@ def run_demo(args, ds, eng):
                                           ds.queries,
                                           lambda q: srv.search(q, k=10))
         snap = srv.stats()
+        if args.trace:
+            n_spans = srv.dump_trace(args.trace)
     print(f"  {qps_b:8.1f} qps   p50 {p50_b:7.1f} ms   p95 {p95_b:7.1f} ms")
     print(f"\n  speedup x{qps_b / qps:.2f}   mean fused batch "
           f"{snap['mean_fused_batch']:.1f}  over {snap['n_fused_calls']} "
@@ -213,6 +229,15 @@ def run_demo(args, ds, eng):
                   f"  {tot['bytes'] / 1e6:8.2f} MB"
                   f"  {tot['round_trips']:6.0f} trips"
                   f"  {verbs:5.0f} span/append verbs")
+
+    if args.trace:
+        from repro.obs import report
+        from repro.obs.trace import TRACER
+        print(f"\n  wrote {args.trace} ({n_spans} spans) — open in "
+              f"https://ui.perfetto.dev or chrome://tracing")
+        print()
+        print(report.render(TRACER.snapshot(), top=12))
+        TRACER.disable()
 
 
 if __name__ == "__main__":

@@ -52,6 +52,7 @@ import numpy as np
 from repro.core.cost_model import (RDMA_100G, TPU_ICI, Fabric,  # noqa: F401
                                    NetLedger)
 from repro.core.scheduler import pow2_pad  # noqa: F401  (re-export)
+from repro.obs.trace import TRACER
 
 MODES = ("naive", "no_doorbell", "full")
 POOLS = ("local", "sim_rdma", "sharded", "remote")
@@ -167,11 +168,14 @@ class DHNSWEngine:
     def search(self, queries: np.ndarray, k: int = 10,
                ef: Optional[int] = None, b: Optional[int] = None):
         """Batched top-k.  Returns (dists (B,k), gids (B,k), stats)."""
-        return self.client.search(queries, k=k, ef=ef, b=b)
+        with TRACER.span("compute.search", tier="compute", k=int(k),
+                         quant=self.cfg.quant):
+            return self.client.search(queries, k=k, ef=ef, b=b)
 
     def insert(self, vecs: np.ndarray) -> np.ndarray:
         """Dynamic insertion (paper §3.2) through the pool WRITE verb."""
-        return self.client.insert(vecs)
+        with TRACER.span("compute.insert", tier="compute"):
+            return self.client.insert(vecs)
 
     # ------------------------------------------------------------ state
     # (compat views into the split — tests, benchmarks and notebooks

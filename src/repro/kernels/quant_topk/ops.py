@@ -4,6 +4,13 @@ Pads inputs to block multiples, dispatches to the Pallas kernel
 (interpret=True on CPU — this container — compiled BlockSpecs on TPU),
 and restores inf/-1 padding semantics.  ``use_ref=True`` forces the
 pure-jnp oracle (benchmarks A/B against it).
+
+When the global tracer is enabled every call is wrapped in a
+``kernel.quant_topk`` span (attrs: impl=pallas|ref, B/N/D/k) that blocks
+on the result so the span duration is real device time, not dispatch
+time.  The traced block happens OUTSIDE the jitted function — a span
+recorder cannot live inside a traced/jitted body — and the numerical
+results are identical either way.
 """
 from __future__ import annotations
 
@@ -16,20 +23,15 @@ from repro.kernels.distance_topk.kernel import MASKED
 from repro.kernels.distance_topk.ops import _pad_to
 from repro.kernels.quant_topk.kernel import quant_topk_pallas
 from repro.kernels.quant_topk.ref import quant_topk_ref
+from repro.obs.trace import TRACER
 
 
 @functools.partial(jax.jit, static_argnames=("k", "group", "block_q",
                                              "block_n", "interpret",
                                              "use_ref"))
-def quant_topk(queries, codes, scales, k: int, group: int, n_valid=None, *,
-               block_q: int = 128, block_n: int = 256,
-               interpret: bool | None = None, use_ref: bool = False):
-    """Top-k nearest database rows per query over an int8-quantized
-    database (squared L2 on the dequantized values, ascending).
-
-    queries (B, D) f32, codes (N, D) int8, scales (N, D // group) f32
-    -> (dists (B, k), ids (B, k)).  ``n_valid`` masks padded rows.
-    """
+def _quant_topk_jit(queries, codes, scales, k: int, group: int, n_valid, *,
+                    block_q: int, block_n: int, interpret, use_ref: bool):
+    """The jitted kernel body (see ``quant_topk`` for the contract)."""
     if n_valid is None:
         n_valid = codes.shape[0]
     n_valid = jnp.asarray(n_valid, jnp.int32).reshape(())
@@ -47,3 +49,26 @@ def quant_topk(queries, codes, scales, k: int, group: int, n_valid=None, *,
     d, i = d[:B], i[:B]
     bad = d >= MASKED * 0.99
     return jnp.where(bad, jnp.inf, d), jnp.where(bad, -1, i)
+
+
+def quant_topk(queries, codes, scales, k: int, group: int, n_valid=None, *,
+               block_q: int = 128, block_n: int = 256,
+               interpret: bool | None = None, use_ref: bool = False):
+    """Top-k nearest database rows per query over an int8-quantized
+    database (squared L2 on the dequantized values, ascending).
+
+    queries (B, D) f32, codes (N, D) int8, scales (N, D // group) f32
+    -> (dists (B, k), ids (B, k)).  ``n_valid`` masks padded rows.
+    """
+    if not TRACER.enabled:
+        return _quant_topk_jit(queries, codes, scales, k, group, n_valid,
+                               block_q=block_q, block_n=block_n,
+                               interpret=interpret, use_ref=use_ref)
+    with TRACER.span("kernel.quant_topk", tier="kernel",
+                     impl="ref" if use_ref else "pallas",
+                     B=int(queries.shape[0]), N=int(codes.shape[0]),
+                     D=int(codes.shape[1]), k=int(k)):
+        out = _quant_topk_jit(queries, codes, scales, k, group, n_valid,
+                              block_q=block_q, block_n=block_n,
+                              interpret=interpret, use_ref=use_ref)
+        return jax.block_until_ready(out)

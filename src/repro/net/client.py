@@ -47,6 +47,7 @@ from repro.core.cost_model import RDMA_100G, Fabric, NetLedger
 from repro.core.layout import Store
 from repro.core.scheduler import doorbell_chunks
 from repro.net import wire as W
+from repro.obs.trace import TRACER
 from repro.pool.protocol import (MemoryPool, PoolUnavailableError,
                                  _fresh_totals, span_wire_bytes)
 
@@ -98,7 +99,9 @@ class RemotePool(MemoryPool):
         self._sock: Optional[socket.socket] = None
         self._seq = 0
         self._lock = threading.Lock()
+        self._server_trace = False
         self._connect(connect_timeout_s)
+        self._probe_caps()
         self._attach()
         self._mt_dev = jnp.asarray(self.store.meta_table)
         self._mt_dirty = False
@@ -134,43 +137,91 @@ class RemotePool(MemoryPool):
         except Exception:
             pass
 
+    def _probe_caps(self) -> None:
+        """One PING at connect: a server that understands the
+        trace-context prefix acks with FLAG_TRACE on the response; the
+        prefix is only ever sent to servers that acked (old servers are
+        never shown bytes they would mis-decode)."""
+        if self._sock is None:
+            return
+        with self._lock:
+            try:
+                self._seq += 1
+                self.wire["frames_tx"] += 1
+                self.wire["bytes_tx"] += W.HEADER_BYTES
+                W.send_frame(self._sock, W.OP_PING, b"", seq=self._seq)
+                rop, rflags, rseq, payload = W.recv_frame(self._sock)
+                self.wire["frames_rx"] += 1
+                self.wire["bytes_rx"] += W.HEADER_BYTES + len(payload)
+                if rop != W.OP_PING or rseq != self._seq:
+                    raise ConnectionError("bad ping response")
+            except (ConnectionError, socket.timeout, OSError) as e:
+                self._fail(e)
+        self._server_trace = bool(rflags & W.FLAG_TRACE)
+
     def _rpc_many(self, reqs, *, verb: str):
         """Pipelined round trip: send every (op, payload, flags) frame,
         then read the responses in order.  One request frame == one
-        doorbell batch == one counted trip."""
+        doorbell batch == one counted trip.
+
+        With tracing enabled the whole exchange is one ``net.<verb>``
+        span, and (when the server acked FLAG_TRACE at connect) each
+        request payload is prefixed with that span's trace context so
+        the server's service-time span lands under it on harvest.  The
+        prefix rides OUTSIDE the verb payload: ledger charges use
+        response payloads and the modeled write bytes, so accounting is
+        bit-identical with tracing on or off."""
         if self._sock is None:
             raise PoolUnavailableError(
                 f"pool server {self.endpoint} connection closed")
         t0 = time.perf_counter()
-        with self._lock:
-            seqs = []
-            try:
-                buf = bytearray()
-                for op, payload, flags in reqs:
-                    self._seq += 1
-                    seqs.append((op, self._seq))
-                    buf += W.pack_frame(op, payload, flags=flags,
-                                        seq=self._seq)
-                    self.wire["frames_tx"] += 1
-                    self.wire["bytes_tx"] += W.HEADER_BYTES + len(payload)
-                self._sock.sendall(bytes(buf))
-                outs, error = [], None
-                for op, seq in seqs:
-                    rop, rflags, rseq, payload = W.recv_frame(self._sock)
-                    self.wire["frames_rx"] += 1
-                    self.wire["bytes_rx"] += W.HEADER_BYTES + len(payload)
-                    if rseq != seq or rop != op:
-                        raise ConnectionError(
-                            f"out-of-order response (seq {rseq} != {seq})")
-                    if rflags & W.FLAG_ERROR and error is None:
-                        # keep draining the pipelined responses — leaving
-                        # them queued would desynchronize every later verb
-                        error = payload.decode("utf-8")
-                    outs.append(payload)
-                if error is not None:
-                    raise RuntimeError(f"pool server error: {error}")
-            except (ConnectionError, socket.timeout, OSError) as e:
-                self._fail(e)
+        with TRACER.span("net." + verb, tier="net", frames=len(reqs),
+                         endpoint=f"{self.endpoint[0]}:{self.endpoint[1]}") \
+                as vspan:
+            prefix = b""
+            pflag = 0
+            if TRACER.enabled and self._server_trace:
+                prefix = W.enc_trace_ctx(TRACER.trace_id,
+                                         getattr(vspan, "span_id", 0))
+                pflag = W.FLAG_TRACE
+            with self._lock:
+                seqs = []
+                try:
+                    with TRACER.span("net.encode", tier="net"):
+                        buf = bytearray()
+                        for op, payload, flags in reqs:
+                            self._seq += 1
+                            seqs.append((op, self._seq))
+                            buf += W.pack_frame(op, prefix + payload,
+                                                flags=flags | pflag,
+                                                seq=self._seq)
+                            self.wire["frames_tx"] += 1
+                            self.wire["bytes_tx"] += (W.HEADER_BYTES
+                                                      + len(prefix)
+                                                      + len(payload))
+                    with TRACER.span("net.wire", tier="net"):
+                        self._sock.sendall(bytes(buf))
+                        outs, error = [], None
+                        for op, seq in seqs:
+                            rop, rflags, rseq, payload = W.recv_frame(
+                                self._sock)
+                            self.wire["frames_rx"] += 1
+                            self.wire["bytes_rx"] += (W.HEADER_BYTES
+                                                      + len(payload))
+                            if rseq != seq or rop != op:
+                                raise ConnectionError(
+                                    f"out-of-order response (seq {rseq} "
+                                    f"!= {seq})")
+                            if rflags & W.FLAG_ERROR and error is None:
+                                # keep draining the pipelined responses —
+                                # leaving them queued would desynchronize
+                                # every later verb
+                                error = payload.decode("utf-8")
+                            outs.append(payload)
+                        if error is not None:
+                            raise RuntimeError(f"pool server error: {error}")
+                except (ConnectionError, socket.timeout, OSError) as e:
+                    self._fail(e)
         self.wire["wire_s"][verb] = (self.wire["wire_s"].get(verb, 0.0)
                                      + time.perf_counter() - t0)
         self.wire["frames_by_verb"][verb] = (
@@ -268,8 +319,10 @@ class RemotePool(MemoryPool):
             # equal to the modeled bytes by protocol construction, which
             # wire_vs_model() verifies instead of assumes
             self._charge(verb, ledger, measured, per_desc * len(db))
-            parts.append(W.dec_spans_resp(spec, payload, m=len(db),
-                                          quant=quant, graph=quant_graph))
+            with TRACER.span("net.decode", tier="net", bytes=measured):
+                parts.append(W.dec_spans_resp(spec, payload, m=len(db),
+                                              quant=quant,
+                                              graph=quant_graph))
         m = len(pids)
         if not quant:
             g = np.concatenate([p[0] for p in parts]) if parts else \
@@ -312,7 +365,8 @@ class RemotePool(MemoryPool):
             rows, W.OP_READ_ROWS, "read_rows")
         self._note("read_rows", len(payload),
                    len(uniq) * spec.row_bytes())
-        vrows = W.dec_rows_resp(payload, len(uniq), spec.dim)
+        with TRACER.span("net.decode", tier="net", bytes=len(payload)):
+            vrows = W.dec_rows_resp(payload, len(uniq), spec.dim)
         out = vrows[inv].reshape(rows_h.shape + (spec.dim,))
         return jnp.asarray(out)
 
@@ -326,8 +380,10 @@ class RemotePool(MemoryPool):
         nq = spec.dim // spec.quant_group
         self._note("read_quant_rows", len(payload),
                    len(uniq) * (spec.dim + nq * 4))
-        codes, scales = W.dec_quant_rows_resp(payload, len(uniq), spec.dim,
-                                              spec.quant_group)
+        with TRACER.span("net.decode", tier="net", bytes=len(payload)):
+            codes, scales = W.dec_quant_rows_resp(payload, len(uniq),
+                                                  spec.dim,
+                                                  spec.quant_group)
         codes = codes[inv].reshape(rows_h.shape + (spec.dim,))
         scales = scales[inv].reshape(rows_h.shape + (nq,))
         return jnp.asarray(codes), jnp.asarray(scales)
@@ -369,11 +425,7 @@ class RemotePool(MemoryPool):
                 f"mirror slot {slot} (pid {pid})")
         self.verbs["append"] += 1
         self._note("append", len(payload), wire_model)
-        if ledger is not None:
-            ledger.write(wire_model, descriptors=1)
-            self.totals["round_trips"] += 1
-            self.totals["descriptors"] += 1
-            self.totals["bytes"] += wire_model
+        self._charge_write("append", ledger, wire_model)
         self._mt_dirty = True
         return slot
 
@@ -412,9 +464,49 @@ class RemotePool(MemoryPool):
                          "ratio": measured / modeled}
         return out
 
-    def server_stats(self) -> dict:
-        """The server process's own counters (one wire round trip)."""
-        return W.dec_json(self._rpc(W.OP_STATS, verb="stats"))
+    def server_stats(self, *, drain_trace: bool = False) -> dict:
+        """The server process's own counters (one wire round trip).
+
+        ``drain_trace=True`` asks the server to include (and drain) its
+        buffered service-time trace spans; old servers ignore the
+        request payload, so the key is simply absent."""
+        payload = (W.enc_json({"drain_trace": True}) if drain_trace
+                   else b"")
+        return W.dec_json(self._rpc(W.OP_STATS, payload, verb="stats"))
+
+    def harvest_trace(self) -> int:
+        """Drain the server's service-time spans into the local tracer.
+
+        Each harvested span is stitched under the client-side
+        ``net.<verb>`` span whose trace context the request carried
+        (clocks differ across processes, so the span is re-based to sit
+        centered inside its parent — durations are authoritative, wall
+        positions are presentational).  Returns the number of spans
+        adopted; 0 when tracing is off or the server never acked
+        FLAG_TRACE."""
+        if not (TRACER.enabled and self._server_trace):
+            return 0
+        stats = self.server_stats(drain_trace=True)
+        ep = f"{self.endpoint[0]}:{self.endpoint[1]}"
+        n = 0
+        for s in stats.get("trace_spans", ()):
+            if int(s.get("trace", 0)) != TRACER.trace_id:
+                continue
+            parent_id = int(s.get("parent", 0))
+            dur = float(s["dur"])
+            parent = TRACER.find(parent_id)
+            if parent is not None:
+                t0 = parent["t0"] + max(parent["dur"] - dur, 0.0) / 2
+            else:
+                t0 = float(s["t0"])
+            TRACER.add_span("server." + s["op"], "server", t0, dur,
+                            parent_id=parent_id,
+                            attrs={"seq": int(s.get("seq", 0)),
+                                   "rx": int(s.get("rx", 0)),
+                                   "tx": int(s.get("tx", 0)),
+                                   "endpoint": ep, "clock": "server"})
+            n += 1
+        return n
 
     def shutdown_server(self) -> None:
         """Ask the server process to exit (harness teardown helper)."""

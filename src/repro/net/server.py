@@ -39,7 +39,7 @@ import subprocess
 import sys
 import threading
 import time
-from collections import Counter
+from collections import Counter, deque
 
 import numpy as np
 
@@ -50,6 +50,9 @@ from repro.net import wire as W
 class HostRegion:
     """The server-side region + verb handlers (pure numpy)."""
 
+    #: bound on buffered server-side trace spans (oldest dropped first)
+    TRACE_CAP = 4096
+
     def __init__(self, store=None):
         self.store = store
         self.lock = threading.RLock()
@@ -57,6 +60,11 @@ class HostRegion:
         self.payload_tx = 0      # response payload bytes served
         self.payload_rx = 0      # request payload bytes received
         self.t0 = time.time()
+        # per-verb service time (seconds inside the verb body, always
+        # on) and the service-time spans recorded for FLAG_TRACE
+        # requests, drained by a stats({"drain_trace": true}) call
+        self.service_s: Counter = Counter()
+        self.trace_spans: deque = deque(maxlen=self.TRACE_CAP)
 
     # ------------------------------------------------------------ helpers
 
@@ -192,16 +200,30 @@ class HostRegion:
         return b"", 0
 
     def stats(self, payload, flags):
-        """Control-plane JSON: verb counts, payload totals, region info."""
+        """Control-plane JSON: verb counts, payload totals, per-verb
+        service seconds, region info.  A ``{"drain_trace": true}``
+        request payload additionally returns (and drains) the buffered
+        server-side trace spans — old servers ignore the payload, so the
+        extension is backward-compatible in both directions."""
+        req = {}
+        if payload:
+            try:
+                req = W.dec_json(payload)
+            except Exception:
+                req = {}
         out = {"verbs": dict(self.verbs),
                "payload_tx": self.payload_tx,
                "payload_rx": self.payload_rx,
+               "service_s": {k: float(v) for k, v in self.service_s.items()},
                "uptime_s": round(time.time() - self.t0, 3),
                "attached": self.store is not None}
         if self.store is not None:
             out["n_partitions"] = int(self.store.spec.n_partitions)
             out["region_bytes"] = int(self.store.total_bytes())
             out["quant_attached"] = self.store.qvec_buf is not None
+        if req.get("drain_trace"):
+            out["trace_spans"] = list(self.trace_spans)
+            self.trace_spans.clear()
         return W.enc_json(out), 0
 
     # ------------------------------------------------------------ dispatch
@@ -214,18 +236,36 @@ class HostRegion:
         W.OP_STATS: stats,
     }
 
-    def handle(self, op: int, flags: int, payload: bytes):
+    def handle(self, op: int, flags: int, payload: bytes, seq: int = 0):
         """One verb -> (response_payload, response_flags)."""
+        tctx = None
+        if flags & W.FLAG_TRACE:
+            # strip the trace-context prefix before the verb decoder
+            # sees the payload; the ids tag this verb's service span
+            tctx, payload = W.dec_trace_ctx(payload)
+            flags &= ~W.FLAG_TRACE
         if op == W.OP_PING:
-            return payload, 0
+            # ping response advertises trace-context support — clients
+            # only ever send the prefix to servers that acked it here
+            return payload, W.FLAG_TRACE
         fn = self.HANDLERS.get(op)
         if fn is None:
             raise RuntimeError(f"unknown opcode {op}")
+        name = W.OP_NAMES.get(op, str(op))
         with self.lock:
-            self.verbs[W.OP_NAMES.get(op, str(op))] += 1
+            self.verbs[name] += 1
             self.payload_rx += len(payload)
+            t0 = time.perf_counter()
             resp, rflags = fn(self, payload, flags)
+            dur = time.perf_counter() - t0
+            self.service_s[name] += dur
             self.payload_tx += len(resp)
+            if tctx is not None:
+                self.trace_spans.append(
+                    {"op": name, "trace": int(tctx[0]),
+                     "parent": int(tctx[1]), "seq": int(seq),
+                     "t0": t0, "dur": dur,
+                     "rx": len(payload), "tx": len(resp)})
             return resp, rflags
 
 
@@ -301,7 +341,8 @@ class PoolServer:
                     self.stop()
                     return
                 try:
-                    resp, rflags = self.region.handle(op, flags, payload)
+                    resp, rflags = self.region.handle(op, flags, payload,
+                                                      seq)
                 except Exception as e:     # verb error -> error frame
                     resp = str(e).encode("utf-8")
                     rflags = W.FLAG_ERROR

@@ -71,6 +71,12 @@ OP_NAMES = {
 FLAG_QUANT = 0x0001      # span/append verbs: quantized mirror involved
 FLAG_GRAPH = 0x0002      # quant spans: include the full graph blocks
 FLAG_HAS_QUANT = 0x0004  # attach/write_blocks payload carries the mirror
+FLAG_TRACE = 0x0008      # request: payload starts with a trace-context
+                         # prefix (see enc_trace_ctx); on a PING response
+                         # it advertises that the server understands the
+                         # prefix (capability negotiation — clients never
+                         # send the prefix to servers that did not ack,
+                         # so old servers stay byte-compatible)
 FLAG_ERROR = 0x8000      # response: payload is a utf-8 error message
 
 _MAX_PAYLOAD = 1 << 36   # decode sanity bound (64 GiB)
@@ -99,6 +105,29 @@ def unpack_header(buf: bytes):
     if length > _MAX_PAYLOAD:
         raise WireError(f"payload length {length} over bound")
     return op, flags, seq, length
+
+
+# --------------------------------------------------------- trace context
+
+# two 8-byte ids (trace id, parent span id) prepended to a request
+# payload when FLAG_TRACE is set; the server strips the prefix before
+# decoding the verb payload and tags its service-time span with the ids
+_TRACE_CTX = struct.Struct("<QQ")
+TRACE_CTX_BYTES = _TRACE_CTX.size
+
+
+def enc_trace_ctx(trace_id: int, span_id: int) -> bytes:
+    """Encode the 16-byte FLAG_TRACE request-payload prefix."""
+    return _TRACE_CTX.pack(trace_id & 0xFFFFFFFFFFFFFFFF,
+                           span_id & 0xFFFFFFFFFFFFFFFF)
+
+
+def dec_trace_ctx(payload: bytes):
+    """Strip the prefix -> ``((trace_id, span_id), verb_payload)``."""
+    if len(payload) < TRACE_CTX_BYTES:
+        raise WireError("short trace-context prefix")
+    tid, sid = _TRACE_CTX.unpack_from(payload, 0)
+    return (tid, sid), payload[TRACE_CTX_BYTES:]
 
 
 # --------------------------------------------------------------- helpers

@@ -1,0 +1,10 @@
+"""Observability: tracing, metrics exporters, and breakdown reporting.
+
+The package is dependency-free within ``repro`` (only ``trace`` is imported
+by the hot paths) so every tier — serve, compute, pool, net, kernels — can
+emit spans without import cycles.  See ``docs/observability.md``.
+"""
+
+from repro.obs.trace import TRACER, Tracer, chrome_trace, load_trace
+
+__all__ = ["TRACER", "Tracer", "chrome_trace", "load_trace"]

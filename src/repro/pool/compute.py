@@ -30,6 +30,7 @@ from repro.core import search as S
 from repro.core.cost_model import NetLedger
 from repro.core.hnsw import HNSWParams
 from repro.core.scheduler import pow2_pad
+from repro.obs.trace import TRACER
 from repro.pool.protocol import MemoryPool
 
 
@@ -158,6 +159,7 @@ class ComputeClient:
         t0 = time.perf_counter()
         pids = self._route(q_dev, b)
         stats["meta_s"] = time.perf_counter() - t0
+        TRACER.add("compute.route", "compute", t0, stats["meta_s"], B=B)
 
         # plan (compute-instance CPU role)
         t0 = time.perf_counter()
@@ -176,6 +178,9 @@ class ComputeClient:
             plan = SCH.plan_batch(pids, self.cache, doorbell=cfg.doorbell,
                                   owner_of=owner_of)
         stats["plan_s"] = time.perf_counter() - t0
+        TRACER.add("compute.plan", "compute", t0, stats["plan_s"],
+                   rounds=len(plan.rounds), fetches=plan.n_fetches,
+                   hits=plan.n_cache_hits)
 
         # rounds: fetch -> serve -> merge (all device-side; the running
         # top-k is carried as (B, k) device arrays and each round folds
@@ -198,28 +203,37 @@ class ComputeClient:
 
         for rnd in plan.rounds:
             stats["n_rounds"] += 1
-            if len(rnd.fetch_pids):
-                g_blocks, v_blocks = pool.read_spans(
-                    rnd.fetch_pids, ledger=fetch_ledger,
-                    doorbell=fetch_doorbell)
-                slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
-                cache_g, cache_v = DS.write_slots(spec, cache_g, cache_v,
-                                                  slots, g_blocks, v_blocks)
-            if not len(rnd.serve_pairs):
-                continue
-            t0 = time.perf_counter()
-            n = len(rnd.serve_pairs)
-            npad = pow2_pad(n)
-            qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
-            # n_lanes is fixed at b (a query never has more than b pairs
-            # in one round) so recompiles depend only on (B, npad)
-            run_d, run_g = DS.serve_and_merge(
-                spec, cache_g, cache_v, mt_dev, q_dev, run_d, run_g,
-                jnp.asarray(qi), jnp.asarray(ppid), jnp.asarray(pslot),
-                jnp.asarray(prank), jnp.asarray(valid), k=k, ef=ef,
-                mode=cfg.search_mode, n_lanes=b)
-            stats["sub_s"] += time.perf_counter() - t0
-            stats["n_pairs"] += n
+            with TRACER.span("compute.round", tier="compute",
+                             fetch=int(len(rnd.fetch_pids)),
+                             pairs=int(len(rnd.serve_pairs))):
+                if len(rnd.fetch_pids):
+                    with TRACER.span("compute.fetch", tier="compute",
+                                     spans=int(len(rnd.fetch_pids))):
+                        g_blocks, v_blocks = pool.read_spans(
+                            rnd.fetch_pids, ledger=fetch_ledger,
+                            doorbell=fetch_doorbell)
+                        slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
+                        cache_g, cache_v = DS.write_slots(
+                            spec, cache_g, cache_v, slots, g_blocks,
+                            v_blocks)
+                if not len(rnd.serve_pairs):
+                    continue
+                t0 = time.perf_counter()
+                n = len(rnd.serve_pairs)
+                npad = pow2_pad(n)
+                qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
+                # n_lanes is fixed at b (a query never has more than b
+                # pairs in one round) so recompiles depend only on
+                # (B, npad)
+                run_d, run_g = DS.serve_and_merge(
+                    spec, cache_g, cache_v, mt_dev, q_dev, run_d, run_g,
+                    jnp.asarray(qi), jnp.asarray(ppid), jnp.asarray(pslot),
+                    jnp.asarray(prank), jnp.asarray(valid), k=k, ef=ef,
+                    mode=cfg.search_mode, n_lanes=b)
+                dt = time.perf_counter() - t0
+                stats["sub_s"] += dt
+                TRACER.add("compute.serve", "compute", t0, dt, pairs=n)
+                stats["n_pairs"] += n
 
         t0 = time.perf_counter()
         run_d = np.asarray(jax.block_until_ready(run_d))
@@ -324,15 +338,19 @@ class ComputeClient:
                     n_admitted += 1
             stats["rerank_rows"] = int((~hit).sum())
             stats["rerank_hit_rows"] = int(hit.sum())
-        stats["plan_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        stats["plan_s"] += dt
+        TRACER.add("compute.rerank_plan", "compute", t0, dt,
+                   admitted=n_admitted)
         stats["exact_admitted"] = n_admitted
 
         # stage-2 re-rank: exact distances over candidate rows only
         t0 = time.perf_counter()
-        vrows = pool.read_rows(pool_p[:, :, 1])
-        run_d, run_g = DS.rerank_gathered(vrows, q_dev, pool_p[:, :, 1],
-                                          pool_p[:, :, 0], k=k)
-        run_d = np.asarray(jax.block_until_ready(run_d))
+        with TRACER.span("compute.rerank", tier="compute", m=m):
+            vrows = pool.read_rows(pool_p[:, :, 1])
+            run_d, run_g = DS.rerank_gathered(vrows, q_dev, pool_p[:, :, 1],
+                                              pool_p[:, :, 0], k=k)
+            run_d = np.asarray(jax.block_until_ready(run_d))
         run_g = np.asarray(run_g).astype(np.int64)
         stats["sub_s"] += time.perf_counter() - t0
 
@@ -356,6 +374,7 @@ class ComputeClient:
         t0 = time.perf_counter()
         pids = self._route(q_dev, b)
         stats["meta_s"] = time.perf_counter() - t0
+        TRACER.add("compute.route", "compute", t0, stats["meta_s"], B=B)
 
         # stage-1 plan against the quantized tier.  A quantized span
         # read moves the codes + codebook (and, in graph mode, the
@@ -376,6 +395,9 @@ class ComputeClient:
                                   owner_of=getattr(pool, "owner_of_pid",
                                                    None))
         stats["plan_s"] = time.perf_counter() - t0
+        TRACER.add("compute.plan", "compute", t0, stats["plan_s"],
+                   rounds=len(plan.rounds), fetches=plan.n_fetches,
+                   hits=plan.n_cache_hits)
 
         # stage-1 rounds: fetch quantized spans -> pool candidates
         mt_dev = pool.read_meta()
@@ -399,30 +421,40 @@ class ComputeClient:
 
         for rnd in plan.rounds:
             stats["n_rounds"] += 1
-            if len(rnd.fetch_pids):
-                g_blocks, qv_blocks, qs_blocks = pool.read_spans(
-                    rnd.fetch_pids, ledger=fetch_ledger,
-                    doorbell=fetch_doorbell, quant=True,
-                    quant_graph=include_graph)
-                if fetch_ledger is not None:
-                    ledger.save(len(rnd.fetch_pids) * (pb - qpb))
-                slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
-                cache_qg, cache_qv, cache_qs = DS.write_slots_quant(
-                    spec, cache_qg, cache_qv, cache_qs, slots, g_blocks,
-                    qv_blocks, qs_blocks)
-            if not len(rnd.serve_pairs):
-                continue
-            t0 = time.perf_counter()
-            n = len(rnd.serve_pairs)
-            npad = pow2_pad(n)
-            qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
-            pool_d, pool_p = DS.serve_quant_pool(
-                spec, cache_qg, cache_qv, cache_qs, mt_dev, q_dev,
-                pool_d, pool_p, jnp.asarray(qi), jnp.asarray(ppid),
-                jnp.asarray(pslot), jnp.asarray(prank), jnp.asarray(valid),
-                m=m, ef=max(ef, m), mode=cfg.search_mode, n_lanes=b)
-            stats["sub_s"] += time.perf_counter() - t0
-            stats["n_pairs"] += n
+            with TRACER.span("compute.round", tier="compute",
+                             fetch=int(len(rnd.fetch_pids)),
+                             pairs=int(len(rnd.serve_pairs))):
+                if len(rnd.fetch_pids):
+                    with TRACER.span("compute.fetch", tier="compute",
+                                     spans=int(len(rnd.fetch_pids)),
+                                     quant=True):
+                        g_blocks, qv_blocks, qs_blocks = pool.read_spans(
+                            rnd.fetch_pids, ledger=fetch_ledger,
+                            doorbell=fetch_doorbell, quant=True,
+                            quant_graph=include_graph)
+                        if fetch_ledger is not None:
+                            ledger.save(len(rnd.fetch_pids) * (pb - qpb))
+                        slots = jnp.asarray(rnd.fetch_slots, jnp.int32)
+                        cache_qg, cache_qv, cache_qs = DS.write_slots_quant(
+                            spec, cache_qg, cache_qv, cache_qs, slots,
+                            g_blocks, qv_blocks, qs_blocks)
+                if not len(rnd.serve_pairs):
+                    continue
+                t0 = time.perf_counter()
+                n = len(rnd.serve_pairs)
+                npad = pow2_pad(n)
+                qi, ppid, pslot, prank, valid = rnd.serve_tensors(npad, B)
+                pool_d, pool_p = DS.serve_quant_pool(
+                    spec, cache_qg, cache_qv, cache_qs, mt_dev, q_dev,
+                    pool_d, pool_p, jnp.asarray(qi), jnp.asarray(ppid),
+                    jnp.asarray(pslot), jnp.asarray(prank),
+                    jnp.asarray(valid), m=m, ef=max(ef, m),
+                    mode=cfg.search_mode, n_lanes=b)
+                dt = time.perf_counter() - t0
+                stats["sub_s"] += dt
+                TRACER.add("compute.serve", "compute", t0, dt, pairs=n,
+                           quant=True)
+                stats["n_pairs"] += n
         if cfg.mode != "naive":
             self._cache_qg, self._cache_qv, self._cache_qs = (
                 cache_qg, cache_qv, cache_qs)
@@ -490,7 +522,8 @@ class ComputeClient:
         t0 = time.perf_counter()
         cold = not self._flat_synced
         if cold:
-            self._sync_flat(ledger)
+            with TRACER.span("compute.flat_sync", tier="compute"):
+                self._sync_flat(ledger)
             ledger.save(self.pool.spec.n_partitions
                         * (self.pool.spec.partition_bytes()
                            - self.pool.spec.quant_partition_bytes(
@@ -498,11 +531,13 @@ class ComputeClient:
         stats["plan_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        d, idx = quant_topk(q_dev, self._flat_codes, self._flat_scales,
-                            min(m, self._flat_n), cfg.quant_group,
-                            n_valid=self._flat_n,
-                            use_ref=cfg.quant_kernel == "ref")
-        d, idx = jax.block_until_ready((d, idx))
+        with TRACER.span("compute.stage1_flat", tier="compute",
+                         rows=int(self._flat_n), B=B):
+            d, idx = quant_topk(q_dev, self._flat_codes, self._flat_scales,
+                                min(m, self._flat_n), cfg.quant_group,
+                                n_valid=self._flat_n,
+                                use_ref=cfg.quant_kernel == "ref")
+            d, idx = jax.block_until_ready((d, idx))
         safe = jnp.maximum(idx, 0)
         live = idx >= 0
         pool_p = jnp.stack([
@@ -537,7 +572,10 @@ class ComputeClient:
         pool = self.pool
         spec = pool.spec
         vecs = np.asarray(vecs, np.float32).reshape(-1, spec.dim)
+        t0 = time.perf_counter()
         pids = self._route(jnp.asarray(vecs), b=1)[:, 0]
+        TRACER.add("compute.route", "compute", t0,
+                   time.perf_counter() - t0, B=int(len(vecs)))
         gids = np.arange(self._n0 + len(self._extra),
                          self._n0 + len(self._extra) + len(vecs))
         ledger = NetLedger(cfg.fabric)

@@ -165,12 +165,7 @@ class LocalPool(MemoryPool):
                 co["vec_block"], co["vec_off"])
             wire += spec.dim + (spec.dim // spec.quant_group) * 4
         self.verbs["append"] += 1
-        if ledger is not None:
-            ledger.write(wire, descriptors=1)
-            self.totals["round_trips"] += 1
-            self.totals["descriptors"] += 1
-            self.totals["bytes"] += wire
-            self._transport("append", wire, 1, 1)
+        self._charge_write("append", ledger, wire)
         self._mt_dirty = True      # overflow counters moved
         return slot
 

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.cost_model import NetLedger
 from repro.core.layout import LayoutSpec, Store
 from repro.core.scheduler import doorbell_chunks
+from repro.obs.trace import TRACER
 
 
 class PoolUnavailableError(ConnectionError):
@@ -149,6 +150,26 @@ class MemoryPool(abc.ABC):
         self.totals["descriptors"] += descriptors
         self.totals["bytes"] += n_bytes
         self._transport(verb, n_bytes, descriptors, trips)
+        if TRACER.enabled:
+            TRACER.event("pool." + verb, tier="pool", kind=self.kind,
+                         bytes=float(n_bytes), descs=int(descriptors),
+                         trips=int(trips))
+
+    def _charge_write(self, verb: str, ledger: Optional[NetLedger],
+                      n_bytes: float) -> None:
+        """The write-side twin of ``_charge``: one descriptor, one trip,
+        shared by every transport's ``append`` so writes hit the same
+        ledger/totals/transport/trace path as reads."""
+        if ledger is None:
+            return
+        ledger.write(n_bytes, descriptors=1)
+        self.totals["round_trips"] += 1
+        self.totals["descriptors"] += 1
+        self.totals["bytes"] += n_bytes
+        self._transport(verb, n_bytes, 1, 1)
+        if TRACER.enabled:
+            TRACER.event("pool." + verb, tier="pool", kind=self.kind,
+                         bytes=float(n_bytes), descs=1, trips=1)
 
     # ------------------------------------------------- accounting posts
 

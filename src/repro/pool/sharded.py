@@ -827,6 +827,21 @@ class ShardedPool(MemoryPool):
 
     # ------------------------------------------------------------ stats
 
+    def harvest_trace(self) -> int:
+        """Drain server-side trace spans from every live remote child
+        (children without the hook — local/sim shards — contribute 0).
+        A child dying mid-harvest is ignored: observability must never
+        take down the pool it is observing."""
+        n = 0
+        for s, c in enumerate(self.children):
+            if not self._alive[s] or not hasattr(c, "harvest_trace"):
+                continue
+            try:
+                n += c.harvest_trace()
+            except PoolUnavailableError:
+                continue
+        return n
+
     @property
     def sim_total_s(self) -> float:
         """Modeled wire seconds on the parent's critical path."""

@@ -42,6 +42,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.engine import pow2_pad
+from repro.obs.trace import TRACER
 
 
 class AdmissionError(RuntimeError):
@@ -204,6 +205,10 @@ class ServeMetrics:
         # latest memory-pool snapshot (verb totals; per-shard breakdown
         # when the engine serves through a ShardedPool)
         self.pool_snap: Optional[dict] = None
+        # engine-side counters folded across fused calls (cache hit
+        # ratio, fetches, rounds) for the Prometheus exporter
+        self.engine_agg = {"cache_hits": 0.0, "n_fetches": 0.0,
+                           "n_rounds": 0.0}
 
     def _tenant(self, tenant: str) -> dict:
         """Caller must hold the lock."""
@@ -230,7 +235,8 @@ class ServeMetrics:
 
     def record_call(self, batch: int, n_queries: int = 0,
                     net: Optional[dict] = None,
-                    pool: Optional[dict] = None):
+                    pool: Optional[dict] = None,
+                    engine: Optional[dict] = None):
         with self._lock:
             self.n_fused_calls += 1
             self.fused_sizes.append(batch)
@@ -242,6 +248,9 @@ class ServeMetrics:
                 self.net["descriptors"] += net.get("descriptors", 0.0)
             if pool is not None:
                 self.pool_snap = pool
+            if engine:
+                for key in self.engine_agg:
+                    self.engine_agg[key] += float(engine.get(key, 0.0))
 
     def record_rejected(self, tenant: str = "-"):
         with self._lock:
@@ -267,6 +276,7 @@ class ServeMetrics:
                 "mean_fused_batch": float(sizes.mean()) if len(sizes) else 0.0,
                 "breakdown_s": dict(self.breakdown),
                 "net": dict(self.net),
+                "engine": dict(self.engine_agg),
                 "tenants": {t: dict(v) for t, v in self.tenants.items()},
             }
             total_served = sum(v["served"] for v in self.tenants.values())
@@ -397,16 +407,19 @@ class MicroBatcher:
         # tenant bucket FIRST: a tenant-rejected request must not have
         # consumed shared global tokens, or a flooding tenant would
         # still drain everyone else's admission budget
-        tb = self._tenant_bucket(tenant)
-        if tb is not None and not tb.acquire(
-                vecs.shape[0], block=self.policy.admission_block):
-            self.metrics.record_rejected(tenant)
-            raise AdmissionError(
-                f"tenant {tenant!r} over its admission rate")
-        if not self._bucket.acquire(vecs.shape[0],
-                                    block=self.policy.admission_block):
-            self.metrics.record_rejected(tenant)
-            raise AdmissionError("token bucket empty (offered load over cap)")
+        with TRACER.span("serve.admit", tier="serve", tenant=tenant,
+                         rows=int(vecs.shape[0])):
+            tb = self._tenant_bucket(tenant)
+            if tb is not None and not tb.acquire(
+                    vecs.shape[0], block=self.policy.admission_block):
+                self.metrics.record_rejected(tenant)
+                raise AdmissionError(
+                    f"tenant {tenant!r} over its admission rate")
+            if not self._bucket.acquire(vecs.shape[0],
+                                        block=self.policy.admission_block):
+                self.metrics.record_rejected(tenant)
+                raise AdmissionError(
+                    "token bucket empty (offered load over cap)")
         return self._enqueue(_Request("search", vecs, int(k),
                                       time.perf_counter(), tenant))
 
@@ -555,61 +568,82 @@ class MicroBatcher:
             group = window[i:j]
             for r in group:
                 self.metrics.note_dequeued(r.tenant)
-            try:
-                if group[0].kind == "search":
-                    self._dispatch_search(group)
-                else:
-                    self._dispatch_insert(group)
-            except BaseException as e:  # deliver, don't kill the thread
-                for r in group:
-                    if not r.future.done():
-                        r.future.set_exception(e)
+            with TRACER.span("serve.window", tier="serve",
+                             kind=group[0].kind, requests=len(group),
+                             rows=int(sum(r.vecs.shape[0] for r in group))):
+                try:
+                    if group[0].kind == "search":
+                        self._dispatch_search(group)
+                    else:
+                        self._dispatch_insert(group)
+                except BaseException as e:  # deliver, don't kill the thread
+                    for r in group:
+                        if not r.future.done():
+                            r.future.set_exception(e)
             i = j
 
     def _dispatch_search(self, group: list[_Request]):
         t_disp = time.perf_counter()
-        fused = np.concatenate([r.vecs for r in group])
-        # one engine call at the max requested k: top-k lists are
-        # prefix-consistent, so each request slices its own k back out
-        k = max(r.k for r in group)
-        B = fused.shape[0]
-        # bucket the fused batch to a power of two so jitted engine
-        # stages see a bounded set of shapes (each distinct B is its own
-        # XLA compile); pad rows duplicate query 0, which §3.3 dedup
-        # makes free on the fetch path
-        Bpad = pow2_pad(B, lo=1)
-        if Bpad > B:
-            fused = np.concatenate(
-                [fused, np.repeat(fused[:1], Bpad - B, axis=0)])
-        d, g, est = self.engine.search(fused, k=k)
+        if TRACER.enabled:
+            for r in group:
+                TRACER.add("serve.queue", "serve", r.t_submit,
+                           t_disp - r.t_submit, tenant=r.tenant,
+                           rows=int(r.vecs.shape[0]))
+        with TRACER.span("serve.fuse", tier="serve", requests=len(group)):
+            fused = np.concatenate([r.vecs for r in group])
+            # one engine call at the max requested k: top-k lists are
+            # prefix-consistent, so each request slices its own k back out
+            k = max(r.k for r in group)
+            B = fused.shape[0]
+            # bucket the fused batch to a power of two so jitted engine
+            # stages see a bounded set of shapes (each distinct B is its
+            # own XLA compile); pad rows duplicate query 0, which §3.3
+            # dedup makes free on the fetch path
+            Bpad = pow2_pad(B, lo=1)
+            if Bpad > B:
+                fused = np.concatenate(
+                    [fused, np.repeat(fused[:1], Bpad - B, axis=0)])
+        with TRACER.span("serve.dispatch", tier="serve", batch=int(Bpad),
+                         rows=int(B), k=int(k)):
+            d, g, est = self.engine.search(fused, k=k)
         d, g = d[:B], g[:B]
         t_done = time.perf_counter()
-        self.metrics.record_call(B, n_queries=B, net=est["net"],
-                                 pool=est.get("pool"))
-        off = 0
-        for r in group:
-            m = r.vecs.shape[0]
-            stats = copy.deepcopy(est)   # each request owns its stats
-                                         # (est nests the net dict)
-            stats["queue_s"] = t_disp - r.t_submit
-            stats["route_s"] = est["meta_s"]
-            stats["fetch_s"] = est["net"]["latency_s"]
-            stats["serve_s"] = est["sub_s"]
-            stats["fused_batch"] = B
-            stats["total_s"] = t_done - r.t_submit
-            self.metrics.record_request(stats["total_s"], {
-                "queue_s": stats["queue_s"], "route_s": est["meta_s"],
-                "plan_s": est["plan_s"], "fetch_s": stats["fetch_s"],
-                "serve_s": est["sub_s"]})
-            r.future.set_result((d[off:off + m, :r.k],
-                                 g[off:off + m, :r.k], stats))
-            self.metrics.note_served(r.tenant, m)
-            off += m
+        self.metrics.record_call(
+            B, n_queries=B, net=est["net"], pool=est.get("pool"),
+            engine={k2: est.get(k2, 0) for k2 in
+                    ("cache_hits", "n_fetches", "n_rounds")})
+        with TRACER.span("serve.merge", tier="serve", requests=len(group)):
+            off = 0
+            for r in group:
+                m = r.vecs.shape[0]
+                stats = copy.deepcopy(est)   # each request owns its stats
+                                             # (est nests the net dict)
+                stats["queue_s"] = t_disp - r.t_submit
+                stats["route_s"] = est["meta_s"]
+                stats["fetch_s"] = est["net"]["latency_s"]
+                stats["serve_s"] = est["sub_s"]
+                stats["fused_batch"] = B
+                stats["total_s"] = t_done - r.t_submit
+                self.metrics.record_request(stats["total_s"], {
+                    "queue_s": stats["queue_s"], "route_s": est["meta_s"],
+                    "plan_s": est["plan_s"], "fetch_s": stats["fetch_s"],
+                    "serve_s": est["sub_s"]})
+                r.future.set_result((d[off:off + m, :r.k],
+                                     g[off:off + m, :r.k], stats))
+                self.metrics.note_served(r.tenant, m)
+                off += m
 
     def _dispatch_insert(self, group: list[_Request]):
         t_disp = time.perf_counter()
+        if TRACER.enabled:
+            for r in group:
+                TRACER.add("serve.queue", "serve", r.t_submit,
+                           t_disp - r.t_submit, tenant=r.tenant,
+                           rows=int(r.vecs.shape[0]))
         fused = np.concatenate([r.vecs for r in group])
-        gids = self.engine.insert(fused)
+        with TRACER.span("serve.dispatch", tier="serve",
+                         rows=int(fused.shape[0]), kind="insert"):
+            gids = self.engine.insert(fused)
         t_done = time.perf_counter()
         self.metrics.record_call(fused.shape[0],
                                  net=getattr(self.engine,

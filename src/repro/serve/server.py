@@ -74,3 +74,24 @@ class SearchServer:
         totals; per-shard breakdown + migration counters when serving
         through a ``ShardedPool``)."""
         return self.batcher.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of :meth:`stats` plus per-span
+        duration histograms when the tracer is enabled."""
+        from repro.obs.metrics import render_prometheus
+        from repro.obs.trace import TRACER
+        spans = TRACER.snapshot() if TRACER.enabled else None
+        return render_prometheus(self.stats(), spans)
+
+    def dump_trace(self, path) -> int:
+        """Harvest server-side spans (remote pools) and write the whole
+        trace as Chrome-trace JSON.  Returns the span count written."""
+        from repro.obs.trace import TRACER
+        pool = self.engine.pool
+        if TRACER.enabled and hasattr(pool, "harvest_trace"):
+            from repro.pool.protocol import PoolUnavailableError
+            try:
+                pool.harvest_trace()
+            except PoolUnavailableError:
+                pass
+        return TRACER.save(path)

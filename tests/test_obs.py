@@ -1,0 +1,389 @@
+"""repro.obs — end-to-end tracing and metrics.
+
+Four contracts:
+
+* **tracer mechanics** — nesting via the per-thread parent stack, ring
+  capacity + drop accounting, and the disabled tracer being a true
+  no-op (shared null span, nothing allocated or recorded).
+* **span tree shape** — a search through ``SearchServer`` produces the
+  documented taxonomy: pool verb events nest under ``compute.fetch``
+  which nests under ``compute.round`` / ``compute.search`` under the
+  serve window spans.
+* **wire propagation** — against a loopback ``PoolServer`` the client
+  negotiates FLAG_TRACE at PING, stamps verb frames with trace context,
+  and harvests server-side service-time spans whose durations are
+  covered by the matching client-side ``net.*`` span; a server that
+  never acks the flag (old server) is simply never sent trace bytes.
+* **observability is free** — with tracing off OR on, results and the
+  NetLedger are bit-identical across every transport x quant combo;
+  only the tracer's own buffer grows.
+
+Plus exporter round-trips (Chrome trace JSON, Prometheus text, the
+report CLI) and the serving benchmark's counted-pass determinism that
+``benchmarks/perf_gate.py`` relies on.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.net.server import PoolServer
+from repro.obs import report
+from repro.obs.metrics import render_pool_server, render_prometheus
+from repro.obs.trace import TRACER, Tracer, chrome_trace, load_trace
+from repro.serve.batcher import BatchPolicy
+from repro.serve.server import SearchServer
+
+CFG = dict(mode="full", search_mode="scan", n_rep=12, b=3, ef=32,
+           cache_frac=0.25, seed=3)
+
+
+@pytest.fixture(autouse=True)
+def _tracer_guard():
+    """Every test leaves the process-global tracer disabled."""
+    yield
+    TRACER.disable()
+
+
+@pytest.fixture()
+def pds(sift_small):
+    return sift_small.data[:1200], sift_small.queries[:16]
+
+
+def _by_id(spans):
+    return {s["id"]: s for s in spans}
+
+
+def _ancestors(span, idx):
+    out = []
+    while span["parent"]:
+        span = idx[span["parent"]]
+        out.append(span["name"])
+    return out
+
+
+# ------------------------------------------------------------ mechanics
+
+
+def test_disabled_tracer_is_noop():
+    tr = Tracer()
+    s1 = tr.span("a")
+    s2 = tr.span("b", tier="x", big=1)
+    assert s1 is s2                      # shared null object, no allocs
+    with s1 as s:
+        assert s.span_id == 0
+    tr.event("e")
+    tr.add("t", "x", 0.0, 1.0)
+    assert tr.add_span("u", "x", 0.0, 1.0) == 0
+    assert tr.snapshot() == []
+
+
+def test_nesting_and_threads():
+    tr = Tracer()
+    tr.configure(trace_id=9)
+    with tr.span("outer", tier="t") as outer:
+        with tr.span("inner", tier="t"):
+            tr.event("leaf", tier="t")
+        assert tr._current_id() == outer.span_id
+
+        def other():
+            with tr.span("sibling", tier="t"):
+                pass
+
+        th = threading.Thread(target=other)
+        th.start()
+        th.join()
+    spans = {s["name"]: s for s in tr.snapshot()}
+    assert spans["leaf"]["parent"] == spans["inner"]["id"]
+    assert spans["inner"]["parent"] == spans["outer"]["id"]
+    assert spans["outer"]["parent"] == 0
+    # a thread with no open span must not inherit another thread's stack
+    assert spans["sibling"]["parent"] == 0
+    assert spans["sibling"]["tid"] != spans["outer"]["tid"]
+    assert all(s["trace"] == 9 for s in spans.values())
+
+
+def test_capacity_and_drop_counter():
+    tr = Tracer(capacity=4)
+    tr.configure(trace_id=1)
+    for i in range(7):
+        tr.event(f"e{i}")
+    assert len(tr.snapshot()) == 4
+    assert tr.dropped == 3
+    assert [s["name"] for s in tr.snapshot()] == ["e3", "e4", "e5", "e6"]
+
+
+def test_phase_tagging():
+    tr = Tracer()
+    tr.configure(trace_id=1)
+    tr.set_phase("warm")
+    tr.event("a")
+    tr.set_phase(None)
+    tr.event("b")
+    a, b = tr.snapshot()
+    assert a["attrs"]["phase"] == "warm" and "phase" not in b["attrs"]
+
+
+# ------------------------------------------------------------ tree shape
+
+
+def test_span_tree_through_search_server(pds):
+    data, queries = pds
+    TRACER.configure(trace_id=5)
+    eng = DHNSWEngine(EngineConfig(**CFG)).build(data)
+    with SearchServer(eng, BatchPolicy(max_batch=8, max_wait_s=1e-3)) as srv:
+        srv.search(queries[:2], k=5)
+    spans = TRACER.snapshot()
+    idx = _by_id(spans)
+    verbs = [s for s in spans if s["tier"] == "pool"
+             and s["name"] == "pool.read_spans"]
+    assert verbs, [s["name"] for s in spans]
+    chain = _ancestors(verbs[-1], idx)
+    # pool verb -> fetch -> round -> client search -> engine facade ->
+    # serve dispatch -> serve window
+    for name in ("compute.fetch", "compute.round", "compute.search",
+                 "serve.dispatch", "serve.window"):
+        assert name in chain, (name, chain)
+    queue = [s for s in spans if s["name"] == "serve.queue"]
+    assert queue and all(s["tier"] == "serve" for s in queue)
+
+
+# ------------------------------------------------------------ wire
+
+
+def test_trace_flag_roundtrip_loopback(pds):
+    data, queries = pds
+    srv = PoolServer()
+    srv.start()
+    try:
+        TRACER.configure(trace_id=21)
+        eng = DHNSWEngine(EngineConfig(**CFG, pool="remote",
+                                       endpoints=(srv.endpoint,))
+                          ).build(data)
+        eng.search(queries[:4], k=5)
+        pool = eng.pool
+        assert pool._server_trace is True     # PING capability ack
+        n = pool.harvest_trace()
+        assert n > 0
+        spans = TRACER.snapshot()
+        idx = _by_id(spans)
+        server_spans = [s for s in spans if s["tier"] == "server"]
+        assert len(server_spans) == n
+        for s in server_spans:
+            parent = idx[s["parent"]]
+            assert parent["tier"] == "net"
+            assert parent["name"] == "net." + s["name"][len("server."):]
+            # client-side verb span covers the server service time
+            assert parent["dur"] >= s["dur"] - 1e-9
+            # re-based inside the parent on the client clock
+            assert parent["t0"] - 1e-9 <= s["t0"]
+            assert s["t0"] + s["dur"] <= parent["t0"] + parent["dur"] + 1e-9
+            assert s["attrs"]["clock"] == "server"
+        # drained: a second harvest only sees the previous harvest's own
+        # traced STATS drain request, never a verb span twice
+        n_before = len([s for s in TRACER.snapshot()
+                        if s["tier"] == "server"])
+        pool.harvest_trace()
+        fresh = [s for s in TRACER.snapshot()
+                 if s["tier"] == "server"][n_before:]
+        assert all(s["name"] == "server.stats" for s in fresh)
+        pool.close()
+    finally:
+        TRACER.disable()
+        srv.stop()
+
+
+def test_old_server_never_sent_trace_bytes(pds):
+    data, queries = pds
+    srv = PoolServer()
+    srv.start()
+    try:
+        eng = DHNSWEngine(EngineConfig(**CFG, pool="remote",
+                                       endpoints=(srv.endpoint,))
+                          ).build(data)
+        d0, g0, s0 = eng.search(queries[:4], k=5)
+        eng.pool.close()
+
+        TRACER.configure(trace_id=33)
+        eng = DHNSWEngine(EngineConfig(**CFG, pool="remote",
+                                       endpoints=(srv.endpoint,))
+                          ).build(data)
+        # simulate an old server: the PING ack never arrived, so the
+        # client must not prefix trace context onto any frame
+        eng.pool._server_trace = False
+        d1, g1, s1 = eng.search(queries[:4], k=5)
+        assert np.array_equal(np.asarray(d0), np.asarray(d1))
+        assert np.array_equal(np.asarray(g0), np.asarray(g1))
+        assert s0["net"]["bytes"] == s1["net"]["bytes"]
+        assert eng.pool.harvest_trace() == 0
+        assert not any(s["tier"] == "server" for s in TRACER.snapshot())
+        eng.pool.close()
+    finally:
+        TRACER.disable()
+        srv.stop()
+
+
+# ------------------------------------------------------------ free-ness
+
+
+def _run_combo(data, queries, pool_kind, quant, endpoints=None):
+    kw = dict(CFG, pool=pool_kind, quant=quant)
+    if pool_kind == "sharded":
+        kw["n_shards"] = 2
+    if pool_kind == "remote":
+        kw["endpoints"] = endpoints
+    eng = DHNSWEngine(EngineConfig(**kw)).build(data)
+    d, g, st = eng.search(queries, k=5)
+    out = (np.asarray(d).copy(), np.asarray(g).copy(), dict(st["net"]))
+    if pool_kind == "remote":
+        eng.pool.close()
+    return out
+
+
+@pytest.mark.parametrize("pool_kind", ["local", "sim_rdma", "sharded",
+                                       "remote"])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_tracing_off_vs_on_bit_identical(pds, pool_kind, quant):
+    data, queries = pds
+    srv = None
+    endpoints = None
+    if pool_kind == "remote":
+        srv = PoolServer()
+        srv.start()
+        endpoints = (srv.endpoint,)
+    try:
+        TRACER.disable()
+        d0, g0, net0 = _run_combo(data, queries[:6], pool_kind, quant,
+                                  endpoints)
+        TRACER.configure(trace_id=11)
+        d1, g1, net1 = _run_combo(data, queries[:6], pool_kind, quant,
+                                  endpoints)
+        assert len(TRACER.snapshot()) > 0
+        assert np.array_equal(d0, d1)
+        assert np.array_equal(g0, g1)
+        assert net0 == net1      # ledger parity: tracing charges nothing
+    finally:
+        TRACER.disable()
+        if srv is not None:
+            srv.stop()
+
+
+# ------------------------------------------------------------ exporters
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    tr = Tracer()
+    tr.configure(trace_id=3)
+    with tr.span("a", tier="serve", rows=2):
+        tr.event("b", tier="pool", bytes=4096.0)
+    path = tmp_path / "t.json"
+    assert tr.save(path) == 2
+    spans = load_trace(path)
+    orig = tr.snapshot()
+    assert [s["name"] for s in spans] == [s["name"] for s in orig]
+    assert spans[1]["attrs"]["rows"] == 2
+    assert spans[0]["parent"] == spans[1]["id"]
+    for a, b in zip(spans, orig):
+        assert a["trace"] == b["trace"] == 3
+        assert abs(a["dur"] - b["dur"]) < 1e-6
+    blob = chrome_trace(orig)
+    assert all(ev["ph"] == "X" for ev in blob["traceEvents"])
+
+
+def test_report_names_dominant_stage(tmp_path, capsys):
+    tr = Tracer()
+    tr.configure(trace_id=7)
+    for phase, slow in (("serial", 0.010), ("batched", 0.002)):
+        tr.set_phase(phase)
+        with tr.span(report.REQUEST_SPAN, tier="bench"):
+            tr.add("stage.slow", "compute", 0.0, slow)
+            tr.add("stage.fast", "compute", 0.0, 0.001)
+    path = tmp_path / "t.json"
+    tr.save(path)
+    assert report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "dominant stage" in out
+    # the gap table must name the stage whose per-request self time
+    # moved, not merely the biggest absolute stage
+    assert "batched-vs-serial gap" in out
+    assert "stage.slow" in out
+
+
+def test_prometheus_renderers(pds):
+    data, queries = pds
+    TRACER.configure(trace_id=13)
+    eng = DHNSWEngine(EngineConfig(**CFG)).build(data)
+    with SearchServer(eng, BatchPolicy(max_batch=8, max_wait_s=1e-3)) as srv:
+        srv.search(queries[:2], k=5)
+        txt = srv.metrics_text()
+    assert "# TYPE repro_serve_requests_total counter" in txt
+    assert "repro_serve_requests_total 1" in txt
+    assert "repro_span_seconds_bucket" in txt
+    assert 'repro_pool_verbs_total{verb="read_spans"}' in txt
+    assert "repro_cache_hit_ratio" in txt
+    # every exposition line parses: "name{...} value" with float value
+    for line in txt.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        float(line.rsplit(" ", 1)[1])
+    pool_txt = render_pool_server({"verbs": {"read_rows": 3},
+                                   "service_s": {"read_rows": 0.5},
+                                   "payload_rx": 10, "payload_tx": 20,
+                                   "uptime_s": 1.5})
+    assert 'repro_poolserver_verbs_total{verb="read_rows"} 3' in pool_txt
+    assert 'repro_poolserver_payload_bytes_total{dir="rx"} 10' in pool_txt
+    # renderers work with tracing off too (no histogram section)
+    TRACER.disable()
+    off = render_prometheus({"n_requests": 0})
+    assert "repro_span_seconds" not in off
+
+
+def test_dump_trace_harvests_remote(pds, tmp_path):
+    data, queries = pds
+    srv = PoolServer()
+    srv.start()
+    try:
+        TRACER.configure(trace_id=17)
+        eng = DHNSWEngine(EngineConfig(**CFG, pool="remote",
+                                       endpoints=(srv.endpoint,))
+                          ).build(data)
+        with SearchServer(eng, BatchPolicy(max_batch=8,
+                                           max_wait_s=1e-3)) as ss:
+            ss.search(queries[:2], k=5)
+            path = tmp_path / "trace.json"
+            n = ss.dump_trace(path)
+        spans = load_trace(path)
+        assert len(spans) == n
+        assert any(s["tier"] == "server" for s in spans)
+        eng.pool.close()
+    finally:
+        TRACER.disable()
+        srv.stop()
+
+
+# ------------------------------------------------------------ determinism
+
+
+def test_counted_pass_deterministic(sift_small):
+    """Back-to-back counted passes must emit identical gated metrics —
+    the contract benchmarks/perf_gate.py's serving gate stands on."""
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    try:
+        import serving
+    finally:
+        sys.path.pop(0)
+    data, queries = sift_small.data[:1200], sift_small.queries[:16]
+    a = serving.counted_pass("full", data, queries, n_rep=12, C=3, k=5,
+                             waves=2, seed=0)
+    b = serving.counted_pass("full", data, queries, n_rep=12, C=3, k=5,
+                             waves=2, seed=0)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    fused = {r["impl"]: r["mean_fused_batch"] for r in a}
+    assert fused == {"serial": 1.0, "batched": 3.0}

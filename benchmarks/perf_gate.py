@@ -48,6 +48,13 @@ GATED = {
     # batcher window is pinned to the wave size) — smaller fused windows
     # mean the serving tier stopped coalescing
     "mean_fused_batch": "down",
+    # ingest (benchmarks/ingest.py): the bulk loader's memory ceiling
+    # and shipping verb count, and the durable server's WAL/checkpoint
+    # footprint — all deterministic functions of the workload.  Fewer
+    # replayed records means recovery stopped riding the WAL.
+    "peak_builder_mb": "up", "verbs_issued": "up", "chunks_failed": "up",
+    "wal_records": "up", "wal_kb": "up", "checkpoint_kb": "up",
+    "replayed_records": "down",
 }
 # measured on the runner's clock, or incidental detail — never gated
 IGNORED = frozenset({
@@ -55,7 +62,7 @@ IGNORED = frozenset({
     "wire_frames", "wire_frame_overhead_kb", "span_wire_vs_model",
     "migrations", "fused_batch_obs", "speedup_vs_serial", "endpoint",
     "pallas_us", "ref_us", "deaths", "read_retries",
-    "rereplicated_groups", "lost_groups",
+    "rereplicated_groups", "lost_groups", "recover_wall_s",
 })
 
 
@@ -125,7 +132,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("blobs", nargs="*",
                     default=["BENCH_pool.json", "BENCH_quant.json",
-                             "BENCH_serving.json"],
+                             "BENCH_serving.json", "BENCH_ingest.json"],
                     help="bench blob filenames to gate (must exist in "
                          "--baseline-dir)")
     ap.add_argument("--baseline-dir", default="benchmarks/baselines")

@@ -19,8 +19,8 @@ import numpy as np  # noqa: E402
 from repro.core import build_meta, build_store  # noqa: E402
 from repro.core.distributed import ShardedStore  # noqa: E402
 from repro.data.synthetic import sift_like  # noqa: E402
-from repro.distributed.elastic import plan_store_migration  # noqa: E402
-from repro.distributed.fault_tolerance import rebalance_partitions  # noqa: E402
+from repro.pool.placement import (plan_store_migration,  # noqa: E402
+                                  rebalance_partitions)
 
 
 def main():

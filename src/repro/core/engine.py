@@ -117,9 +117,16 @@ class EngineConfig:
     shard_budgets: Optional[tuple] = None
     # stage-1 flat kernel route: "off" keeps the per-pair jnp path;
     # "auto" routes flat (scan-mode) stage 1 through the fused
-    # quant_topk Pallas kernel when the quantized tier is dense-resident
-    # (capacity >= n_partitions); "ref" same route via the jnp oracle
+    # quant_topk kernel when the quantized tier is dense-resident
+    # (capacity >= n_partitions) — Pallas on real accelerators, the jnp
+    # ref on backends where Pallas would run interpreted (CPU); "ref"
+    # forces the jnp oracle on every backend
     quant_kernel: str = "off"       # off | auto | ref
+    # durable / streaming ingestion (repro.ingest): the default spill
+    # directory for build_streaming and, for remote pools, where the
+    # servers keep WAL + checkpoints (operational knob, not wired into
+    # pool construction — servers own their own --data-dir)
+    data_dir: Optional[str] = None
 
 
 class DHNSWEngine:
@@ -161,6 +168,32 @@ class DHNSWEngine:
 
     def build(self, data: np.ndarray) -> "DHNSWEngine":
         self.client.build(data)
+        return self
+
+    def build_streaming(self, source, *, chunk_rows: int,
+                        spill_dir: Optional[str] = None) -> "DHNSWEngine":
+        """Out-of-core build: stream ``source`` (an iterator of row
+        chunks) through ``repro.ingest.BulkLoader`` with O(chunk) peak
+        builder memory.  Bit-identical to ``build`` on the concatenated
+        data; the loader's :class:`~repro.ingest.loader.LoadReport`
+        lands on ``self.last_load_report``."""
+        from repro.core.hnsw import HNSWParams
+        from repro.ingest.loader import BulkLoader
+        cfg = self.cfg
+        loader = BulkLoader(
+            n_rep=cfg.n_rep, chunk_rows=chunk_rows, seed=cfg.seed,
+            meta_levels=cfg.meta_levels,
+            sub_params=HNSWParams(M=max(cfg.sub_M0 // 2, 2), M0=cfg.sub_M0,
+                                  ef_construction=cfg.ef_construction),
+            spill_dir=spill_dir or cfg.data_dir)
+        loader.add_chunks(source)
+        meta, store, report = loader.finalize()
+        # the disk-backed spill view backs repack/rebuild lookups, so
+        # the full dataset never has to be resident on the builder
+        view = loader.data_view()
+        loader.close()
+        self.client.adopt_built(meta, store, view)
+        self.last_load_report = report
         return self
 
     # ------------------------------------------------------------ requests

@@ -214,6 +214,46 @@ def serialize_partition(store: Store, pid: int, local_gids: np.ndarray,
     store.n_base[pid] = n
 
 
+def plan_spec(meta: MetaIndex, dim: int, *, deg: int = 16,
+              ov_cap: int = 0, slot_vecs: int = 64,
+              np_max: Optional[int] = None):
+    """Plan the region geometry for a partitioned dataset.
+
+    Returns ``(spec, parts)`` where ``parts`` is
+    ``meta.partition_lists()``.  Split out of :func:`build_store` so the
+    out-of-core loader plans the *identical* layout from the same meta.
+    """
+    parts = meta.partition_lists()
+    sizes = np.array([len(x) + 1 for x in parts])  # +1: rep always present
+    npm = int(np_max or max(int(sizes.max()), 1))
+    if ov_cap <= 0:
+        # paper sizes the shared region as a small fraction of a group
+        ov_cap = max(16, int(0.1 * 2 * npm))
+    spec = LayoutSpec(dim=dim, deg=deg, np_max=npm, ov_cap=ov_cap,
+                      slot_vecs=slot_vecs, n_partitions=meta.n_partitions)
+    return spec, parts
+
+
+def empty_store(spec: LayoutSpec) -> Store:
+    """Allocate a zeroed region for ``spec`` (graph ids initialized -1)."""
+    return Store(spec=spec,
+                 graph_buf=np.full((spec.n_blocks, spec.gblk), -1, np.int32),
+                 vec_buf=np.zeros((spec.n_blocks, spec.vblk), np.float32),
+                 meta_table=np.zeros((spec.n_partitions, META_COLS),
+                                     np.int32),
+                 n_base=np.zeros((spec.n_partitions,), np.int32))
+
+
+def partition_member_ids(meta: MetaIndex, parts, pid: int,
+                         np_max: int) -> np.ndarray:
+    """Member global ids of partition ``pid``, representative first,
+    truncated to ``np_max`` — THE ordering rule every build path shares
+    (entry_local = 0 relies on the rep being row 0)."""
+    rep_gid = int(meta.rep_ids[pid])
+    ids = [rep_gid] + [int(x) for x in parts[pid] if int(x) != rep_gid]
+    return np.asarray(ids[:np_max], np.int64)
+
+
 def build_store(data: np.ndarray, meta: MetaIndex, *,
                 sub_params: Optional[HNSWParams] = None,
                 ov_cap: int = 0, slot_vecs: int = 64,
@@ -221,26 +261,11 @@ def build_store(data: np.ndarray, meta: MetaIndex, *,
     """Build every sub-HNSW and serialize the full memory-pool region."""
     data = np.asarray(data, np.float32)
     p = sub_params or HNSWParams(M=8, M0=16, ef_construction=80)
-    parts = meta.partition_lists()
-    P = meta.n_partitions
-    sizes = np.array([len(x) + 1 for x in parts])  # +1: rep always present
-    npm = int(np_max or max(int(sizes.max()), 1))
-    if ov_cap <= 0:
-        # paper sizes the shared region as a small fraction of a group
-        ov_cap = max(16, int(0.1 * 2 * npm))
-    spec = LayoutSpec(dim=data.shape[1], deg=p.M0, np_max=npm, ov_cap=ov_cap,
-                      slot_vecs=slot_vecs, n_partitions=P)
-
-    store = Store(spec=spec,
-                  graph_buf=np.full((spec.n_blocks, spec.gblk), -1, np.int32),
-                  vec_buf=np.zeros((spec.n_blocks, spec.vblk), np.float32),
-                  meta_table=np.zeros((P, META_COLS), np.int32),
-                  n_base=np.zeros((P,), np.int32))
-
-    for pid in range(P):
-        rep_gid = int(meta.rep_ids[pid])
-        ids = [rep_gid] + [int(x) for x in parts[pid] if int(x) != rep_gid]
-        ids = np.asarray(ids[: spec.np_max], np.int64)
+    spec, parts = plan_spec(meta, data.shape[1], deg=p.M0, ov_cap=ov_cap,
+                            slot_vecs=slot_vecs, np_max=np_max)
+    store = empty_store(spec)
+    for pid in range(meta.n_partitions):
+        ids = partition_member_ids(meta, parts, pid, spec.np_max)
         # entry_local = 0: the representative is inserted first
         serialize_partition(store, pid, ids, data[ids], 0, p)
     return store

@@ -44,6 +44,41 @@ class MetaIndex:
         return [order[bounds[p]:bounds[p + 1]] for p in range(self.n_partitions)]
 
 
+def rep_sample_ids(n: int, n_rep: int, *, seed: int = 0) -> np.ndarray:
+    """Uniform representative sample — a function of ``(n, seed)`` only.
+
+    Split out so the out-of-core loader can pick the identical reps
+    before the dataset is resident (it only needs the row count).
+    """
+    n_rep = min(n_rep, n)
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(n, size=n_rep, replace=False))
+
+
+def build_meta_from_parts(reps: np.ndarray, rep_ids: np.ndarray,
+                          assignments: np.ndarray, *, seed: int = 0,
+                          meta_levels: int = 3,
+                          params: Optional[HNSWParams] = None) -> MetaIndex:
+    """Assemble a :class:`MetaIndex` from precomputed reps + assignments.
+
+    The meta-HNSW construction lives here so the in-memory
+    :func:`build_meta` and the streaming loader (which computes
+    ``assignments`` chunk-by-chunk) share one code path bit-for-bit.
+    """
+    reps = np.asarray(reps, np.float32)
+    p = params or HNSWParams(M=8, M0=16, ef_construction=64, seed=seed)
+    h = HNSW(reps.shape[1], p)
+    # force levels so the meta graph is exactly `meta_levels` deep: node 0
+    # spans all layers (fixed entry point, paper: "fixed entry point in L2")
+    for i, row in enumerate(reps):
+        lvl = meta_levels - 1 if i == 0 else min(h._draw_level(), meta_levels - 1)
+        h.insert(row, level=lvl)
+    graph = h.export(max_levels=meta_levels)
+    return MetaIndex(reps=reps, rep_ids=np.asarray(rep_ids),
+                     graph=graph,
+                     assignments=np.asarray(assignments, np.int32))
+
+
 def build_meta(data: np.ndarray, n_rep: int = 500, *, seed: int = 0,
                meta_levels: int = 3,
                params: Optional[HNSWParams] = None) -> MetaIndex:
@@ -55,25 +90,12 @@ def build_meta(data: np.ndarray, n_rep: int = 500, *, seed: int = 0,
     graph (that is what we cache and traverse on device).
     """
     data = np.asarray(data, np.float32)
-    n = data.shape[0]
-    n_rep = min(n_rep, n)
-    rng = np.random.default_rng(seed)
-    rep_ids = np.sort(rng.choice(n, size=n_rep, replace=False))
+    rep_ids = rep_sample_ids(data.shape[0], n_rep, seed=seed)
     reps = data[rep_ids].copy()
-
-    p = params or HNSWParams(M=8, M0=16, ef_construction=64, seed=seed)
-    h = HNSW(data.shape[1], p)
-    # force levels so the meta graph is exactly `meta_levels` deep: node 0
-    # spans all layers (fixed entry point, paper: "fixed entry point in L2")
-    for i, row in enumerate(reps):
-        lvl = meta_levels - 1 if i == 0 else min(h._draw_level(), meta_levels - 1)
-        h.insert(row, level=lvl)
-    graph = h.export(max_levels=meta_levels)
-
     _, nn = brute_force_knn(reps, data, 1)
     assignments = nn[:, 0].astype(np.int32)
-    return MetaIndex(reps=reps, rep_ids=rep_ids, graph=graph,
-                     assignments=assignments)
+    return build_meta_from_parts(reps, rep_ids, assignments, seed=seed,
+                                 meta_levels=meta_levels, params=params)
 
 
 def balance_stats(meta: MetaIndex) -> dict:

@@ -1,0 +1,43 @@
+"""Streaming ingestion + durability for the memory pool.
+
+The missing third leg of the disaggregated system: everything before
+this subsystem held the region only in volatile memory (a dead
+``PoolServer`` lost its bytes, and PR 6's failover re-replicated them
+from the *host* region — a crutch), and the region itself had to be
+built fully in builder RAM before one big ATTACH.  ``repro.ingest``
+fixes both:
+
+* ``wal.py``        — a length-prefixed, CRC-checked write-ahead log of
+                      the state-mutating verbs; records reuse the wire
+                      codecs verbatim, so replay is just re-dispatch.
+* ``checkpoint.py`` — atomic region snapshots (write-temp-fsync-rename)
+                      plus ``Durability``, the per-server orchestrator
+                      a ``PoolServer --data-dir`` runs: log every
+                      mutation before acking, checkpoint on a cadence,
+                      recover checkpoint + WAL tail on restart.
+* ``loader.py``     — out-of-core bulk loading: stream vectors in
+                      bounded-memory chunks (parse -> validate ->
+                      retry/error-queue), spill to disk, and serialize
+                      the region group-by-group so peak builder RSS is
+                      O(chunk), not O(dataset) — bit-identical to an
+                      in-memory build.
+* ``compactor.py``  — a background compaction daemon that watches
+                      per-group overflow ratios and issues ``repack``
+                      verbs off the serve path under a rate budget.
+
+Observability: spans ``ingest.wal_append`` / ``ingest.checkpoint`` /
+``ingest.replay`` / ``ingest.compact`` plus Prometheus counters via
+``repro.obs.metrics`` (the pool-server exporter renders the durability
+counters, the compactor renders its own).
+"""
+from repro.ingest.checkpoint import (Durability, load_checkpoint,
+                                     save_checkpoint)
+from repro.ingest.compactor import CompactionPolicy, Compactor
+from repro.ingest.loader import BulkLoader, LoadReport, chunked_source
+from repro.ingest.wal import (WalRecord, WriteAheadLog, encode_record,
+                              iter_records, read_wal)
+
+__all__ = ["WriteAheadLog", "WalRecord", "encode_record", "iter_records",
+           "read_wal", "save_checkpoint", "load_checkpoint", "Durability",
+           "BulkLoader", "LoadReport", "chunked_source", "Compactor",
+           "CompactionPolicy"]

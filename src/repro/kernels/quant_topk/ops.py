@@ -51,6 +51,17 @@ def _quant_topk_jit(queries, codes, scales, k: int, group: int, n_valid, *,
     return jnp.where(bad, jnp.inf, d), jnp.where(bad, -1, i)
 
 
+def auto_use_ref() -> bool:
+    """Whether ``quant_kernel="auto"`` should take the jnp ref path.
+
+    On backends where the Pallas kernel would run under ``interpret=True``
+    (CPU — this container) the interpreter is ~an order of magnitude
+    slower than the jnp oracle, so "auto" routes to the ref impl there
+    and reserves Pallas for real accelerators.
+    """
+    return jax.default_backend() == "cpu"
+
+
 def quant_topk(queries, codes, scales, k: int, group: int, n_valid=None, *,
                block_q: int = 128, block_n: int = 256,
                interpret: bool | None = None, use_ref: bool = False):

@@ -36,6 +36,7 @@ from __future__ import annotations
 import socket
 import threading
 import time
+import zlib
 from collections import Counter
 from typing import Optional, Union
 
@@ -83,7 +84,8 @@ class RemotePool(MemoryPool):
 
     def __init__(self, store: Store, endpoint: Endpoint, *,
                  fabric: Optional[Fabric] = None, timeout_s: float = 60.0,
-                 connect_timeout_s: float = 10.0):
+                 connect_timeout_s: float = 10.0, attach: str = "always"):
+        assert attach in ("always", "auto"), attach
         self.store = store
         self.endpoint = parse_endpoint(endpoint)
         self.fabric = fabric or RDMA_100G
@@ -100,9 +102,16 @@ class RemotePool(MemoryPool):
         self._seq = 0
         self._lock = threading.Lock()
         self._server_trace = False
+        self.attached_via = "upload"
         self._connect(connect_timeout_s)
         self._probe_caps()
-        self._attach()
+        # recovery handshake: a durable server that already holds a
+        # region matching our mirror (it recovered from its data-dir)
+        # does not need the multi-MB ATTACH re-upload
+        if attach == "auto" and self._server_region_matches():
+            self.attached_via = "recovered"
+        else:
+            self._attach()
         self._mt_dev = jnp.asarray(self.store.meta_table)
         self._mt_dirty = False
 
@@ -247,6 +256,31 @@ class RemotePool(MemoryPool):
                 + n_bytes / f.bw_Bps)
 
     # ------------------------------------------------------------ staging
+
+    def _local_fingerprint(self) -> dict:
+        """Mirror-side twin of ``HostRegion.fingerprint`` (same CRC)."""
+        st = self.store
+        crc = zlib.crc32(st.meta_table.tobytes())
+        crc = zlib.crc32(st.n_base.tobytes(), crc)
+        return {"n_blocks": int(st.spec.n_blocks),
+                "n_partitions": int(st.spec.n_partitions),
+                "n_base": int(st.n_base.sum()), "crc": int(crc)}
+
+    def _server_region_matches(self) -> bool:
+        """Recovery handshake: does the server already hold our region?
+
+        True only when the server advertises a fingerprint equal to the
+        local mirror's AND (if the mirror carries a quantized tier) the
+        recovered region carries one too.
+        """
+        st = self.server_stats()
+        if not st.get("attached"):
+            return False
+        if st.get("region_fingerprint") != self._local_fingerprint():
+            return False
+        if self.store.qvec_buf is not None and not st.get("quant_attached"):
+            return False
+        return True
 
     def _attach(self) -> None:
         payload, flags = W.enc_attach(self.store)
@@ -427,6 +461,10 @@ class RemotePool(MemoryPool):
         self._note("append", len(payload), wire_model)
         self._charge_write("append", ledger, wire_model)
         self._mt_dirty = True
+        self._notify_mutation("append",
+                              group=int(self.store.meta_table[
+                                  pid, LA.MT_GROUP]),
+                              pid=int(pid), slot=int(slot))
         return slot
 
     def repack(self, group: int, data_lookup) -> bool:
@@ -445,6 +483,7 @@ class RemotePool(MemoryPool):
         self._rpc(W.OP_WRITE_BLOCKS, payload, flags=flags, verb="repack")
         self._note("repack", len(payload), 0.0)
         self._mt_dirty = True
+        self._notify_mutation("repack", group=int(group))
         return True
 
     # ------------------------------------------------------------ stats
@@ -525,4 +564,5 @@ class RemotePool(MemoryPool):
         out["wire"] = {k: (dict(v) if isinstance(v, dict) else v)
                        for k, v in self.wire.items()}
         out["wire_vs_model"] = self.wire_vs_model()
+        out["attached_via"] = self.attached_via
         return out

@@ -28,6 +28,13 @@ frame (the offline "load the index into the memory pool" step; repeated
 ATTACH replaces the region — one region per server).  ``--demo-n``
 pre-builds a synthetic region (seeded by ``--seed``) for standalone
 poking without a client build.
+
+Durability (``--data-dir``): every mutating verb is appended to a WAL
+before its ack and the region is checkpointed on a cadence
+(``repro.ingest``); on restart the server recovers checkpoint + WAL
+tail and resumes serving the identical region — memory-pool state now
+survives the process, so failover can rejoin a recovered server instead
+of re-replicating from the host region.
 """
 from __future__ import annotations
 
@@ -39,12 +46,17 @@ import subprocess
 import sys
 import threading
 import time
+import zlib
 from collections import Counter, deque
 
 import numpy as np
 
 from repro.core import layout as LA
 from repro.net import wire as W
+
+#: verbs that change region state — exactly the set the WAL captures
+MUTATING_OPS = frozenset({W.OP_ATTACH, W.OP_ATTACH_QUANT, W.OP_APPEND,
+                          W.OP_WRITE_BLOCKS})
 
 
 class HostRegion:
@@ -53,8 +65,9 @@ class HostRegion:
     #: bound on buffered server-side trace spans (oldest dropped first)
     TRACE_CAP = 4096
 
-    def __init__(self, store=None):
+    def __init__(self, store=None, durability=None):
         self.store = store
+        self.durability = durability
         self.lock = threading.RLock()
         self.verbs: Counter = Counter()
         self.payload_tx = 0      # response payload bytes served
@@ -65,6 +78,43 @@ class HostRegion:
         # requests, drained by a stats({"drain_trace": true}) call
         self.service_s: Counter = Counter()
         self.trace_spans: deque = deque(maxlen=self.TRACE_CAP)
+
+    # ------------------------------------------------------------ durability
+
+    def attach_durability(self, dur) -> None:
+        """Recover from ``dur``'s data-dir and log all future mutations.
+
+        Loads the checkpoint (if any), replays the committed WAL tail
+        through the normal handler table (replay is never re-logged),
+        and folds a non-empty tail into a fresh checkpoint so the next
+        restart starts from a shorter log.
+        """
+        from repro.obs.trace import TRACER
+        self.durability = dur
+        store, tail = dur.recover()
+        if store is not None:
+            self.store = store
+        if tail:
+            t0 = time.perf_counter()
+            with dur.replay_guard():
+                for rec in tail:
+                    self.handle(rec.op, rec.flags, rec.payload)
+            if TRACER.enabled:
+                TRACER.add("ingest.replay", "ingest", t0,
+                           time.perf_counter() - t0, records=len(tail))
+            if self.store is not None:
+                dur.checkpoint(self.store)
+
+    def fingerprint(self) -> dict:
+        """Cheap region identity for the recovery handshake: geometry +
+        a CRC over the metadata table and base counts (the mutable
+        directory every verb goes through)."""
+        st = self._require()
+        crc = zlib.crc32(st.meta_table.tobytes())
+        crc = zlib.crc32(st.n_base.tobytes(), crc)
+        return {"n_blocks": int(st.spec.n_blocks),
+                "n_partitions": int(st.spec.n_partitions),
+                "n_base": int(st.n_base.sum()), "crc": int(crc)}
 
     # ------------------------------------------------------------ helpers
 
@@ -221,6 +271,9 @@ class HostRegion:
             out["n_partitions"] = int(self.store.spec.n_partitions)
             out["region_bytes"] = int(self.store.total_bytes())
             out["quant_attached"] = self.store.qvec_buf is not None
+            out["region_fingerprint"] = self.fingerprint()
+        if self.durability is not None:
+            out["ingest"] = self.durability.stats()
         if req.get("drain_trace"):
             out["trace_spans"] = list(self.trace_spans)
             self.trace_spans.clear()
@@ -257,6 +310,13 @@ class HostRegion:
             self.payload_rx += len(payload)
             t0 = time.perf_counter()
             resp, rflags = fn(self, payload, flags)
+            if (op in MUTATING_OPS and self.durability is not None
+                    and not self.durability.replaying):
+                # WAL before ack: the handler already mutated the
+                # region, but the client only sees success once the
+                # record is down; a crash in between replays it.
+                self.durability.log(op, flags, payload)
+                self.durability.maybe_checkpoint(self.store)
             dur = time.perf_counter() - t0
             self.service_s[name] += dur
             self.payload_tx += len(resp)
@@ -368,7 +428,8 @@ def _src_path() -> str:
 @contextlib.contextmanager
 def spawn_pool_servers(n: int = 1, *, host: str = "127.0.0.1", seed: int = 0,
                        startup_timeout_s: float = 60.0, demo_n: int = 0,
-                       with_procs: bool = False):
+                       with_procs: bool = False, data_dirs=None,
+                       checkpoint_every: int = 0):
     """Fork ``n`` loopback pool-server processes; yield their endpoints.
 
     Each server binds ``--port 0`` (OS-assigned — no CI port clashes) and
@@ -380,7 +441,12 @@ def spawn_pool_servers(n: int = 1, *, host: str = "127.0.0.1", seed: int = 0,
     ``subprocess.Popen`` handles let chaos tests and benchmarks kill -9
     individual servers mid-run to exercise the failover path; teardown
     copes with already-dead processes.
+
+    ``data_dirs`` (one directory per server) makes the servers durable:
+    each runs with ``--data-dir`` (WAL + checkpoints, recovery on
+    restart); ``checkpoint_every`` overrides the snapshot cadence.
     """
+    assert data_dirs is None or len(data_dirs) == n, data_dirs
     env = os.environ.copy()
     src = _src_path()
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
@@ -392,6 +458,10 @@ def spawn_pool_servers(n: int = 1, *, host: str = "127.0.0.1", seed: int = 0,
                    "--port", "0", "--seed", str(seed + i)]
             if demo_n:
                 cmd += ["--demo-n", str(demo_n)]
+            if data_dirs is not None:
+                cmd += ["--data-dir", data_dirs[i]]
+                if checkpoint_every:
+                    cmd += ["--checkpoint-every", str(checkpoint_every)]
             p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                  stderr=subprocess.STDOUT, text=True,
                                  env=env)
@@ -475,9 +545,22 @@ def main(argv=None) -> int:
     ap.add_argument("--demo-n", type=int, default=0,
                     help="pre-build a synthetic region of this many "
                          "vectors (0 = start empty, await ATTACH)")
+    ap.add_argument("--data-dir", default=None,
+                    help="durable state directory (WAL + checkpoints); "
+                         "recovers the region on restart")
+    ap.add_argument("--checkpoint-every", type=int, default=256,
+                    help="checkpoint after this many logged mutations")
+    ap.add_argument("--wal-fsync", action="store_true",
+                    help="fsync the WAL on every append (power-loss "
+                         "safety; default flushes to the OS only)")
     args = ap.parse_args(argv)
     region = (_build_demo_region(args.demo_n, args.seed) if args.demo_n
               else HostRegion())
+    if args.data_dir:
+        from repro.ingest import Durability
+        region.attach_durability(
+            Durability(args.data_dir, checkpoint_every=args.checkpoint_every,
+                       fsync=args.wal_fsync))
     srv = PoolServer(args.host, args.port, region=region)
     print(f"POOLSERVER LISTENING {srv.host} {srv.port}", flush=True)
     try:

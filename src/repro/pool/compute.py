@@ -73,6 +73,26 @@ class ComputeClient:
             data, self.meta,
             sub_params=HNSWParams(M=max(cfg.sub_M0 // 2, 2), M0=cfg.sub_M0,
                                   ef_construction=cfg.ef_construction))
+        self._adopt(store)
+        return self
+
+    def adopt_built(self, meta: ME.MetaIndex, store,
+                    data: np.ndarray) -> "ComputeClient":
+        """Wire a meta + region built elsewhere (the streaming
+        ``repro.ingest.BulkLoader``) into the client and warm the same
+        caches ``build`` would.  ``data`` backs repack/rebuild lookups
+        and may be a read-only disk-backed view (np.memmap) — the
+        builder never needs the full dataset resident."""
+        self._data = data
+        self._n0 = data.shape[0]
+        self.meta = meta
+        self._adopt(store)
+        return self
+
+    def _adopt(self, store) -> None:
+        """Shared tail of ``build``/``adopt_built``: hand the region to
+        the pool and warm the compute-side caches."""
+        cfg = self.cfg
         self.pool = self._pool_factory(store)
         # compute pool (cached, replicated): the meta-HNSW
         self._meta_vecs = jnp.asarray(self.meta.graph.vectors)
@@ -81,7 +101,6 @@ class ComputeClient:
         cap = max(2, int(np.ceil(cfg.cache_frac * self.meta.n_partitions)))
         self._cap0 = cap
         self._setup_caches(cap)
-        return self
 
     def _setup_caches(self, cap: int):
         cfg = self.cfg
@@ -513,12 +532,18 @@ class ComputeClient:
 
     def _stage1_flat(self, q_dev, B: int, m: int, ledger, stats):
         """Stage 1 as ONE fused int8 scan: ``quant_topk`` (Pallas on
-        TPU, interpret on CPU) over the flat dense-resident database.
+        real accelerators; under ``quant_kernel="auto"`` the jnp ref on
+        CPU, where Pallas would interpret) over the flat dense-resident
+        database.
         No meta routing, no rounds — every live row is a candidate, so
         recall is bounded below by the per-pair path at equal m."""
-        from repro.kernels.quant_topk.ops import quant_topk
+        from repro.kernels.quant_topk.ops import auto_use_ref, quant_topk
 
         cfg = self.cfg
+        # "ref" forces the jnp oracle everywhere; "auto" picks it only
+        # where Pallas would run interpreted (CPU), and Pallas elsewhere
+        use_ref = (cfg.quant_kernel == "ref"
+                   or (cfg.quant_kernel == "auto" and auto_use_ref()))
         t0 = time.perf_counter()
         cold = not self._flat_synced
         if cold:
@@ -535,8 +560,7 @@ class ComputeClient:
                          rows=int(self._flat_n), B=B):
             d, idx = quant_topk(q_dev, self._flat_codes, self._flat_scales,
                                 min(m, self._flat_n), cfg.quant_group,
-                                n_valid=self._flat_n,
-                                use_ref=cfg.quant_kernel == "ref")
+                                n_valid=self._flat_n, use_ref=use_ref)
             d, idx = jax.block_until_ready((d, idx))
         safe = jnp.maximum(idx, 0)
         live = idx >= 0
@@ -556,6 +580,7 @@ class ComputeClient:
         stats["n_rounds"] = 1
         stats["n_pairs"] = B
         stats["quant_kernel"] = "flat"
+        stats["stage1_impl"] = "ref" if use_ref else "pallas"
         stats["flat_rows"] = int(self._flat_n)
         return pool_d, pool_p, {
             "n_cache_hits": 0 if cold else B,

@@ -167,6 +167,8 @@ class LocalPool(MemoryPool):
         self.verbs["append"] += 1
         self._charge_write("append", ledger, wire)
         self._mt_dirty = True      # overflow counters moved
+        self._notify_mutation("append", group=group, pid=int(pid),
+                              slot=int(slot))
         return slot
 
     def repack(self, group: int, data_lookup) -> bool:
@@ -177,4 +179,5 @@ class LocalPool(MemoryPool):
         if ok:
             LA.refresh_quant_group(self.store, group)
             self._stage_all()      # re-register the rewritten region
+            self._notify_mutation("repack", group=int(group))
         return ok

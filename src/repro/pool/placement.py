@@ -315,3 +315,49 @@ def make_placement(spec: Union[str, PlacementPolicy, None] = "round_robin",
     except KeyError:
         raise ValueError(f"unknown placement policy {spec!r} "
                          f"(have {sorted(_POLICIES)})") from None
+
+
+# ----------------------------------------------------- rescale / rebalance
+# (migration planning over the block-contiguous owner mapping — folded in
+# from the retired repro.distributed.elastic / .fault_tolerance stubs)
+
+def plan_store_migration(n_blocks: int, old_tp: int, new_tp: int):
+    """Block moves for rescaling the memory-pool owner count.
+
+    Returns ``[(src_owner, dst_owner, first_block, n)]`` — contiguous
+    spans only (the layout guarantee).  Total moved bytes is the
+    rescale cost.
+    """
+    old_per = -(-n_blocks // old_tp)
+    new_per = -(-n_blocks // new_tp)
+    moves = []
+    b = 0
+    while b < n_blocks:
+        src = min(b // old_per, old_tp - 1)
+        dst = min(b // new_per, new_tp - 1)
+        # span until either owner boundary changes
+        nxt = min((b // old_per + 1) * old_per,
+                  (b // new_per + 1) * new_per, n_blocks)
+        if src != dst:
+            moves.append((src, dst, b, nxt - b))
+        b = nxt
+    return moves
+
+
+def rebalance_partitions(owners, sick: set, n_owners: int):
+    """Reassign partitions owned by sick memory instances to the
+    least-loaded healthy ones.  The paper's layout makes each migration
+    a contiguous copy of one group span.  Returns (new_owners, moves).
+    """
+    owners = np.asarray(owners).copy()
+    healthy = [o for o in range(n_owners) if o not in sick]
+    if not healthy:
+        raise RuntimeError("no healthy memory instances left")
+    load = {o: int((owners == o).sum()) for o in healthy}
+    moves = []
+    for pid in np.nonzero(np.isin(owners, list(sick)))[0]:
+        tgt = min(load, key=load.get)
+        moves.append((int(pid), int(owners[pid]), tgt))
+        owners[pid] = tgt
+        load[tgt] += 1
+    return owners, moves

@@ -200,6 +200,26 @@ class MemoryPool(abc.ABC):
             cnt = sum(c for _, c in chunk)
             self._charge("post_row_reads", ledger, cnt * row_b, cnt)
 
+    # ------------------------------------------------------------ mutation
+
+    def register_mutation_hook(self, fn) -> None:
+        """Subscribe ``fn(verb, **info)`` to state-mutating verbs.
+
+        Transports call :meth:`_notify_mutation` after an ``append`` or
+        ``repack`` lands; the ingest compactor uses this to track dirty
+        groups without polling, and tests use it to observe write flow.
+        Hooks run synchronously on the mutating thread and must be
+        cheap; a hook must never call back into the pool.
+        """
+        if not hasattr(self, "_mutation_hooks"):
+            self._mutation_hooks = []
+        self._mutation_hooks.append(fn)
+
+    def _notify_mutation(self, verb: str, **info) -> None:
+        """Fan a landed mutation out to the registered hooks."""
+        for fn in getattr(self, "_mutation_hooks", ()):
+            fn(verb, **info)
+
     # ------------------------------------------------------------ writes
 
     @abc.abstractmethod

@@ -119,10 +119,14 @@ class ShardedPool(MemoryPool):
         self.replication_io = {"fanout_writes": 0, "bytes": 0.0,
                                "sim_s": 0.0}
         # failure handling: deaths seen, read batches that had to retry
-        # on a survivor, and the healing copies that followed
+        # on a survivor, the healing copies that followed, and shards
+        # that rejoined from their own durable state (recover_shard)
         self.failover = {"deaths": 0, "read_retries": 0,
                          "rereplicated_groups": 0,
-                         "rereplicate_bytes": 0.0, "lost_groups": 0}
+                         "rereplicate_bytes": 0.0, "lost_groups": 0,
+                         "recovered_shards": 0, "recovered_groups": 0}
+        # groups each dead shard held at death, for recover_shard
+        self._dead_held: dict[int, list[int]] = {}
         # planned fleet changes (add_shard / remove_shard)
         self.elastic = {"added": 0, "removed": 0, "moved_groups": 0,
                         "bytes": 0.0}
@@ -569,6 +573,8 @@ class ShardedPool(MemoryPool):
         co = LA.overflow_write_coords(spec, lay_group, slot)
         blocks = sorted({int(co["vec_block"]), int(co["gid_block"])})
         self._fan_write(group, blocks, exclude=primary)
+        self._notify_mutation("append", group=lay_group, pid=pid_i,
+                              slot=int(slot))
         return slot
 
     def repack(self, group: int, data_lookup) -> bool:
@@ -600,6 +606,7 @@ class ShardedPool(MemoryPool):
             blocks = np.arange(group * spec.group_blocks,
                                (group + 1) * spec.group_blocks)
             self._fan_write(group, blocks, exclude=primary)
+            self._notify_mutation("repack", group=group)
         return ok
 
     def _fan_write(self, group: int, block_ids, exclude: int) -> None:
@@ -651,6 +658,9 @@ class ShardedPool(MemoryPool):
         if shard < 0 or shard >= self.n_shards or not self._alive[shard]:
             return
         self._alive[shard] = False
+        self._dead_held[shard] = [
+            g for g in range(len(self._replicas))
+            if (self._replicas[g] == shard).any()]
         if planned:
             self.elastic["removed"] += 1
         else:
@@ -769,6 +779,52 @@ class ShardedPool(MemoryPool):
         child = self.children[int(shard)]
         if hasattr(child, "close"):
             child.close()
+
+    def recover_shard(self, shard: int,
+                      child_factory: Callable[[Store], MemoryPool]) -> None:
+        """Rejoin a restarted memory node in place — the durable path.
+
+        The new child recovered its region from its own data-dir (WAL
+        replay), so unlike ``_on_shard_down`` healing NOTHING is
+        re-staged from the host region: the factory connects (a durable
+        ``RemotePool`` uses ``attach="auto"`` and skips the upload when
+        the server's recovered fingerprint matches the mirror), the old
+        transport is closed, and any group slots the death left empty
+        are handed back to the recovered shard.  With ``replication=1``
+        this is what turns a "lost" group back into a served one.
+        """
+        shard = int(shard)
+        assert 0 <= shard < self.n_shards, shard
+        old = self.children[shard]
+        if hasattr(old, "close"):
+            old.close()
+        child = child_factory(self.store)
+        if (self.store.qvec_buf is not None
+                and getattr(child, "attached_via", "upload") != "recovered"
+                and hasattr(child, "_stage_quant")):
+            child._stage_quant()     # full re-upload path needs the mirror
+        self.children[shard] = child
+        was_dead = not self._alive[shard]
+        self._alive[shard] = True
+        self.failover["recovered_shards"] += 1
+        if was_dead:
+            restored = 0
+            for g in self._dead_held.pop(shard, []):
+                row = self._replicas[g]
+                if (row == shard).any():
+                    continue
+                free = np.nonzero(row < 0)[0]
+                if not len(free):
+                    continue          # fully re-replicated elsewhere
+                if not any(int(s) >= 0 and self._alive[int(s)]
+                           for s in row):
+                    # the group had lost every copy — it is back now
+                    self.failover["lost_groups"] = max(
+                        0, self.failover["lost_groups"] - 1)
+                row[free[0]] = shard
+                restored += 1
+            self.failover["recovered_groups"] += restored
+        self._recompute_serving()
 
     # ------------------------------------------------------------ migration
 

@@ -64,6 +64,9 @@ class BatchPolicy:
     budget shrinks toward ``min_wait_s``); when traffic is sparse a
     longer window is the only way requests ever coalesce (the budget
     grows toward ``max_wait_s``).  ``max_wait_s`` is always the cap.
+    A window whose opening request found the queue EMPTY at enqueue
+    time collapses straight to ``min_wait_s``: nothing was waiting to
+    coalesce with it, so holding the window open is pure added latency.
     """
 
     max_batch: int = 64         # query rows fused into one engine call
@@ -127,9 +130,14 @@ class ArrivalRateEWMA:
         with self._lock:
             return self._ewma
 
-    def wait_budget_s(self, policy: "BatchPolicy") -> float:
+    def wait_budget_s(self, policy: "BatchPolicy",
+                      queue_empty: bool = False) -> float:
         if not policy.adaptive_wait:
             return policy.max_wait_s
+        if queue_empty:
+            # the opener found nothing queued behind it: holding the
+            # window cannot coalesce what isn't there — dispatch fast
+            return policy.min_wait_s
         with self._lock:
             ewma = self._ewma
         if ewma is None:                      # no signal yet: cap
@@ -177,6 +185,9 @@ class _Request:
     t_submit: float
     tenant: str = "-"
     future: Future = field(default_factory=Future)
+    # whether the queue was empty the instant this request was enqueued
+    # (adaptive_wait collapses the window to min_wait_s on a lone opener)
+    empty_at_enqueue: bool = False
 
 
 class ServeMetrics:
@@ -441,6 +452,7 @@ class MicroBatcher:
         with self._cv:
             if self._stop and self._thread is not None:
                 raise RuntimeError("batcher is stopped")
+            req.empty_at_enqueue = not self._queue
             self._queue.append(req)
             self.metrics.note_enqueued(req.tenant)
             self._cv.notify_all()
@@ -460,7 +472,9 @@ class MicroBatcher:
                 # max_batch rows queued or the oldest exhausting the wait
                 # budget (arrival-rate-adaptive when the policy says so)
                 deadline = (self._queue[0].t_submit
-                            + self.arrivals.wait_budget_s(pol))
+                            + self.arrivals.wait_budget_s(
+                                pol,
+                                queue_empty=self._queue[0].empty_at_enqueue))
                 while (sum(r.vecs.shape[0] for r in self._queue)
                        < pol.max_batch):
                     left = deadline - time.perf_counter()

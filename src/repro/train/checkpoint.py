@@ -10,7 +10,8 @@ Write protocol: stage into ``step_X.tmp``, fsync files, atomic
 a crash at any point leaves either the old or the new checkpoint fully
 intact, never a torn one.  Restore verifies checksums and, given target
 shardings, ``device_put``s leaves straight to a (possibly *different*)
-mesh — that is the whole elastic-rescale path (distributed/elastic.py).
+mesh — that is the whole elastic-rescale path (``reshard_tree`` /
+``rescale_train_state`` below).
 """
 from __future__ import annotations
 
@@ -106,3 +107,26 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree.unflatten(treedef, out), manifest["step"]
+
+
+# ------------------------------------------------------- elastic rescale
+# (folded in from the retired repro.distributed.elastic stub: down-scale
+# and up-scale are the same operation — build the new mesh, resolve the
+# same *logical* specs against it, device_put every leaf)
+
+def reshard_tree(tree: Any, new_shardings: Any) -> Any:
+    """Move every leaf to the new mesh/sharding (cross-mesh device_put)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, new_shardings)
+
+
+def rescale_train_state(params, opt_state, defs, new_mesh):
+    """Re-resolve the params' logical specs on ``new_mesh`` and move."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models.params import param_shardings
+    from repro.train.adamw import AdamWState
+    p_sh = param_shardings(defs, new_mesh)
+    opt_sh = AdamWState(NamedSharding(new_mesh, P()), p_sh, p_sh)
+    return reshard_tree(params, p_sh), reshard_tree(opt_state, opt_sh)

@@ -1,15 +1,20 @@
 """Training driver: data -> step -> metrics -> checkpoint, restartable.
 
 Thin composition of the pieces built elsewhere: step factory
-(train_step.py), AdamW (adamw.py), atomic checkpoints (checkpoint.py),
-and the supervised restart loop (distributed/fault_tolerance.py).  Used
-by examples/train_lm.py and the smoke/integration tests.
+(train_step.py), AdamW (adamw.py), atomic checkpoints (checkpoint.py).
+The supervision layer lives here too (folded in from the retired
+``repro.distributed.fault_tolerance`` stub): ``HeartbeatMonitor`` tracks
+per-worker beat times and flags stragglers by an EWMA z-score on step
+time, and ``run_with_restarts`` is the checkpoint-restart loop — step,
+commit every ``ckpt_every`` steps, restore the last commit on failure.
+Used by examples/train_lm.py and the smoke/integration tests.
 """
 from __future__ import annotations
 
+import math
 import time
-from dataclasses import dataclass
-from typing import Iterable, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,3 +69,102 @@ def fit(cfg: ModelConfig, shape: InputShape, batches: Iterable[dict],
     if ckpt_dir:
         CKPT.save(ckpt_dir, n_steps, (params, opt))
     return TrainReport(losses, times, n_steps)
+
+
+# ------------------------------------------------------------ supervision
+
+@dataclass
+class WorkerStats:
+    """Per-worker heartbeat bookkeeping (EWMA step time + variance)."""
+
+    last_beat: float = 0.0
+    ewma: float = 0.0       # step-time EWMA
+    ewvar: float = 0.0      # EWMA of squared deviation
+    n: int = 0
+
+
+class HeartbeatMonitor:
+    """Detects dead workers (beat timeout) and stragglers (z-score)."""
+
+    def __init__(self, n_workers: int, *, timeout_s: float = 10.0,
+                 alpha: float = 0.2, z_thresh: float = 3.0):
+        self.workers = {i: WorkerStats() for i in range(n_workers)}
+        self.timeout_s = timeout_s
+        self.alpha = alpha
+        self.z_thresh = z_thresh
+
+    def beat(self, worker: int, step_time_s: float,
+             now: Optional[float] = None) -> None:
+        """Record one worker heartbeat carrying its last step time."""
+        w = self.workers[worker]
+        w.last_beat = time.monotonic() if now is None else now
+        if w.n == 0:
+            w.ewma = step_time_s
+        else:
+            d = step_time_s - w.ewma
+            w.ewma += self.alpha * d
+            w.ewvar = (1 - self.alpha) * (w.ewvar + self.alpha * d * d)
+        w.n += 1
+
+    def dead(self, now: Optional[float] = None) -> list:
+        """Workers whose last beat is older than the timeout."""
+        now = time.monotonic() if now is None else now
+        return [i for i, w in self.workers.items()
+                if w.n > 0 and now - w.last_beat > self.timeout_s]
+
+    def stragglers(self) -> list:
+        """Workers whose EWMA step time is a z_thresh outlier vs the fleet."""
+        live = [w.ewma for w in self.workers.values() if w.n >= 3]
+        if len(live) < 3:
+            return []
+        mean = sum(live) / len(live)
+        var = sum((x - mean) ** 2 for x in live) / len(live)
+        sd = math.sqrt(var) + 1e-9
+        return [i for i, w in self.workers.items()
+                if w.n >= 3 and (w.ewma - mean) / sd > self.z_thresh]
+
+
+@dataclass
+class RestartReport:
+    """What a supervised run did: progress, failures, restores."""
+
+    steps_done: int
+    n_failures: int
+    n_restores: int
+    history: list = field(default_factory=list)
+
+
+def run_with_restarts(step_fn: Callable[[Any, int], Any], state: Any,
+                      n_steps: int, *, ckpt_dir: str, ckpt_every: int = 10,
+                      shardings: Any = None,
+                      max_failures: int = 10) -> tuple:
+    """Supervised training loop: step, checkpoint, restore-on-failure.
+
+    ``step_fn(state, step) -> state`` may raise (fault injection or real
+    device loss).  On failure we restore the last committed checkpoint
+    and resume from its step.  This is the single-controller analogue of
+    a multi-controller restart: in a real pod deployment each host runs
+    this loop and the failed host's work is recovered from the shared
+    checkpoint directory.
+    """
+    report = RestartReport(0, 0, 0)
+    step = 0
+    CKPT.save(ckpt_dir, step, state)
+    failures = 0
+    while step < n_steps:
+        try:
+            state = step_fn(state, step)
+            step += 1
+            report.steps_done = step
+            if step % ckpt_every == 0 or step == n_steps:
+                CKPT.save(ckpt_dir, step, state)
+                report.history.append(("ckpt", step))
+        except Exception as e:  # noqa: BLE001 — supervision boundary
+            failures += 1
+            report.n_failures = failures
+            if failures > max_failures:
+                raise
+            state, step = CKPT.restore(ckpt_dir, state, shardings=shardings)
+            report.n_restores += 1
+            report.history.append(("restore", step, repr(e)[:60]))
+    return state, report

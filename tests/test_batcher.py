@@ -222,6 +222,45 @@ def test_adaptive_wait_shrinks_under_load_grows_idle():
     assert ArrivalRateEWMA().wait_budget_s(pol) == pol.max_wait_s
 
 
+def test_adaptive_wait_collapses_on_empty_queue():
+    """A window whose opener found the queue EMPTY at enqueue time
+    collapses straight to the floor — holding it open cannot coalesce
+    what isn't there — while a busy-queue opener keeps the rate-derived
+    budget, and non-adaptive policies ignore the hint entirely."""
+    pol = BatchPolicy(max_batch=64, max_wait_s=5e-3, adaptive_wait=True,
+                      min_wait_s=1e-4)
+    idle = ArrivalRateEWMA(alpha=0.2)
+    for i in range(20):
+        idle.observe(i * 5e-2)           # sparse arrivals: budget at cap
+    assert idle.wait_budget_s(pol) == pol.max_wait_s
+    assert idle.wait_budget_s(pol, queue_empty=True) == pol.min_wait_s
+    assert idle.wait_budget_s(pol, queue_empty=False) == pol.max_wait_s
+    # non-adaptive: the hint must not shrink the fixed window
+    fixed = BatchPolicy(max_batch=64, max_wait_s=5e-3)
+    assert idle.wait_budget_s(fixed, queue_empty=True) == fixed.max_wait_s
+
+
+def test_empty_at_enqueue_flag_set_by_batcher(engine, small_data):
+    """The batcher records the queue state the opener saw: a request
+    submitted into an empty queue is flagged; one submitted behind a
+    backlog is not — and the adaptive loop still answers correctly."""
+    _, queries = small_data
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=64, max_wait_s=0.05,
+                                          adaptive_wait=True,
+                                          min_wait_s=1e-4),
+                      autostart=False)
+    f0 = mb.submit_search(queries[0], k=10)
+    f1 = mb.submit_search(queries[1], k=10)
+    with mb._cv:
+        flags = [r.empty_at_enqueue for r in mb._queue]
+    assert flags == [True, False]
+    mb.start()
+    for f in (f0, f1):
+        r = f.result(timeout=60)
+        assert r[1].shape == (1, 10)
+    mb.stop()
+
+
 def test_adaptive_wait_live_batcher(engine, small_data):
     """End-to-end: an adaptive batcher still coalesces and answers
     correctly, and its observed EWMA reflects the submissions."""

@@ -15,8 +15,7 @@ import pytest
 
 from repro.distributed.compression import (ErrorState, dequantize,
                                            init_error_state, quantize)
-from repro.distributed.elastic import plan_store_migration
-from repro.distributed.fault_tolerance import rebalance_partitions
+from repro.pool.placement import plan_store_migration, rebalance_partitions
 
 
 def _run_sub(code: str):
@@ -60,7 +59,7 @@ def test_elastic_reshard_multidevice():
     out = _run_sub("""
         import numpy as np, jax
         from repro.configs.registry import smoke_config
-        from repro.distributed.elastic import rescale_train_state
+        from repro.train.checkpoint import rescale_train_state
         from repro.models import model as M
         from repro.models.params import init_params, param_shardings
         from repro.train import adamw

@@ -1,0 +1,558 @@
+"""repro.ingest — WAL, checkpoints, crash recovery, bulk load, compaction.
+
+Coverage tiers:
+
+* **WAL framing** — encode/decode round trips, torn-tail semantics
+  (short header, short body, oversized length, CRC breakage all stop
+  replay cleanly), plus a hypothesis property test when available.
+* **checkpoints** — atomic save/load round trip, corruption surfaced as
+  IOError, the ``Durability`` cadence + WAL rotation invariants.
+* **crash recovery** — kill -9 a durable ``PoolServer`` mid-ingest and
+  restart it from its ``--data-dir``: the recovered region must be
+  bit-identical (verified through the ``attach="auto"`` fingerprint
+  handshake and span reads), recovery must come from WAL replay, and at
+  engine scale (replication=2) a recovered shard rejoins with zero lost
+  groups and bit-identical search results.
+* **bulk load** — the out-of-core ``BulkLoader`` reproduces the
+  in-memory build bit for bit with O(chunk) peak builder memory; the
+  parse/validate/retry error queue; group-by-group shipping accounting.
+* **compaction** — the mutation-hook-driven ``Compactor`` repacks dirty
+  over-threshold groups under its rate budget.
+"""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # CI fast tier / bare containers
+    HAVE_HYPOTHESIS = False
+
+from repro.core import DHNSWEngine, EngineConfig, build_meta, build_store
+from repro.core.hnsw import HNSWParams
+from repro.core.layout import MT_OV_A, MT_OV_B
+from repro.ingest import (BulkLoader, CompactionPolicy, Compactor,
+                          Durability, chunked_source, encode_record,
+                          iter_records, load_checkpoint, read_wal,
+                          save_checkpoint)
+from repro.ingest.wal import _HDR, MAX_BODY
+from repro.net import RemotePool, spawn_pool_servers
+from repro.net import wire as W
+from repro.pool import LocalPool
+
+CFG = dict(mode="full", search_mode="scan", n_rep=12, b=3, ef=32,
+           cache_frac=0.25, seed=3)
+
+
+def _tiny_store(data, ov_cap=0):
+    meta = build_meta(data, 8, seed=0, meta_levels=2)
+    return build_store(data, meta, ov_cap=ov_cap,
+                       sub_params=HNSWParams(M=4, M0=8, ef_construction=40))
+
+
+# ------------------------------------------------------------ WAL framing
+
+def test_wal_record_roundtrip_and_validation():
+    rec = encode_record(7, 0x1234, b"payload bytes")
+    [out] = list(iter_records(rec))
+    assert (out.op, out.flags, out.payload) == (7, 0x1234, b"payload bytes")
+    # empty payload is legal (e.g. a zero-arg verb)
+    [out] = list(iter_records(encode_record(1, 0, b"")))
+    assert out.payload == b""
+    with pytest.raises(ValueError):
+        encode_record(256, 0, b"")
+    with pytest.raises(ValueError):
+        encode_record(-1, 0, b"")
+    with pytest.raises(ValueError):
+        encode_record(0, 0x1_0000, b"")
+
+
+def test_wal_torn_tail_variants_stop_cleanly():
+    """Every way a crash can tear the tail reads as a clean end-of-log:
+    the committed prefix replays, nothing raises."""
+    good = encode_record(2, 0, b"aaaa") + encode_record(3, 1, b"bb")
+    torn = [
+        good + b"\x05",                              # short header
+        good + _HDR.pack(100, 0),                    # short body
+        good + _HDR.pack(MAX_BODY + 1, 0) + b"x" * 64,   # absurd length
+        good + encode_record(4, 0, b"cc")[:-1],      # truncated record
+    ]
+    # CRC breakage: flip a byte inside the last record's body
+    bad = bytearray(good + encode_record(4, 0, b"cc"))
+    bad[-1] ^= 0xFF
+    torn.append(bytes(bad))
+    for buf in torn:
+        recs = list(iter_records(buf))
+        assert [(r.op, r.payload) for r in recs] == [(2, b"aaaa"),
+                                                     (3, b"bb")]
+
+
+def test_read_wal_reports_torn_bytes(tmp_path):
+    p = str(tmp_path / "w.log")
+    full = encode_record(9, 0, b"x" * 10)
+    with open(p, "wb") as f:
+        f.write(full + full[: len(full) // 2])
+    recs, torn = read_wal(p)
+    assert len(recs) == 1 and torn == len(full) // 2
+    # a missing file is an empty log, not an error (fresh server)
+    assert read_wal(str(tmp_path / "absent.log")) == ([], 0)
+
+
+if HAVE_HYPOTHESIS:
+    @given(ops=st.lists(st.tuples(st.integers(0, 255),
+                                  st.integers(0, 0xFFFF),
+                                  st.binary(max_size=200)),
+                        max_size=20),
+           cut=st.integers(0, 50))
+    @settings(max_examples=60, deadline=None)
+    def test_wal_roundtrip_property(ops, cut):
+        """Any record sequence round-trips; truncating the serialized
+        log anywhere yields a committed prefix, never garbage."""
+        buf = b"".join(encode_record(o, f, p) for o, f, p in ops)
+        back = [(r.op, r.flags, r.payload) for r in iter_records(buf)]
+        assert back == ops
+        # arbitrary truncation: a (possibly shorter) committed prefix
+        cropped = [(r.op, r.flags, r.payload)
+                   for r in iter_records(buf[:max(0, len(buf) - cut)])]
+        assert cropped == ops[:len(cropped)]
+
+
+# ----------------------------------------------------------- checkpoints
+
+def test_checkpoint_roundtrip_and_corruption(tmp_path, sift_small):
+    data = sift_small.data[:600]
+    store = _tiny_store(data, ov_cap=4)
+    d = str(tmp_path)
+    n = save_checkpoint(d, store, applied=17)
+    assert n > 0 and not os.path.exists(os.path.join(d, "checkpoint.bin.tmp"))
+    back, applied = load_checkpoint(d)
+    assert applied == 17
+    assert np.array_equal(back.graph_buf, store.graph_buf)
+    assert np.array_equal(back.vec_buf, store.vec_buf)
+    assert np.array_equal(back.meta_table, store.meta_table)
+    assert np.array_equal(back.n_base, store.n_base)
+    assert back.spec == store.spec
+    # corruption must surface, not silently serve
+    p = os.path.join(d, "checkpoint.bin")
+    blob = bytearray(open(p, "rb").read())
+    blob[-1] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(IOError):
+        load_checkpoint(d)
+    # absent checkpoint -> None (fresh data dir)
+    assert load_checkpoint(str(tmp_path / "fresh")) is None
+
+
+def test_durability_cadence_rotation_and_recovery(tmp_path, sift_small):
+    """The orchestrator invariants: log -> cadence checkpoint -> WAL
+    rotation (new log named by applied count, old log removed) ->
+    recover replays exactly the un-checkpointed tail once."""
+    data = sift_small.data[:600]
+    store = _tiny_store(data)
+    d = str(tmp_path / "srv")
+    dur = Durability(d, checkpoint_every=4)
+    assert dur.recover() == (None, [])
+
+    for i in range(6):
+        dur.log(W.OP_APPEND, 0, b"m%d" % i)
+        fired = dur.maybe_checkpoint(store)
+        assert fired == (i == 3)      # cadence: exactly at the 4th record
+    st = dur.stats()
+    assert st["applied"] == 6 and st["checkpoints"] == 1
+    assert st["wal_records"] == 2     # rotated: only the post-ckpt tail
+    assert os.path.exists(os.path.join(d, "wal.000000000004.log"))
+    assert not os.path.exists(os.path.join(d, "wal.000000000000.log"))
+    dur.close()
+
+    dur2 = Durability(d, checkpoint_every=4)
+    store2, tail = dur2.recover()
+    assert store2 is not None and np.array_equal(store2.vec_buf,
+                                                 store.vec_buf)
+    assert [(r.op, r.payload) for r in tail] == [(W.OP_APPEND, b"m4"),
+                                                 (W.OP_APPEND, b"m5")]
+    assert dur2.applied == 6 and dur2.stats()["recovered"]
+    # replay must never re-log (that would double records on next crash)
+    with dur2.replay_guard():
+        dur2.log(W.OP_APPEND, 0, b"replayed")
+    assert dur2.stats()["wal_records"] == 0
+    # checkpoints with cadence disabled never fire
+    dur2.checkpoint_every = 0
+    assert not dur2.maybe_checkpoint(store)
+    dur2.close()
+
+
+# -------------------------------------------------------- crash recovery
+
+def test_poolserver_kill9_recovers_from_wal(tmp_path, sift_small):
+    """The acceptance gate at pool scale: kill -9 a durable server
+    mid-ingest, restart from the same data-dir, and the recovered
+    region is bit-identical — proven by the ``attach="auto"``
+    fingerprint handshake (no re-upload), WAL-replay counters, and span
+    reads matching an uninterrupted ``LocalPool`` twin.  A garbage tail
+    appended to the WAL (the torn write) must not poison replay."""
+    data = sift_small.data[:600]
+    ddir = str(tmp_path / "node0")
+    s_ctl = _tiny_store(data, ov_cap=8)
+    ctl = LocalPool(s_ctl)
+    vecs = [data[0] + 0.01 * (i + 1) for i in range(6)]
+
+    with spawn_pool_servers(1, data_dirs=[ddir], with_procs=True) as (
+            eps, procs):
+        rp = RemotePool(_tiny_store(data, ov_cap=8), eps[0])
+        for i, v in enumerate(vecs):
+            assert ctl.append(v, 50_000 + i, 1, ledger=None) \
+                == rp.append(v, 50_000 + i, 1, ledger=None) >= 0
+        os.kill(procs[0].pid, signal.SIGKILL)     # no goodbye
+        procs[0].wait(timeout=10)
+
+    # torn write: a half-record of garbage at the WAL tail
+    [wal] = [f for f in os.listdir(ddir) if f.startswith("wal.")]
+    with open(os.path.join(ddir, wal), "ab") as f:
+        f.write(b"\xde\xad\xbe\xef\x00")
+
+    with spawn_pool_servers(1, data_dirs=[ddir]) as eps2:
+        # the mirror of an uninterrupted run (base region + appends)
+        pool = RemotePool(s_ctl, eps2[0], attach="auto")
+        assert pool.attached_via == "recovered", \
+            "recovery must come from the data-dir, not a re-upload"
+        ing = pool.server_stats()["ingest"]
+        assert ing["recovered"] and ing["replayed_records"] >= 1 + len(vecs)
+        assert ing["torn_bytes"] == 5
+        a = ctl.read_spans(np.arange(4), ledger=None)
+        b = pool.read_spans(np.arange(4), ledger=None)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+        server_meta, n_base = pool.server_meta()
+        assert np.array_equal(server_meta, s_ctl.meta_table)
+        assert np.array_equal(n_base, s_ctl.n_base)
+
+
+def test_poolserver_checkpoint_plus_tail_recovery(tmp_path, sift_small):
+    """With an aggressive checkpoint cadence the restart recovers
+    snapshot + short tail instead of replaying the whole history."""
+    data = sift_small.data[:600]
+    ddir = str(tmp_path / "node0")
+    s_ctl = _tiny_store(data, ov_cap=8)
+    ctl = LocalPool(s_ctl)
+
+    # cadence 4 over 6 mutations (attach + 5 appends): one checkpoint
+    # fires at record 4, leaving a genuine 2-record WAL tail
+    with spawn_pool_servers(1, data_dirs=[ddir], checkpoint_every=4,
+                            with_procs=True) as (eps, procs):
+        rp = RemotePool(_tiny_store(data, ov_cap=8), eps[0])
+        for i in range(5):
+            v = data[1] + 0.01 * (i + 1)
+            assert ctl.append(v, 60_000 + i, 3, ledger=None) \
+                == rp.append(v, 60_000 + i, 3, ledger=None) >= 0
+        os.kill(procs[0].pid, signal.SIGKILL)
+        procs[0].wait(timeout=10)
+
+    assert os.path.exists(os.path.join(ddir, "checkpoint.bin"))
+    with spawn_pool_servers(1, data_dirs=[ddir]) as eps2:
+        pool = RemotePool(s_ctl, eps2[0], attach="auto")
+        assert pool.attached_via == "recovered"
+        ing = pool.server_stats()["ingest"]
+        assert ing["recovered"]
+        # tail replay is SHORT: the checkpoint folded most mutations in
+        assert 0 < ing["replayed_records"] < 1 + 5
+        b = pool.read_spans(np.arange(4), ledger=None)
+        a = ctl.read_spans(np.arange(4), ledger=None)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_engine_kill9_mid_ingest_recovered_shard_rejoins(tmp_path,
+                                                         sift_small):
+    """The ISSUE acceptance test end to end: an engine over two durable
+    replicated servers; kill -9 one mid-ingest; searches stay bit-
+    identical with zero lost groups (replication holds the fort); the
+    restarted server recovers from its WAL and ``recover_shard`` rejoins
+    it through the fingerprint handshake — after which inserts and
+    searches on the healed pool still match the local twin bit for bit."""
+    data = sift_small.data[:1200]
+    queries = sift_small.queries[:16]
+    d0, d1 = str(tmp_path / "n0"), str(tmp_path / "n1")
+    base = DHNSWEngine(EngineConfig(**CFG)).build(data)
+
+    with spawn_pool_servers(2, data_dirs=[d0, d1], with_procs=True) as (
+            eps, procs):
+        eng = DHNSWEngine(EngineConfig(pool="remote", endpoints=tuple(eps),
+                                       replication=2, **CFG)).build(data)
+        new1 = queries[:3] + 0.001
+        assert np.array_equal(base.insert(new1), eng.insert(new1))
+        da, ga, _ = base.search(queries, k=10)
+        db, gb, _ = eng.search(queries, k=10)
+        assert np.array_equal(da, db) and np.array_equal(ga, gb)
+
+        os.kill(procs[0].pid, signal.SIGKILL)   # mid-ingest: WAL has the
+        procs[0].wait(timeout=10)               # appends, nothing else does
+        db, gb, st = eng.search(queries, k=10)
+        assert np.array_equal(da, db) and np.array_equal(ga, gb)
+        fo = st["pool"]["failover"]
+        assert fo["deaths"] == 1 and fo["lost_groups"] == 0
+
+        # restart node 0 from its data dir and rejoin it in place
+        with spawn_pool_servers(1, data_dirs=[d0]) as eps2:
+            eng.pool.recover_shard(
+                0, lambda store: RemotePool(store, eps2[0], attach="auto"))
+            child = eng.pool.children[0]
+            assert child.attached_via == "recovered", \
+                "rejoin must ride the WAL recovery, not a region re-upload"
+            ing = child.server_stats()["ingest"]
+            assert ing["recovered"] and ing["replayed_records"] > 0
+            snap = eng.pool.snapshot()
+            fo = snap["failover"]
+            assert fo["recovered_shards"] == 1
+            assert fo["recovered_groups"] > 0
+            assert fo["lost_groups"] == 0
+            assert snap["alive"] == [True, True]
+
+            new2 = queries[3:6] + 0.002
+            assert np.array_equal(base.insert(new2), eng.insert(new2))
+            da2, ga2, _ = base.search(queries[:8], k=10)
+            db2, gb2, _ = eng.search(queries[:8], k=10)
+            assert np.array_equal(da2, db2) and np.array_equal(ga2, gb2)
+
+
+# --------------------------------------------------------- bulk loading
+
+def test_bulk_loader_bit_identical_bounded_memory(sift_small):
+    """The loader acceptance gate: streaming with a chunk budget of 1/8
+    of the dataset reproduces the in-memory meta + region bit for bit,
+    while peak builder memory stays O(chunk), not O(dataset)."""
+    data = sift_small.data[:1600]
+    n, dim = data.shape
+    chunk_rows = n // 8
+    p = HNSWParams(M=4, M0=8, ef_construction=40)
+
+    meta0 = build_meta(data, 12, seed=3, meta_levels=3)
+    store0 = build_store(data, meta0, sub_params=p)
+
+    ld = BulkLoader(n_rep=12, chunk_rows=chunk_rows, seed=3, meta_levels=3,
+                    sub_params=p)
+    ld.add_chunks(chunked_source(data, chunk_rows))
+    meta, store, rep = ld.finalize()
+    ld.close()
+
+    assert np.array_equal(meta.graph.vectors, meta0.graph.vectors)
+    assert np.array_equal(meta.graph.adjacency, meta0.graph.adjacency)
+    assert meta.graph.entry == meta0.graph.entry
+    assert np.array_equal(meta.assignments, meta0.assignments)
+    assert np.array_equal(store.graph_buf, store0.graph_buf)
+    assert np.array_equal(store.vec_buf, store0.vec_buf)
+    assert np.array_equal(store.meta_table, store0.meta_table)
+    assert np.array_equal(store.n_base, store0.n_base)
+    assert store.spec == store0.spec
+
+    assert rep.rows == n and rep.chunks_ok == 8 and rep.chunks_failed == 0
+    assert rep.dataset_bytes == n * dim * 4
+    # bounded memory: the builder never held anything near the dataset
+    assert rep.peak_builder_bytes < rep.dataset_bytes / 2
+    assert rep.peak_builder_bytes <= 4 * rep.chunk_bytes + 12 * dim * 4
+
+
+def test_bulk_loader_error_queue_and_retry():
+    """Bad chunks land in the retryable error queue instead of aborting;
+    ``retry_failed`` with a fix recovers them and the final region covers
+    every row."""
+    rng = np.random.default_rng(0)
+    good = rng.standard_normal((300, 16)).astype(np.float32)
+    nan_chunk = good[:50].copy()
+    nan_chunk[3, 2] = np.nan
+    ld = BulkLoader(n_rep=6, chunk_rows=100, seed=0, meta_levels=2,
+                    sub_params=HNSWParams(M=4, M0=8, ef_construction=40))
+    ld.add_chunks([good[:100], nan_chunk, "not an array", good[100:200],
+                   good[:10, None, :]])          # 3-D: wrong rank
+    assert ld.report.chunks_total == 5
+    assert ld.report.chunks_ok == 2 and ld.report.chunks_failed == 3
+    assert len(ld.error_queue) == 3
+    assert all(r in {fc.index for fc in ld.error_queue} for r in (1, 2, 4))
+
+    def fix(chunk):
+        arr = np.asarray(chunk, np.float32) if not isinstance(chunk, str) \
+            else good[200:250]
+        arr = arr.reshape(-1, 16) if arr.ndim == 3 else arr
+        return np.nan_to_num(arr)
+
+    assert ld.retry_failed(fix=fix) == 3
+    assert not ld.error_queue and ld.report.chunks_retried == 3
+    meta, store, rep = ld.finalize()
+    ld.close()
+    assert rep.rows == 100 + 50 + 50 + 100 + 10
+    assert store.n_base.sum() == rep.rows
+    # unfixable chunks stay queued with their latest reason
+    ld2 = BulkLoader(n_rep=4, chunk_rows=50, seed=0, meta_levels=2)
+    ld2.add_chunks([good[:50], "junk"])
+    assert ld2.retry_failed() == 0
+    assert ld2.error_queue[0].retries == 1 and ld2.error_queue[0].reason
+    ld2.close()
+
+
+def test_bulk_loader_ships_groups_through_pool_verb():
+    """``finalize(into_pool=...)``: every finished group goes out
+    immediately through ``refresh_blocks`` — one verb per group, ids
+    covering exactly that group's block span."""
+    rng = np.random.default_rng(1)
+    data = rng.standard_normal((500, 16)).astype(np.float32)
+
+    class _ShipLog:
+        def __init__(self):
+            self.calls = []
+
+        def refresh_blocks(self, ids):
+            self.calls.append(np.asarray(ids))
+
+    ship = _ShipLog()
+    ld = BulkLoader(n_rep=8, chunk_rows=100, seed=0, meta_levels=2,
+                    sub_params=HNSWParams(M=4, M0=8, ef_construction=40))
+    ld.add_chunks(chunked_source(data, 100))
+    meta, store, rep = ld.finalize(into_pool=ship)
+    ld.close()
+    n_groups = store.spec.n_groups
+    assert rep.verbs_issued == rep.groups_shipped == n_groups
+    assert len(ship.calls) == n_groups
+    gb = store.spec.group_blocks
+    shipped = np.concatenate(ship.calls)
+    assert np.array_equal(np.sort(shipped), np.arange(n_groups * gb))
+
+
+def test_chunked_source_covers_everything():
+    data = np.arange(23 * 3, dtype=np.float32).reshape(23, 3)
+    chunks = list(chunked_source(data, 10))
+    assert [len(c) for c in chunks] == [10, 10, 3]
+    assert np.array_equal(np.concatenate(chunks), data)
+
+
+def test_engine_build_streaming_bit_identical(sift_small):
+    """`DHNSWEngine.build_streaming` — the wired-up loader — searches
+    bit-identically to `build`, reports bounded builder memory, and
+    (satellite: kernel routing) both engines pick the jnp ref stage-1
+    on the CPU backend under ``quant_kernel="auto"``."""
+    data = sift_small.data[:1500]
+    queries = sift_small.queries[:16]
+    common = dict(mode="full", search_mode="scan", n_rep=16, b=3, ef=32,
+                  cache_frac=4.0, seed=3, quant="int8",
+                  quant_kernel="auto")
+    mem = DHNSWEngine(EngineConfig(**common)).build(data)
+    stream = DHNSWEngine(EngineConfig(**common)).build_streaming(
+        chunked_source(data, 200), chunk_rows=200)
+    d0, g0, st0 = mem.search(queries, k=10)
+    d1, g1, st1 = stream.search(queries, k=10)
+    assert np.array_equal(d0, d1) and np.array_equal(g0, g1)
+    rep = stream.last_load_report
+    assert rep.peak_builder_bytes < rep.dataset_bytes / 2
+    import jax
+    if jax.default_backend() == "cpu":
+        assert st0["stage1_impl"] == st1["stage1_impl"] == "ref"
+    # inserts read vectors back through the disk-backed view
+    new = queries[:2] + 0.001
+    assert np.array_equal(mem.insert(new), stream.insert(new))
+    da, ga, _ = mem.search(queries[:8], k=10)
+    db, gb, _ = stream.search(queries[:8], k=10)
+    assert np.array_equal(da, db) and np.array_equal(ga, gb)
+
+
+# ----------------------------------------------------------- compaction
+
+def _overflow_pool(data, ov_cap=8):
+    store = _tiny_store(data, ov_cap=ov_cap)
+    return LocalPool(store), store
+
+
+def test_mutation_hooks_fire_on_append_and_repack(sift_small):
+    data = sift_small.data[:600]
+    pool, store = _overflow_pool(data)
+    events = []
+    pool.register_mutation_hook(lambda verb, **kw: events.append((verb, kw)))
+    assert pool.append(data[0] + 0.5, 90_000, 1, ledger=None) >= 0
+    assert events and events[-1][0] == "append"
+    assert events[-1][1]["group"] == 0 and events[-1][1]["pid"] == 1
+    pool.repack(0, lambda gids: np.stack(
+        [data[g] if g < len(data) else data[0] + 0.5 for g in gids]))
+    assert events[-1][0] == "repack" and events[-1][1]["group"] == 0
+
+
+def test_compactor_repacks_dirty_groups_under_budget(sift_small):
+    """Appends past the threshold mark groups dirty via the mutation
+    hook; a tick repacks worst-first under the rate budget and the
+    overflow ratio drops back to zero."""
+    data = sift_small.data[:600]
+    pool, store = _overflow_pool(data, ov_cap=8)
+    extra = {}
+
+    def lookup(gids):
+        return np.stack([data[g] if g < len(data) else extra[g]
+                         for g in (int(x) for x in gids)])
+
+    comp = Compactor(pool, lookup,
+                     CompactionPolicy(threshold=0.25,
+                                      max_repacks_per_tick=1))
+    assert comp.tick() == 0          # clean region: nothing to do
+
+    # dirty two groups past the threshold (pids 1 and 3 -> groups 0, 1)
+    gid = 90_000
+    for pid in (1, 1, 1, 3, 3, 3):
+        vec = data[pid] + 0.01 * (gid - 90_000 + 1)
+        extra[gid] = vec
+        assert pool.append(vec, gid, pid, ledger=None) >= 0
+        gid += 1
+    ratios = comp.overflow_ratios()
+    assert ratios[0] > 0.25 and ratios[1] > 0.25
+    assert comp.dirty == {0, 1}
+
+    done = comp.tick()               # budget 1: one repack, one deferred
+    assert done == 1 and comp.skipped_budget >= 1
+    done2 = comp.tick()
+    assert done2 == 1
+    after = comp.overflow_ratios()
+    assert after[0] == 0.0 and after[1] == 0.0
+    assert comp.dirty == set()
+    assert pool.verbs["repack"] >= 2
+    st = comp.stats()
+    assert st["groups_compacted"] == 2 and st["ticks"] == 3
+    # repacked region still holds every appended vector in its base rows
+    mt = np.asarray(pool.read_meta())
+    assert mt[1][MT_OV_A] == 0 and mt[1][MT_OV_B] == 0
+    assert int(store.n_base[1]) > 0
+
+
+def test_compactor_thread_start_stop(sift_small):
+    data = sift_small.data[:600]
+    pool, _ = _overflow_pool(data)
+    comp = Compactor(pool, lambda gids: data[np.asarray(gids, np.int64)],
+                     CompactionPolicy(interval_s=0.01))
+    comp.start()
+    assert comp.start() is comp      # idempotent
+    import time
+    time.sleep(0.05)
+    comp.stop()
+    comp.stop()                      # idempotent
+    assert comp.ticks >= 1
+
+
+# -------------------------------------------------------- observability
+
+def test_ingest_metrics_render(sift_small):
+    """The Prometheus exporters cover the new counters: the pool-server
+    ingest block and the bulk-load/compactor render."""
+    import dataclasses
+
+    from repro.obs.metrics import render_ingest, render_pool_server
+    ld = BulkLoader(n_rep=6, chunk_rows=100, seed=0, meta_levels=2)
+    ld.add_chunks(chunked_source(sift_small.data[:300], 100))
+    _, _, rep = ld.finalize()
+    ld.close()
+    txt = render_ingest(dataclasses.asdict(rep),
+                        compactor={"ticks": 3, "groups_compacted": 1})
+    assert 'repro_ingest_load{what="rows"} 300' in txt
+    assert 'repro_ingest_load{what="peak_builder_bytes"}' in txt
+    assert 'repro_ingest_compactor_total{what="ticks"} 3' in txt
+
+    txt = render_pool_server({"verbs": {"append": 2}, "service_s": {},
+                              "ingest": {"applied": 5, "wal_records": 5}})
+    assert 'repro_poolserver_ingest_total{what="applied"} 5' in txt
+    assert 'repro_poolserver_ingest_total{what="wal_records"} 5' in txt

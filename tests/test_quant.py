@@ -229,6 +229,30 @@ def test_flat_kernel_route_dense_resident(qds):
     assert "quant_kernel" not in sts
 
 
+def test_auto_kernel_picks_ref_impl_on_cpu(qds):
+    """quant_kernel="auto" must select the jnp reference stage-1 on the
+    CPU backend (where Pallas would run interpreted, ~8x slower) and the
+    Pallas kernel on real accelerators; the choice is reported in
+    ``stats["stage1_impl"]``, and an explicit "ref" request always gets
+    the ref path."""
+    import jax
+
+    from repro.kernels.quant_topk.ops import auto_use_ref
+    on_cpu = jax.default_backend() == "cpu"
+    assert auto_use_ref() == on_cpu
+    common = dict(mode="full", search_mode="scan", n_rep=16, b=3, ef=32,
+                  cache_frac=0.6, seed=3, quant="int8")
+    auto = DHNSWEngine(EngineConfig(quant_kernel="auto", **common)).build(
+        qds.data)
+    assert auto.client._flat_kernel_active()
+    _, _, st = auto.search(qds.queries[:8], k=10)
+    assert st["stage1_impl"] == ("ref" if on_cpu else "pallas")
+    ref = DHNSWEngine(EngineConfig(quant_kernel="ref", **common)).build(
+        qds.data)
+    _, _, st_ref = ref.search(qds.queries[:8], k=10)
+    assert st_ref["stage1_impl"] == "ref"
+
+
 def test_flat_kernel_insert_stays_coherent(qds):
     """Appends keep the dense-resident flat view coherent without a
     resync: the inserted vector is immediately a stage-1 candidate."""

@@ -9,13 +9,11 @@ import pytest
 from repro.configs.base import InputShape
 from repro.configs.registry import smoke_config
 from repro.data.synthetic import token_stream
-from repro.distributed.fault_tolerance import (HeartbeatMonitor,
-                                               run_with_restarts)
 from repro.models import model as M
 from repro.models.params import init_params
 from repro.train import adamw
 from repro.train import checkpoint as CKPT
-from repro.train.trainer import fit
+from repro.train.trainer import HeartbeatMonitor, fit, run_with_restarts
 
 # long-running tier: excluded from CI fast job (-m 'not slow')
 pytestmark = pytest.mark.slow

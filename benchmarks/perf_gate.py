@@ -55,6 +55,10 @@ GATED = {
     "peak_builder_mb": "up", "verbs_issued": "up", "chunks_failed": "up",
     "wal_records": "up", "wal_kb": "up", "checkpoint_kb": "up",
     "replayed_records": "down",
+    # 1/N block-compacted staging (pool shard rows): the largest
+    # per-shard staged device footprint is a deterministic function of
+    # placement — growing means compaction stopped holding ~1/N
+    "staged_mb_max": "up",
 }
 # measured on the runner's clock, or incidental detail — never gated
 IGNORED = frozenset({
@@ -63,6 +67,7 @@ IGNORED = frozenset({
     "migrations", "fused_batch_obs", "speedup_vs_serial", "endpoint",
     "pallas_us", "ref_us", "deaths", "read_retries",
     "rereplicated_groups", "lost_groups", "recover_wall_s",
+    "inflight_peak", "restaged_blocks",
 })
 
 

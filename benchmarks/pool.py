@@ -102,13 +102,17 @@ def run_cell(data, queries, *, mode: str, quant: str, fabric: Fabric,
 
 
 def run_transport_cell(data, queries, *, transport: str, n_rep: int,
-                       n_batches: int, endpoint=None) -> dict:
+                       n_batches: int, endpoint=None,
+                       bearer: str = "tcp") -> dict:
     """One workload through one transport; modeled ledger numbers next
-    to (for remote) the measured wire traffic."""
+    to (for remote) the measured wire traffic.  ``bearer`` picks the
+    remote QP bearer: ``tcp`` frames WRs to a forked ``PoolServer``,
+    ``loopback`` runs the identical verbs path against an in-process
+    ``HostRegion`` — same frames, no sockets."""
     cfg = EngineConfig(mode="full", search_mode="scan", b=4, ef=48,
                        n_rep=n_rep, cache_frac=0.25, doorbell=16,
                        fabric=RDMA_100G, seed=0, quant="none",
-                       pool=transport,
+                       pool=transport, bearer=bearer,
                        endpoints=(endpoint,) if endpoint else None)
     eng = DHNSWEngine(cfg).build(data)
     per = max(len(queries) // n_batches, 1)
@@ -130,16 +134,19 @@ def run_transport_cell(data, queries, *, transport: str, n_rep: int,
         wire = snap["wire"]
         wvm = snap["wire_vs_model"]["read_spans"]
         # the whole point of the row: the ledger's modeled span bytes
-        # must equal what actually crossed the loopback socket
+        # must equal what actually crossed the bearer (socket payload
+        # for tcp, HostRegion frames for loopback)
         assert wvm["measured"] == wvm["modeled"], wvm
         row.update({
-            "endpoint": snap["endpoint"],
+            "bearer": snap["bearer"],
+            "endpoint": snap.get("endpoint"),
             "wire_kb_per_q": round(
                 wire["payload_by_verb"]["read_spans"] / nq / 1e3, 2),
             "wire_frames": wire["frames_tx"],
             "wire_frame_overhead_kb": round(
                 (wire["bytes_rx"] + wire["bytes_tx"]
                  - sum(wire["payload_by_verb"].values())) / 1e3, 2),
+            "inflight_peak": wire["inflight_peak"],
             "span_wire_vs_model": wvm["ratio"]})
     elif transport == "sim_rdma":
         row["sim_us_per_q"] = round(snap["sim_total_s"] / nq * 1e6, 3)
@@ -148,22 +155,28 @@ def run_transport_cell(data, queries, *, transport: str, n_rep: int,
 
 
 def run_transports(*, smoke: bool = False) -> list[dict]:
-    """LocalPool vs SimulatedRDMAPool vs a real loopback RemotePool on
-    the same workload (one forked server process)."""
+    """LocalPool vs SimulatedRDMAPool vs a RemotePool over each QP
+    bearer — loopback (in-process HostRegion) and tcp (one forked
+    server process) — on the same workload."""
     from repro.net import spawn_pool_servers
     n, n_rep, n_batches = (1500, 12, 2) if smoke else (20_000, 64, 4)
     ds = sift_like(n=n, n_queries=128 if smoke else 256, seed=0)
+    cells = (("local", "tcp"), ("sim_rdma", "tcp"),
+             ("remote", "loopback"), ("remote", "tcp"))
     rows = []
-    print(f"{'transport':>10s} {'rt/q':>7s} {'model KB/q':>11s} "
+    print(f"{'transport':>15s} {'rt/q':>7s} {'model KB/q':>11s} "
           f"{'wire KB/q':>10s} {'wall s':>7s}")
     with spawn_pool_servers(1) as endpoints:
-        for transport in ("local", "sim_rdma", "remote"):
+        for transport, bearer in cells:
+            remote_tcp = transport == "remote" and bearer == "tcp"
             row = run_transport_cell(
                 ds.data, ds.queries, transport=transport, n_rep=n_rep,
-                n_batches=n_batches,
-                endpoint=endpoints[0] if transport == "remote" else None)
+                n_batches=n_batches, bearer=bearer,
+                endpoint=endpoints[0] if remote_tcp else None)
             rows.append(row)
-            print(f"{transport:>10s} {row['round_trips_per_q']:7.3f} "
+            label = (f"{transport}/{bearer}" if transport == "remote"
+                     else transport)
+            print(f"{label:>15s} {row['round_trips_per_q']:7.3f} "
                   f"{row['model_kb_per_q']:11.2f} "
                   f"{row.get('wire_kb_per_q', float('nan')):10.2f} "
                   f"{row['wall_s']:7.2f}", flush=True)
@@ -271,7 +284,16 @@ def run_shard_cell(data, queries, *, n_shards: int, placement: str,
     snap = eng.pool.snapshot()
     by_shard = [s["totals"]["bytes"] for s in snap["shards"]]
     mean_b = max(sum(by_shard) / len(by_shard), 1.0)
+    # 1/N block-compacted staging: each child's device region holds
+    # only its owned groups, so the per-shard staged footprint (and its
+    # max) is a deterministic function of placement — gate-able
+    stg = snap.get("staging", {})
+    staged_mb = [round(b / 1e6, 3)
+                 for b in stg.get("device_bytes_by_shard", [])]
     return {"n_shards": n_shards, "placement": placement,
+            "staged_mb_by_shard": staged_mb,
+            "staged_mb_max": max(staged_mb) if staged_mb else 0.0,
+            "restaged_blocks": stg.get("restaged_blocks", 0),
             "sim_us_per_q": round(snap["sim_total_s"] / nq * 1e6, 3),
             "round_trips_per_q": round(
                 snap["totals"]["round_trips"] / nq, 3),
@@ -297,7 +319,7 @@ def run_shards(*, smoke: bool = False) -> list[dict]:
     ds = sift_like(n=n, n_queries=64, seed=0)
     rows = []
     print(f"{'shards':>6s} {'placement':>13s} {'sim us/q':>9s} "
-          f"{'imb':>6s} {'moves':>5s}")
+          f"{'imb':>6s} {'moves':>5s} {'staged MB':>18s}")
     for n_shards in counts:
         for placement in placements:
             row = run_shard_cell(ds.data, ds.queries, n_shards=n_shards,
@@ -305,10 +327,11 @@ def run_shards(*, smoke: bool = False) -> list[dict]:
                                  n_batches=n_batches, per_batch=per_batch,
                                  migrate_every=migrate_every)
             rows.append(row)
+            staged = "/".join(f"{x:.1f}" for x in row["staged_mb_by_shard"])
             print(f"{n_shards:6d} {placement:>13s} "
                   f"{row['sim_us_per_q']:9.3f} "
                   f"{row['byte_imbalance']:6.3f} "
-                  f"{row['migrations']:5d}", flush=True)
+                  f"{row['migrations']:5d} {staged:>18s}", flush=True)
     return rows
 
 

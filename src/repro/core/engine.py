@@ -94,6 +94,11 @@ class EngineConfig:
     # process (placement/shard_parallel apply).  Also used by
     # pool="sharded" + shard_transport="remote" (len == n_shards).
     endpoints: Optional[tuple] = None
+    # pool="remote" bearer (repro/rdma): "tcp" frames WR lists over the
+    # socket wire to PoolServer processes at `endpoints`; "loopback"
+    # runs the same verbs/QP path against an in-process HostRegion (no
+    # endpoints, no sockets) — the conformance bearer
+    bearer: str = "tcp"             # tcp | loopback
     # placement: policy name ("round_robin" | "size_balanced" | "freq")
     # or a ready PlacementPolicy instance (one engine per instance —
     # policies are stateful)
@@ -152,11 +157,13 @@ class DHNSWEngine:
             assert self.cfg.shard_transport in ("local", "sim_rdma",
                                                 "remote"), \
                 self.cfg.shard_transport
-            if self.cfg.shard_transport == "remote":
+            if (self.cfg.shard_transport == "remote"
+                    and self.cfg.bearer == "tcp"):
                 assert (self.cfg.endpoints
                         and len(self.cfg.endpoints) == self.cfg.n_shards), \
                     "shard_transport='remote' needs one endpoint per shard"
-        if self.cfg.pool == "remote":
+        assert self.cfg.bearer in ("tcp", "loopback"), self.cfg.bearer
+        if self.cfg.pool == "remote" and self.cfg.bearer == "tcp":
             assert self.cfg.endpoints, "pool='remote' needs endpoints"
         assert self.cfg.replication >= 1, self.cfg.replication
         if self.cfg.replication > 1:
@@ -185,7 +192,8 @@ class DHNSWEngine:
             meta_levels=cfg.meta_levels,
             sub_params=HNSWParams(M=max(cfg.sub_M0 // 2, 2), M0=cfg.sub_M0,
                                   ef_construction=cfg.ef_construction),
-            spill_dir=spill_dir or cfg.data_dir)
+            spill_dir=spill_dir or cfg.data_dir,
+            quant_group=cfg.quant_group if cfg.quant == "int8" else 0)
         loader.add_chunks(source)
         meta, store, report = loader.finalize()
         # the disk-backed spill view backs repack/rebuild lookups, so

@@ -271,6 +271,35 @@ def build_store(data: np.ndarray, meta: MetaIndex, *,
     return store
 
 
+# --------------------------------------------------- 1/N device staging
+
+def owned_block_ids(spec: LayoutSpec, groups) -> np.ndarray:
+    """Region block ids covered by the given partition groups, ascending.
+
+    This is the staging set of a shard that serves only ``groups``: the
+    concatenation of each owned group's contiguous block range.  Out-of-
+    range group ids are dropped (a placement can mention groups a smaller
+    re-adopted region no longer has)."""
+    gs = sorted({int(g) for g in groups if 0 <= int(g) < spec.n_groups})
+    if not gs:
+        return np.zeros((0,), np.int64)
+    return np.concatenate([np.arange(g * spec.group_blocks,
+                                     (g + 1) * spec.group_blocks,
+                                     dtype=np.int64) for g in gs])
+
+
+def block_slot_map(spec: LayoutSpec, staged_ids) -> np.ndarray:
+    """Region-block -> staged-slot indirection for a compacted staging.
+
+    Returns an ``(n_blocks,)`` int32 map where staged blocks name their
+    row in the compacted device region and every other block is ``-1``
+    (a read hitting one is a placement bug — the pool asserts)."""
+    ids = np.asarray(staged_ids, np.int64)
+    m = np.full((spec.n_blocks,), -1, np.int32)
+    m[ids] = np.arange(len(ids), dtype=np.int32)
+    return m
+
+
 # ----------------------------------------------------------------- insert
 
 def insert_vector(store: Store, vec: np.ndarray, gid: int, pid: int):

@@ -88,9 +88,11 @@ class BulkLoader:
                  sub_params: Optional[HNSWParams] = None,
                  ov_cap: int = 0, slot_vecs: int = 64,
                  np_max: Optional[int] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 quant_group: int = 0):
         assert chunk_rows > 0, chunk_rows
         self.n_rep = n_rep
+        self.quant_group = int(quant_group)
         self.chunk_rows = chunk_rows
         self.seed = seed
         self.meta_levels = meta_levels
@@ -266,7 +268,39 @@ class BulkLoader:
                 self.report.verbs_issued += 1
                 self.report.groups_shipped += 1
         self._drop("reps")
+        if self.quant_group:
+            self._quantize_region(store)
         return meta, store, self.report
+
+    def _quantize_region(self, store) -> None:
+        """Second finalize sweep: build the int8 mirror chunk-by-chunk.
+
+        The codec is per-row independent (``quant.codec``), so
+        quantizing ``~chunk_rows`` worth of blocks at a time is
+        bit-identical to ``layout.attach_quant_mirror``'s whole-buffer
+        shot while the builder holds only O(chunk) working set (the
+        mirror itself is region state, like the buffers it mirrors)."""
+        import dataclasses as DC
+        spec = store.spec
+        if spec.dim % self.quant_group:
+            raise ValueError(f"quant group {self.quant_group} must divide "
+                             f"dim {spec.dim}")
+        if spec.quant_group != self.quant_group:
+            store.spec = spec = DC.replace(spec,
+                                           quant_group=self.quant_group)
+        store.qvec_buf = np.zeros((spec.n_blocks, spec.vblk), np.int8)
+        store.qscale_buf = np.zeros((spec.n_blocks, spec.n_qgroups),
+                                    np.float32)
+        blk_chunk = max(1, self.chunk_rows // spec.slot_vecs)
+        with TRACER.span("ingest.quant_stream", tier="ingest",
+                         blocks=int(spec.n_blocks)):
+            for s in range(0, spec.n_blocks, blk_chunk):
+                ids = np.arange(s, min(s + blk_chunk, spec.n_blocks))
+                # f32 source slice + codes + scales, live at once
+                self._hold("quant_chunk",
+                           len(ids) * (spec.vblk * 5 + spec.n_qgroups * 4))
+                LA.refresh_quant_blocks(store, ids)
+                self._drop("quant_chunk")
 
     def close(self) -> None:
         """Close the spill file handle (the memmap view stays valid)."""

@@ -1,11 +1,26 @@
-"""RemotePool — the MemoryPool verbs marshaled over a real wire.
+"""RemotePool — the MemoryPool verbs issued as RDMA-style work requests.
 
-A full ``MemoryPool`` implementation whose region lives in a
-``PoolServer`` process: span/row reads are request/response frames
-(doorbell batches pipelined — k request frames on the socket before the
-first response is read), appends are one-sided WRITE frames, and repack/
-migration land as block-granular region writes.  Unlike every earlier
-transport the bytes here actually cross a socket, so the pool keeps a
+A full ``MemoryPool`` implementation whose region lives behind a
+:class:`repro.rdma.verbs.QueuePair`: span/row reads are WR-list READs
+against the remote's registered memory regions (one ``post_send`` ==
+one doorbell batch == one frame), appends are a ``WRITE_WITH_IMM`` into
+the shared overflow MR, and repack/migration land as block-granular
+WRITE batches closed by an IMM control message.  Two bearers carry the
+frames:
+
+* ``bearer="tcp"`` (default) — the TCP-emulated bearer
+  (``repro.rdma.tcp``) to a standalone ``PoolServer`` process; bytes
+  really cross a socket.
+* ``bearer="loopback"`` — an in-process ``HostRegion`` behind the
+  loopback bearer (``repro.rdma.loopback``): same frames, same MR
+  delegation, synchronous completions, no sockets — the pool still
+  uploads its region via ATTACH, so the loopback region is an
+  independent deep copy and the bit-identity gate is as real as over
+  TCP.
+
+Completions are polled one at a time while later batches are still in
+flight, so round r's payload is decoded while round r+1's response is
+on the wire (double-buffered doorbell submission).  The pool keeps a
 ``wire`` tally of *measured* frames and payload bytes per verb next to
 the modeled charge, and ``snapshot()["wire_vs_model"]`` cross-checks the
 two — the protocol is constructed so that data-verb payloads equal the
@@ -51,6 +66,9 @@ from repro.net import wire as W
 from repro.obs.trace import TRACER
 from repro.pool.protocol import (MemoryPool, PoolUnavailableError,
                                  _fresh_totals, span_wire_bytes)
+from repro.rdma import verbs as V
+from repro.rdma.loopback import LoopbackBearer
+from repro.rdma.tcp import TcpBearer
 
 __all__ = ["RemotePool", "PoolUnavailableError", "parse_endpoint"]
 
@@ -82,28 +100,53 @@ class RemotePool(MemoryPool):
 
     kind = "remote"
 
-    def __init__(self, store: Store, endpoint: Endpoint, *,
+    def __init__(self, store: Store, endpoint: Optional[Endpoint] = None, *,
                  fabric: Optional[Fabric] = None, timeout_s: float = 60.0,
-                 connect_timeout_s: float = 10.0, attach: str = "always"):
+                 connect_timeout_s: float = 10.0, attach: str = "always",
+                 bearer: str = "tcp"):
         assert attach in ("always", "auto"), attach
+        assert bearer in ("tcp", "loopback"), bearer
+        if bearer == "tcp" and endpoint is None:
+            raise ValueError("bearer='tcp' requires an endpoint")
         self.store = store
-        self.endpoint = parse_endpoint(endpoint)
+        self.bearer_kind = bearer
+        self.endpoint = (parse_endpoint(endpoint) if endpoint is not None
+                         else ("loopback", 0))
         self.fabric = fabric or RDMA_100G
         self.timeout_s = timeout_s
         self.verbs: Counter = Counter()
         self.totals = _fresh_totals()
         # measured wire traffic (frame headers counted separately from
-        # payloads so the model cross-check sees pure data bytes)
+        # payloads so the model cross-check sees pure data bytes); the
+        # dict is shared by reference with the bearer, which owns the
+        # frame/byte counters
         self.wire = {"frames_tx": 0, "frames_rx": 0,
                      "bytes_tx": 0, "bytes_rx": 0,
                      "payload_by_verb": {}, "model_by_verb": {},
-                     "frames_by_verb": {}, "wire_s": {}}
-        self._sock: Optional[socket.socket] = None
-        self._seq = 0
+                     "frames_by_verb": {}, "wire_s": {},
+                     "inflight_peak": 0}
         self._lock = threading.Lock()
         self._server_trace = False
         self.attached_via = "upload"
-        self._connect(connect_timeout_s)
+        if bearer == "tcp":
+            try:
+                self._bearer = TcpBearer(
+                    self.endpoint, timeout_s=timeout_s,
+                    connect_timeout_s=connect_timeout_s, counters=self.wire)
+            except OSError as e:
+                raise PoolUnavailableError(
+                    f"pool server {self.endpoint} unreachable: {e}") from e
+        else:
+            # in-process MR host: the region is still populated through
+            # the same ATTACH path (a deep copy of the mirror), so the
+            # loopback pool exercises the full wire codec + MR
+            # delegation stack the TCP bearer does
+            from repro.net.server import HostRegion
+            self._region = HostRegion()
+            self._bearer = LoopbackBearer(self._region, counters=self.wire)
+        self._qp = V.QueuePair(self._bearer)
+        self.mrs = V.region_mrs(store.spec,
+                                quant=store.qvec_buf is not None)
         self._probe_caps()
         # recovery handshake: a durable server that already holds a
         # region matching our mirror (it recovered from its data-dir)
@@ -117,16 +160,6 @@ class RemotePool(MemoryPool):
 
     # ------------------------------------------------------------ transport
 
-    def _connect(self, connect_timeout_s: float) -> None:
-        try:
-            self._sock = socket.create_connection(
-                self.endpoint, timeout=connect_timeout_s)
-        except OSError as e:
-            raise PoolUnavailableError(
-                f"pool server {self.endpoint} unreachable: {e}") from e
-        self._sock.settimeout(self.timeout_s)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-
     def _fail(self, e: Exception):
         self.close()
         raise PoolUnavailableError(
@@ -134,11 +167,9 @@ class RemotePool(MemoryPool):
 
     def close(self) -> None:
         """Drop the connection (idempotent); the server keeps running."""
-        if self._sock is not None:
-            try:
-                self._sock.close()
-            finally:
-                self._sock = None
+        b = getattr(self, "_bearer", None)
+        if b is not None and not b.closed:
+            b.close()
 
     def __del__(self):  # pragma: no cover - GC cleanup only
         try:
@@ -151,82 +182,70 @@ class RemotePool(MemoryPool):
         trace-context prefix acks with FLAG_TRACE on the response; the
         prefix is only ever sent to servers that acked (old servers are
         never shown bytes they would mis-decode)."""
-        if self._sock is None:
+        if self._bearer.closed:
             return
         with self._lock:
             try:
-                self._seq += 1
-                self.wire["frames_tx"] += 1
-                self.wire["bytes_tx"] += W.HEADER_BYTES
-                W.send_frame(self._sock, W.OP_PING, b"", seq=self._seq)
-                rop, rflags, rseq, payload = W.recv_frame(self._sock)
-                self.wire["frames_rx"] += 1
-                self.wire["bytes_rx"] += W.HEADER_BYTES + len(payload)
-                if rop != W.OP_PING or rseq != self._seq:
+                self._bearer.submit(W.OP_PING, b"")
+                rop, rflags, _ = self._bearer.complete()
+                if rop != W.OP_PING:
                     raise ConnectionError("bad ping response")
             except (ConnectionError, socket.timeout, OSError) as e:
                 self._fail(e)
         self._server_trace = bool(rflags & W.FLAG_TRACE)
 
-    def _rpc_many(self, reqs, *, verb: str):
-        """Pipelined round trip: send every (op, payload, flags) frame,
-        then read the responses in order.  One request frame == one
-        doorbell batch == one counted trip.
+    def _exchange(self, wr_lists, *, verb: str, decode=None):
+        """Pipelined doorbell rounds through the queue pair.
+
+        Every WR list is posted up front (one ``post_send`` == one
+        doorbell batch == one frame == one counted trip), then
+        completions are polled one at a time — so ``decode(i, payload)``
+        for round ``i`` runs while round ``i+1``'s response is still in
+        flight (double-buffered submission; ``wire["inflight_peak"]``
+        records the deepest pipeline seen).
 
         With tracing enabled the whole exchange is one ``net.<verb>``
         span, and (when the server acked FLAG_TRACE at connect) each
-        request payload is prefixed with that span's trace context so
-        the server's service-time span lands under it on harvest.  The
-        prefix rides OUTSIDE the verb payload: ledger charges use
-        response payloads and the modeled write bytes, so accounting is
-        bit-identical with tracing on or off."""
-        if self._sock is None:
+        frame carries that span's trace context OUTSIDE the verb
+        payload: ledger charges use response payloads and the modeled
+        write bytes, so accounting is bit-identical with tracing on or
+        off.
+
+        A remote verb error surfaces as an error completion; the
+        remaining completions are still drained (leaving them queued
+        would desynchronize every later verb) and the first error is
+        raised as ``RuntimeError`` after the drain.  Transport errors
+        close the bearer and raise ``PoolUnavailableError``."""
+        if self._bearer.closed:
             raise PoolUnavailableError(
                 f"pool server {self.endpoint} connection closed")
         t0 = time.perf_counter()
-        with TRACER.span("net." + verb, tier="net", frames=len(reqs),
+        with TRACER.span("net." + verb, tier="net", frames=len(wr_lists),
                          endpoint=f"{self.endpoint[0]}:{self.endpoint[1]}") \
                 as vspan:
             prefix = b""
-            pflag = 0
             if TRACER.enabled and self._server_trace:
                 prefix = W.enc_trace_ctx(TRACER.trace_id,
                                          getattr(vspan, "span_id", 0))
-                pflag = W.FLAG_TRACE
             with self._lock:
-                seqs = []
                 try:
                     with TRACER.span("net.encode", tier="net"):
-                        buf = bytearray()
-                        for op, payload, flags in reqs:
-                            self._seq += 1
-                            seqs.append((op, self._seq))
-                            buf += W.pack_frame(op, prefix + payload,
-                                                flags=flags | pflag,
-                                                seq=self._seq)
-                            self.wire["frames_tx"] += 1
-                            self.wire["bytes_tx"] += (W.HEADER_BYTES
-                                                      + len(prefix)
-                                                      + len(payload))
+                        for wrs in wr_lists:
+                            self._qp.post_send(wrs, prefix=prefix)
+                    self.wire["inflight_peak"] = max(
+                        self.wire["inflight_peak"], len(wr_lists))
+                    outs, error = [], None
                     with TRACER.span("net.wire", tier="net"):
-                        self._sock.sendall(bytes(buf))
-                        outs, error = [], None
-                        for op, seq in seqs:
-                            rop, rflags, rseq, payload = W.recv_frame(
-                                self._sock)
-                            self.wire["frames_rx"] += 1
-                            self.wire["bytes_rx"] += (W.HEADER_BYTES
-                                                      + len(payload))
-                            if rseq != seq or rop != op:
-                                raise ConnectionError(
-                                    f"out-of-order response (seq {rseq} "
-                                    f"!= {seq})")
-                            if rflags & W.FLAG_ERROR and error is None:
-                                # keep draining the pipelined responses —
-                                # leaving them queued would desynchronize
-                                # every later verb
-                                error = payload.decode("utf-8")
-                            outs.append(payload)
+                        for i in range(len(wr_lists)):
+                            comp = self._qp.cq.poll(1)[0]
+                            if comp.status != V.WC_SUCCESS:
+                                if error is None:
+                                    error = comp.error
+                                outs.append(comp.data)
+                            elif decode is not None and error is None:
+                                outs.append(decode(i, comp.data))
+                            else:
+                                outs.append(comp.data)
                         if error is not None:
                             raise RuntimeError(f"pool server error: {error}")
                 except (ConnectionError, socket.timeout, OSError) as e:
@@ -234,11 +253,13 @@ class RemotePool(MemoryPool):
         self.wire["wire_s"][verb] = (self.wire["wire_s"].get(verb, 0.0)
                                      + time.perf_counter() - t0)
         self.wire["frames_by_verb"][verb] = (
-            self.wire["frames_by_verb"].get(verb, 0) + len(reqs))
+            self.wire["frames_by_verb"].get(verb, 0) + len(wr_lists))
         return outs
 
     def _rpc(self, op, payload=b"", *, flags=0, verb="misc"):
-        return self._rpc_many([(op, payload, flags)], verb=verb)[0]
+        """Control-plane round trip: one two-sided SEND work request."""
+        return self._exchange([[V.send_wr(op, payload, flags=flags)]],
+                              verb=verb)[0]
 
     def _note(self, verb: str, measured: int, modeled: float) -> None:
         w = self.wire
@@ -288,15 +309,20 @@ class RemotePool(MemoryPool):
         self._note("attach", len(payload), 0.0)
 
     def adopt(self, store: Store) -> None:
-        """See ``MemoryPool.adopt``; re-uploads the full region."""
+        """See ``MemoryPool.adopt``; re-uploads the full region and
+        re-registers the client-side MR table against the new spec."""
         self.store = store
+        self.mrs = V.region_mrs(store.spec,
+                                quant=store.qvec_buf is not None)
         self._attach()
         self._mt_dev = jnp.asarray(self.store.meta_table)
         self._mt_dirty = False
 
     def attach_quant(self, group: int) -> None:
-        """See ``MemoryPool.attach_quant``; uploads the mirror."""
+        """See ``MemoryPool.attach_quant``; uploads the mirror and
+        registers the quant-row MR."""
         LA.attach_quant_mirror(self.store, group)
+        self.mrs = V.region_mrs(self.spec, quant=True)
         self._stage_quant()
 
     def _stage_quant(self) -> None:
@@ -307,13 +333,26 @@ class RemotePool(MemoryPool):
         self._rpc(W.OP_ATTACH_QUANT, payload, verb="attach")
         self._note("attach", len(payload), 0.0)
 
+    def _write_blocks(self, block_ids, verb: str) -> int:
+        """Block-granular region write as one doorbell batch: a WRITE
+        descriptor per block (addr = block id, len = block bytes) closed
+        by a WRITE_WITH_IMM carrying the serialized payload + metadata
+        table, IMM = block count.  Returns the payload bytes shipped."""
+        payload, flags = W.enc_write_blocks(self.store, block_ids)
+        ids = np.asarray(block_ids, np.int64).reshape(-1)
+        bb = self.spec.block_bytes()
+        wrs = [V.write_wr(V.RKEY_REGION, b, length=bb) for b in ids]
+        wrs.append(V.write_imm_wr(V.RKEY_REGION, 0, payload, len(ids),
+                                  flags=flags))
+        self._exchange([wrs], verb=verb)
+        return len(payload)
+
     def refresh_blocks(self, block_ids) -> None:
         """Migration landing on this node: ship the group's blocks (and
         the metadata table, so the destination's overflow counters match
         the sender's) from the host region."""
-        payload, flags = W.enc_write_blocks(self.store, block_ids)
-        self._rpc(W.OP_WRITE_BLOCKS, payload, flags=flags, verb="migrate")
-        self._note("migrate", len(payload), 0.0)
+        shipped = self._write_blocks(block_ids, "migrate")
+        self._note("migrate", shipped, 0.0)
 
     # ------------------------------------------------------------ reads
 
@@ -342,11 +381,11 @@ class RemotePool(MemoryPool):
         flags = ((W.FLAG_QUANT if quant else 0)
                  | (W.FLAG_GRAPH if quant and quant_graph else 0))
         chunks = doorbell_chunks(pids, doorbell) if len(pids) else []
-        payloads = self._rpc_many(
-            [(W.OP_READ_SPANS, W.enc_pids(db), flags) for db in chunks],
-            verb=verb)
-        parts = []
-        for db, payload in zip(chunks, payloads):
+        wr_lists = [[V.read_wr(V.RKEY_SPANS, p, per_bytes, flags=flags)
+                     for p in db] for db in chunks]
+
+        def dec(i, payload):
+            db = chunks[i]
             measured = len(payload)
             self._note(verb, measured, len(db) * per_bytes)
             # the ledger is charged from the MEASURED response payload —
@@ -354,9 +393,11 @@ class RemotePool(MemoryPool):
             # wire_vs_model() verifies instead of assumes
             self._charge(verb, ledger, measured, per_desc * len(db))
             with TRACER.span("net.decode", tier="net", bytes=measured):
-                parts.append(W.dec_spans_resp(spec, payload, m=len(db),
-                                              quant=quant,
-                                              graph=quant_graph))
+                return W.dec_spans_resp(spec, payload, m=len(db),
+                                        quant=quant, graph=quant_graph)
+
+        parts = (self._exchange(wr_lists, verb=verb, decode=dec)
+                 if chunks else [])
         m = len(pids)
         if not quant:
             g = np.concatenate([p[0] for p in parts]) if parts else \
@@ -379,15 +420,19 @@ class RemotePool(MemoryPool):
         assert qv.shape[0] == m
         return jnp.asarray(g), jnp.asarray(qv), jnp.asarray(qs)
 
-    def _fetch_rows(self, rows, op, verb):
-        """Deduplicated row fetch: the wire moves each distinct region
-        row once; the full (possibly duplicated / dead-lane) tensor is
-        rebuilt client-side — same values ``LocalPool``'s device gather
-        produces, minus the redundant wire bytes."""
+    def _fetch_rows(self, rows, rkey, unit_bytes, verb):
+        """Deduplicated row fetch: one WR-list READ against the row MR
+        moves each distinct region row once; the full (possibly
+        duplicated / dead-lane) tensor is rebuilt client-side — same
+        values ``LocalPool``'s device gather produces, minus the
+        redundant wire bytes."""
         rows_h = np.asarray(rows)
         safe = np.maximum(rows_h.astype(np.int64), 0)
         uniq, inv = np.unique(safe, return_inverse=True)
-        payload = self._rpc(op, W.enc_rows(uniq), verb=verb)
+        if uniq.size == 0:                 # nothing to fetch, no frame
+            return rows_h, uniq, inv, b""
+        wrs = [V.read_wr(rkey, r, unit_bytes) for r in uniq]
+        payload = self._exchange([wrs], verb=verb)[0]
         return rows_h, uniq, inv, payload
 
     def read_rows(self, rows):
@@ -396,7 +441,7 @@ class RemotePool(MemoryPool):
         self.verbs["read_rows"] += 1
         spec = self.spec
         rows_h, uniq, inv, payload = self._fetch_rows(
-            rows, W.OP_READ_ROWS, "read_rows")
+            rows, V.RKEY_ROWS, spec.row_bytes(), "read_rows")
         self._note("read_rows", len(payload),
                    len(uniq) * spec.row_bytes())
         with TRACER.span("net.decode", tier="net", bytes=len(payload)):
@@ -409,9 +454,9 @@ class RemotePool(MemoryPool):
         group scales per unique row."""
         self.verbs["read_quant_rows"] += 1
         spec = self.spec
-        rows_h, uniq, inv, payload = self._fetch_rows(
-            rows, W.OP_READ_QUANT_ROWS, "read_quant_rows")
         nq = spec.dim // spec.quant_group
+        rows_h, uniq, inv, payload = self._fetch_rows(
+            rows, V.RKEY_QROWS, spec.dim + nq * 4, "read_quant_rows")
         self._note("read_quant_rows", len(payload),
                    len(uniq) * (spec.dim + nq * 4))
         with TRACER.span("net.decode", tier="net", bytes=len(payload)):
@@ -451,7 +496,12 @@ class RemotePool(MemoryPool):
             co = LA.overflow_write_coords(spec, group, slot)
             LA.refresh_quant_blocks(self.store, [co["vec_block"]])
         payload, flags = W.enc_append(vec, int(gid), int(pid), codes, scales)
-        resp = self._rpc(W.OP_APPEND, payload, flags=flags, verb="append")
+        # one-sided WRITE_WITH_IMM into the shared overflow MR: the
+        # descriptor names the partition address, the immediate carries
+        # the gid the passive side is notified with
+        wrs = [V.write_imm_wr(V.RKEY_OVERFLOW, pid, payload, gid,
+                              flags=flags)]
+        resp = self._exchange([wrs], verb="append")[0]
         rslot = W.dec_append_resp(resp)
         if rslot != slot:
             raise RuntimeError(
@@ -479,9 +529,8 @@ class RemotePool(MemoryPool):
         spec = self.spec
         blocks = np.arange(group * spec.group_blocks,
                            (group + 1) * spec.group_blocks)
-        payload, flags = W.enc_write_blocks(self.store, blocks)
-        self._rpc(W.OP_WRITE_BLOCKS, payload, flags=flags, verb="repack")
-        self._note("repack", len(payload), 0.0)
+        shipped = self._write_blocks(blocks, "repack")
+        self._note("repack", shipped, 0.0)
         self._mt_dirty = True
         self._notify_mutation("repack", group=int(group))
         return True
@@ -560,6 +609,7 @@ class RemotePool(MemoryPool):
         from repro.pool.sim_rdma import fabric_params
         out = super().snapshot()
         out["endpoint"] = f"{self.endpoint[0]}:{self.endpoint[1]}"
+        out["bearer"] = self.bearer_kind
         out["fabric"] = fabric_params(self.fabric)   # same schema as sim
         out["wire"] = {k: (dict(v) if isinstance(v, dict) else v)
                        for k, v in self.wire.items()}

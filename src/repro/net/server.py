@@ -2,11 +2,15 @@
 
 Hosts one serialized region (``core/layout.Store``, host numpy buffers)
 and serves every ``MemoryPool`` verb over TCP using the ``wire.py``
-framing.  The data plane is deliberately jax-free: span reads are numpy
-block gathers from the registered region, appends are
-``layout.insert_vector`` host writes — the *compute* side (RemotePool's
-caller) owns all device work, exactly like the paper's memory nodes own
-bytes and nothing else.
+framing.  The data plane is deliberately jax-free AND verb-free on the
+read side: the region is *registered* as a set of memory-region windows
+(``repro.rdma.mr.host_mrs`` — span / row / quant-row numpy views keyed
+by rkey), and a read frame is answered by delegating the address batch
+to the MR its opcode names — one generic dispatch line per read opcode,
+no per-verb server logic, exactly like the paper's passive memory nodes
+that own bytes and nothing else.  Appends are ``layout.insert_vector``
+host writes; the *compute* side (RemotePool's caller) owns all device
+work.
 
 Run standalone:
 
@@ -53,6 +57,8 @@ import numpy as np
 
 from repro.core import layout as LA
 from repro.net import wire as W
+from repro.rdma import mr as RM
+from repro.rdma import verbs as V
 
 #: verbs that change region state — exactly the set the WAL captures
 MUTATING_OPS = frozenset({W.OP_ATTACH, W.OP_ATTACH_QUANT, W.OP_APPEND,
@@ -68,6 +74,12 @@ class HostRegion:
     def __init__(self, store=None, durability=None):
         self.store = store
         self.durability = durability
+        # registered memory regions: rkey -> numpy window onto the
+        # store; read frames are answered by delegating to these, so
+        # the server has no per-verb read logic.  MRs dereference
+        # ``self.store`` per read — ATTACH replacement and in-place
+        # mutation are both immediately visible.
+        self.mrs = RM.host_mrs(self)
         self.lock = threading.RLock()
         self.verbs: Counter = Counter()
         self.payload_tx = 0      # response payload bytes served
@@ -123,14 +135,6 @@ class HostRegion:
             raise RuntimeError("no region attached")
         return self.store
 
-    def _span_blocks(self, buf, pids):
-        store = self._require()
-        ids = np.stack([store.span_block_ids(int(p)) for p in pids]) \
-            if len(pids) else np.zeros((0, store.spec.fetch_blocks),
-                                       np.int64)
-        return buf[ids.reshape(-1)].reshape(
-            len(pids), store.spec.fetch_blocks, buf.shape[1])
-
     # ------------------------------------------------------------ verbs
 
     def attach(self, payload, flags):
@@ -150,65 +154,16 @@ class HostRegion:
         return b"", 0
 
     def read_spans(self, payload, flags):
-        """Serve one doorbell batch of span READs; the response payload
-        is exactly the modeled span bytes (see ``wire.enc_spans_resp``)."""
-        store = self._require()
-        spec = store.spec
-        pids = W.dec_pids(payload)
-        quant = bool(flags & W.FLAG_QUANT)
-        graph = bool(flags & W.FLAG_GRAPH)
-        if not quant:
-            g = self._span_blocks(store.graph_buf, pids)
-            v = self._span_blocks(store.vec_buf, pids)
-            return W.enc_spans_resp(spec, quant=False, g=g, v=v), 0
-        if store.qvec_buf is None:
-            raise RuntimeError("quant span read without an attached mirror")
-        qv = self._span_blocks(store.qvec_buf, pids)
-        qs = self._span_blocks(store.qscale_buf, pids)
-        if graph:
-            g = self._span_blocks(store.graph_buf, pids)
-            return (W.enc_spans_resp(spec, quant=True, graph=True, qv=qv,
-                                     qs=qs, g=g), flags)
-        return (W.enc_spans_resp(spec, quant=True, graph=False, qv=qv,
-                                 qs=qs, tails=self._gid_tails(pids)), flags)
-
-    def _gid_tails(self, pids) -> np.ndarray:
-        """Slice the two gid runs of each span straight out of the
-        region (blocks are contiguous rows, so a run is contiguous in
-        the flat view) — no need to materialize the full graph span the
-        tails format exists to keep off the wire."""
-        store = self._require()
-        spec = store.spec
-        gflat = store.graph_buf.reshape(-1)           # view, no copy
-        tails = np.empty((len(pids), spec.np_max + spec.ov_cap), np.int32)
-        for i, p in enumerate(pids):
-            row = store.meta_table[int(p)]
-            base = int(row[LA.MT_BLK_START]) * spec.gblk
-            d, o = W.gid_tail_offsets(spec, int(row[LA.MT_SIDE]))
-            tails[i, :spec.np_max] = gflat[base + d:base + d + spec.np_max]
-            tails[i, spec.np_max:] = gflat[base + o:base + o + spec.ov_cap]
-        return tails
+        """One-sided span READ: delegate to the registered span MR."""
+        return self.mrs[V.RKEY_SPANS].read(payload, flags)
 
     def read_rows(self, payload, flags):
-        """Serve a row-granular READ: ``n_rows * row_bytes()`` f32."""
-        store = self._require()
-        rows = W.dec_rows(payload)
-        safe = np.maximum(rows, 0)
-        vrows = store.vec_buf.reshape(-1, store.spec.dim)[safe]
-        return W.enc_rows_resp(vrows), 0
+        """One-sided row READ: delegate to the registered row MR."""
+        return self.mrs[V.RKEY_ROWS].read(payload, flags)
 
     def read_quant_rows(self, payload, flags):
-        """Serve a quant-mirror row READ: codes + group scales."""
-        store = self._require()
-        if store.qvec_buf is None:
-            raise RuntimeError("quant row read without an attached mirror")
-        spec = store.spec
-        rows = W.dec_rows(payload)
-        safe = np.maximum(rows, 0)
-        codes = store.qvec_buf.reshape(-1, spec.dim)[safe]
-        scales = store.qscale_buf.reshape(
-            -1, spec.dim // spec.quant_group)[safe]
-        return W.enc_quant_rows_resp(codes, scales), 0
+        """One-sided quant-row READ: delegate to the mirror's row MR."""
+        return self.mrs[V.RKEY_QROWS].read(payload, flags)
 
     def read_meta(self, payload, flags):
         """Ship the metadata table + base counts (client cache refresh)."""

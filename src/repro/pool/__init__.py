@@ -42,6 +42,12 @@ def make_pool_factory(cfg):
     if cfg.pool == "remote":
         # lazy import: the net subsystem is only needed when it is used
         from repro.net.client import RemotePool
+        bearer = getattr(cfg, "bearer", "tcp")
+        if bearer == "loopback":
+            # in-process HostRegion behind the same verbs/QP path — no
+            # endpoints, no sockets (the conformance bearer)
+            return lambda store: RemotePool(store, None, fabric=cfg.fabric,
+                                            bearer="loopback")
         eps = tuple(cfg.endpoints or ())
         if not eps:
             raise ValueError("pool='remote' needs EngineConfig.endpoints")
@@ -68,7 +74,9 @@ def make_pool_factory(cfg):
                     use_gather_kernel=cfg.use_gather_kernel)
             if cfg.shard_transport == "remote":
                 from repro.net.client import RemotePool
-                return lambda store: RemotePool(store, ep, fabric=fabric)
+                bearer = getattr(cfg, "bearer", "tcp")
+                return lambda store: RemotePool(store, ep, fabric=fabric,
+                                                bearer=bearer)
             raise ValueError(
                 f"unknown shard transport {cfg.shard_transport!r}")
 
@@ -77,7 +85,8 @@ def make_pool_factory(cfg):
         if len(fabrics) != cfg.n_shards:
             raise ValueError(f"shard_fabrics has {len(fabrics)} entries "
                              f"for n_shards={cfg.n_shards}")
-        if cfg.shard_transport == "remote":
+        if (cfg.shard_transport == "remote"
+                and getattr(cfg, "bearer", "tcp") == "tcp"):
             eps = tuple(cfg.endpoints or ())
             if len(eps) != cfg.n_shards:
                 raise ValueError(f"endpoints has {len(eps)} entries "

@@ -123,7 +123,15 @@ class ComputeClient:
         budget) plus a quantized tier filling the remainder — ~3-4x the
         partitions per byte, so stage-1 hits replace remote reads."""
         cfg = self.cfg
-        self.pool.attach_quant(cfg.quant_group)
+        st = self.pool.store
+        if (st.qvec_buf is not None
+                and st.spec.quant_group == cfg.quant_group):
+            # the loader (or a previous attach) already built the mirror
+            # host-side with the same codec geometry — stage it, don't
+            # re-quantize the whole region
+            self.pool._stage_quant()
+        else:
+            self.pool.attach_quant(cfg.quant_group)
         spec = self.pool.spec
         pb = spec.partition_bytes()
         qpb = spec.quant_partition_bytes(

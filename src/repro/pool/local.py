@@ -6,6 +6,18 @@ are host-staging plus a device scatter twin — now behind the
 ``MemoryPool`` verbs so the compute side can't tell it apart from a real
 remote.  Bit-identical to the pre-pool engine by construction: the verb
 bodies are the exact gather/scatter sequences the engine used inline.
+
+1/N staging: a sharded child that serves only some partition groups can
+``restrict_staging(groups)`` to a block-compacted device region holding
+just the owned groups' blocks.  Reads translate region block/row
+addresses through a block->staged-slot indirection
+(``layout.block_slot_map``) — host-side for span block ids, on device
+for row gathers (dead ``-1`` lanes stay dead) — so verb results are
+bit-identical to the fully staged pool while device bytes drop to
+~1/N.  ``refresh_blocks`` adopts an arriving group at group granularity
+(stage once from the host, append to the compacted tail) and scatters
+only the blocks that actually moved; ``snapshot()["staging"]`` reports
+the compaction and re-stage tallies.
 """
 from __future__ import annotations
 
@@ -29,26 +41,64 @@ class LocalPool(MemoryPool):
 
     kind = "local"
 
-    def __init__(self, store: Store, *, use_gather_kernel: bool = False):
+    def __init__(self, store: Store, *, use_gather_kernel: bool = False,
+                 owned_groups=None):
         self.store = store
         self.use_gather_kernel = use_gather_kernel
         self.verbs: Counter = Counter()
         self.totals = _fresh_totals()
+        self._owned: Optional[set] = (None if owned_groups is None
+                                      else {int(g) for g in owned_groups})
         self._stage_all()
 
     # ------------------------------------------------------------ staging
 
+    def restrict_staging(self, groups) -> None:
+        """Compact the device region to only ``groups``' blocks (the 1/N
+        staging a sharded child uses once placement is known).  Pass
+        ``None`` to return to full staging."""
+        self._owned = None if groups is None else {int(g) for g in groups}
+        self._stage_all()
+
     def _stage_all(self) -> None:
-        """(Re-)register the region: host buffers -> device arrays."""
-        self._g_dev = jnp.asarray(self.store.graph_buf)
-        self._v_dev = jnp.asarray(self.store.vec_buf)
-        self._mt_dev = jnp.asarray(self.store.meta_table)
+        """(Re-)register the region: host buffers -> device arrays.
+
+        Full staging when no owned set is declared; otherwise only the
+        owned groups' blocks go to the device, block-compacted, with the
+        region->staged indirection rebuilt alongside."""
+        st, spec = self.store, self.store.spec
+        if self._owned is None:
+            self._staged_ids = None
+            self._block_slot = None
+            self._bs_dev = None
+            self._g_dev = jnp.asarray(st.graph_buf)
+            self._v_dev = jnp.asarray(st.vec_buf)
+            n_staged = spec.n_blocks
+        else:
+            self._staged_ids = LA.owned_block_ids(spec, self._owned)
+            self._block_slot = LA.block_slot_map(spec, self._staged_ids)
+            self._bs_dev = jnp.asarray(self._block_slot, jnp.int32)
+            self._g_dev = jnp.asarray(st.graph_buf[self._staged_ids])
+            self._v_dev = jnp.asarray(st.vec_buf[self._staged_ids])
+            n_staged = len(self._staged_ids)
+        self._mt_dev = jnp.asarray(st.meta_table)
         self._mt_dirty = False
-        if self.store.qvec_buf is not None:
-            self._qv_dev = jnp.asarray(self.store.qvec_buf)
-            self._qs_dev = jnp.asarray(self.store.qscale_buf)
+        if st.qvec_buf is not None:
+            self._stage_quant()
         else:
             self._qv_dev = self._qs_dev = None
+        self.staging = {"compacted": self._owned is not None,
+                        "blocks_total": int(spec.n_blocks),
+                        "blocks_staged": int(n_staged),
+                        "restaged_blocks": 0,
+                        "device_bytes": 0}
+        self._count_device_bytes()
+
+    def _count_device_bytes(self) -> None:
+        b = self._g_dev.nbytes + self._v_dev.nbytes + self._mt_dev.nbytes
+        if self._qv_dev is not None:
+            b += self._qv_dev.nbytes + self._qs_dev.nbytes
+        self.staging["device_bytes"] = int(b)
 
     def adopt(self, store: Store) -> None:
         """See ``MemoryPool.adopt``."""
@@ -59,29 +109,89 @@ class LocalPool(MemoryPool):
         """See ``MemoryPool.attach_quant``."""
         LA.attach_quant_mirror(self.store, group)
         self._stage_quant()
+        self._count_device_bytes()
 
     def _stage_quant(self) -> None:
         """(Re-)stage the quantized mirror (already attached to the host
         store) — split out so a sharded parent can attach the mirror
-        once and have every child stage it."""
-        self._qv_dev = jnp.asarray(self.store.qvec_buf)
-        self._qs_dev = jnp.asarray(self.store.qscale_buf)
+        once and have every child stage it.  Compacted staging stages
+        only the owned blocks' codes/scales, same indirection."""
+        ids = self._staged_ids
+        if ids is None:
+            self._qv_dev = jnp.asarray(self.store.qvec_buf)
+            self._qs_dev = jnp.asarray(self.store.qscale_buf)
+        else:
+            self._qv_dev = jnp.asarray(self.store.qvec_buf[ids])
+            self._qs_dev = jnp.asarray(self.store.qscale_buf[ids])
+        if hasattr(self, "staging"):   # sharded parents call this directly
+            self._count_device_bytes()
 
     def refresh_blocks(self, block_ids) -> None:
         """Re-stage specific blocks from the host region (group
         migration landing on this pool: the host bytes are the source of
-        truth; this node's device copy of the arriving group is stale)."""
+        truth; this node's device copy of the arriving group is stale).
+
+        Under compacted staging an arriving group not yet owned is
+        adopted at group granularity — its full block range is staged
+        once from the host onto the compacted tail — and only the blocks
+        that were already resident are scattered; either way just the
+        moved group's blocks travel, never a full re-stage."""
         ids = np.asarray(block_ids, np.int64)
-        dev = jnp.asarray(ids, jnp.int32)
-        self._g_dev = self._g_dev.at[dev].set(
-            jnp.asarray(self.store.graph_buf[ids]))
-        self._v_dev = self._v_dev.at[dev].set(
-            jnp.asarray(self.store.vec_buf[ids]))
+        if len(ids) == 0:
+            return
+        if self._owned is None:
+            dev = jnp.asarray(ids, jnp.int32)
+            self._scatter_blocks(ids, dev)
+            self.staging["restaged_blocks"] += int(len(ids))
+            return
+        spec = self.spec
+        new_groups = sorted({int(g) for g in ids // spec.group_blocks}
+                            - self._owned)
+        for g in new_groups:
+            self._adopt_group(g)
+        pre = (ids[~np.isin(ids // spec.group_blocks, new_groups)]
+               if new_groups else ids)
+        if len(pre):
+            slots = self._block_slot[pre]
+            assert (slots >= 0).all(), "refresh of unstaged block"
+            self._scatter_blocks(pre, jnp.asarray(slots, jnp.int32))
+        self.staging["restaged_blocks"] += (
+            int(len(pre)) + len(new_groups) * spec.group_blocks)
+        self.staging["blocks_staged"] = int(len(self._staged_ids))
+        self._count_device_bytes()
+
+    def _scatter_blocks(self, host_ids: np.ndarray, dev_ids) -> None:
+        st = self.store
+        self._g_dev = self._g_dev.at[dev_ids].set(
+            jnp.asarray(st.graph_buf[host_ids]))
+        self._v_dev = self._v_dev.at[dev_ids].set(
+            jnp.asarray(st.vec_buf[host_ids]))
         if self._qv_dev is not None:
-            self._qv_dev = self._qv_dev.at[dev].set(
-                jnp.asarray(self.store.qvec_buf[ids]))
-            self._qs_dev = self._qs_dev.at[dev].set(
-                jnp.asarray(self.store.qscale_buf[ids]))
+            self._qv_dev = self._qv_dev.at[dev_ids].set(
+                jnp.asarray(st.qvec_buf[host_ids]))
+            self._qs_dev = self._qs_dev.at[dev_ids].set(
+                jnp.asarray(st.qscale_buf[host_ids]))
+
+    def _adopt_group(self, group: int) -> None:
+        """Stage one newly owned group onto the compacted device tail."""
+        st, spec = self.store, self.spec
+        gids = np.arange(group * spec.group_blocks,
+                         (group + 1) * spec.group_blocks, dtype=np.int64)
+        base = len(self._staged_ids)
+        self._staged_ids = np.concatenate([self._staged_ids, gids])
+        self._block_slot[gids] = base + np.arange(spec.group_blocks,
+                                                  dtype=np.int32)
+        self._bs_dev = jnp.asarray(self._block_slot, jnp.int32)
+        self._g_dev = jnp.concatenate(
+            [self._g_dev, jnp.asarray(st.graph_buf[gids])])
+        self._v_dev = jnp.concatenate(
+            [self._v_dev, jnp.asarray(st.vec_buf[gids])])
+        if self._qv_dev is not None:
+            self._qv_dev = jnp.concatenate(
+                [self._qv_dev, jnp.asarray(st.qvec_buf[gids])])
+            self._qs_dev = jnp.concatenate(
+                [self._qs_dev, jnp.asarray(st.qscale_buf[gids])])
+        self._owned.add(int(group))
 
     # ------------------------------------------------------------ reads
     # (read_meta, the charge rule, and the post_* accounting verbs are
@@ -93,6 +203,32 @@ class LocalPool(MemoryPool):
             from repro.kernels.gather_blocks import ops as GO
             return GO.gather_blocks(buf, ids)
         return jnp.take(buf, ids, axis=0)
+
+    def _staged_block_ids(self, block_ids: np.ndarray) -> np.ndarray:
+        """Region block ids -> device rows (identity when fully staged)."""
+        if self._owned is None:
+            return block_ids
+        slots = self._block_slot[block_ids]
+        assert (slots >= 0).all(), "span read outside the staged groups"
+        return slots
+
+    def _staged_rows(self, rows):
+        """Region row addresses -> compacted device rows, ON DEVICE.
+
+        Rows address ``vec_buf.reshape(-1, dim)``; under compaction the
+        owning block is remapped through the staged-slot table and the
+        in-block offset is kept.  Dead ``-1`` lanes and rows of unstaged
+        blocks stay ``-1`` (callers mask them; an unstaged LIVE row
+        would be a placement bug and shows up as a masked lane, exactly
+        like a dead candidate)."""
+        if self._owned is None:
+            return rows
+        sv = self.spec.slot_vecs
+        r = jnp.asarray(rows)
+        safe = jnp.maximum(r, 0)
+        slot = jnp.take(self._bs_dev, safe // sv, axis=0)
+        tr = slot * sv + safe % sv
+        return jnp.where((r < 0) | (slot < 0), -1, tr)
 
     def read_spans(self, pids, *, ledger: Optional[NetLedger],
                    doorbell: int = 1, quant: bool = False,
@@ -112,6 +248,7 @@ class LocalPool(MemoryPool):
                              per_desc * len(db))
         block_ids = np.stack([self.store.span_block_ids(int(p))
                               for p in pids])
+        block_ids = self._staged_block_ids(block_ids)
         ids = jnp.asarray(block_ids.reshape(-1), jnp.int32)
         m = block_ids.shape[0]
         g = self._gather_blocks(self._g_dev, ids).reshape(m, -1, spec.gblk)
@@ -127,13 +264,15 @@ class LocalPool(MemoryPool):
     def read_rows(self, rows):
         """See ``MemoryPool.read_rows``; charged via ``post_row_reads``."""
         self.verbs["read_rows"] += 1
-        return DS.gather_rows(self._v_dev, rows, dim=self.spec.dim)
+        return DS.gather_rows(self._v_dev, self._staged_rows(rows),
+                              dim=self.spec.dim)
 
     def read_quant_rows(self, rows):
         """See ``MemoryPool.read_quant_rows``; charged via
         ``post_row_reads`` (quant rows are priced by the caller)."""
         self.verbs["read_quant_rows"] += 1
-        return DS.gather_quant_rows(self._qv_dev, self._qs_dev, rows,
+        return DS.gather_quant_rows(self._qv_dev, self._qs_dev,
+                                    self._staged_rows(rows),
                                     dim=self.spec.dim,
                                     group=self.spec.quant_group)
 
@@ -150,10 +289,13 @@ class LocalPool(MemoryPool):
             return slot
         group = int(self.store.meta_table[pid, LA.MT_GROUP])
         co = LA.overflow_write_coords(spec, group, slot)
+        vb, gb = co["vec_block"], co["gid_block"]
+        if self._owned is not None:
+            vb, gb = int(self._block_slot[vb]), int(self._block_slot[gb])
+            assert vb >= 0 and gb >= 0, "append to an unstaged group"
         self._g_dev, self._v_dev = DS.overflow_append(
             spec, self._g_dev, self._v_dev, jnp.asarray(vec),
-            jnp.int32(gid), co["vec_block"], co["vec_off"],
-            co["gid_block"], co["gid_off"])
+            jnp.int32(gid), vb, co["vec_off"], gb, co["gid_off"])
         wire = spec.dim * 4 + 8
         if self.store.qvec_buf is not None:
             # quantized-mirror twin: re-quantize the touched block on the
@@ -162,7 +304,7 @@ class LocalPool(MemoryPool):
             LA.refresh_quant_blocks(self.store, [co["vec_block"]])
             self._qv_dev, self._qs_dev = DS.overflow_append_quant(
                 spec, self._qv_dev, self._qs_dev, jnp.asarray(vec),
-                co["vec_block"], co["vec_off"])
+                vb, co["vec_off"])
             wire += spec.dim + (spec.dim // spec.quant_group) * 4
         self.verbs["append"] += 1
         self._charge_write("append", ledger, wire)
@@ -181,3 +323,12 @@ class LocalPool(MemoryPool):
             self._stage_all()      # re-register the rewritten region
             self._notify_mutation("repack", group=int(group))
         return ok
+
+    # ------------------------------------------------------------ stats
+
+    def snapshot(self) -> dict:
+        """See ``MemoryPool.snapshot``; adds the device-staging tallies
+        (compaction, staged block count, device bytes, re-stages)."""
+        out = super().snapshot()
+        out["staging"] = dict(self.staging)
+        return out

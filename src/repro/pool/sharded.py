@@ -50,14 +50,18 @@ per shard to model stragglers):
   replica fan-out, or post-failure re-replication can always re-stage
   any node from it.
 
-Simulation note: the children share the serialized host region (this
-container has one address space), and each child stages a full device
-copy of it while *serving only the groups it owns* — so device memory
-scales with ``n_shards`` here, a simulation convenience (real
-transports would hold just their slice; block-compacted per-shard
-staging is a ROADMAP item).  What the model measures — per-destination
-verb counts, wire bytes, and modeled time — is exactly what a
-multi-node deployment would see over real transports.
+1/N staging: the children share the serialized host region (this
+container has one address space), but each capable child compacts its
+*device* copy to just the groups it holds replicas of
+(``LocalPool.restrict_staging`` — block-compacted, with a region-block
+-> staged-slot indirection), so per-shard device bytes scale ~1/N with
+the fleet.  Migration, replica fan-out, and failover healing re-stage
+only the moved blocks (an arriving group is adopted onto the compacted
+tail at group granularity); children without the hook (``RemotePool``
+— the server already holds only bytes it was sent) are left alone.
+What the model measures — per-destination verb counts, wire bytes, and
+modeled time — is exactly what a multi-node deployment would see over
+real transports.
 """
 from __future__ import annotations
 
@@ -239,6 +243,23 @@ class ShardedPool(MemoryPool):
             dead = np.nonzero(~self._alive)[0]
             self._replicas[np.isin(self._replicas, dead)] = -1
         self._recompute_serving()
+        self._apply_staging()
+
+    def _apply_staging(self, only: Optional[int] = None) -> None:
+        """Compact each capable child's device region to the groups it
+        holds replicas of (1/N staging).  A full placement (re)build is
+        the only time this runs — incremental placement changes go
+        through ``refresh_blocks``, which adopts an arriving group onto
+        the compacted tail without re-staging anything else.  Children
+        without the hook (remote transports) keep their own staging."""
+        for s, c in enumerate(self.children):
+            if only is not None and s != only:
+                continue
+            if not self._alive[s] or not hasattr(c, "restrict_staging"):
+                continue
+            held = [g for g in range(len(self._replicas))
+                    if (self._replicas[g] == s).any()]
+            c.restrict_staging(held)
 
     def _recompute_serving(self) -> None:
         """Re-pick each group's serving replica: cheapest (modeled
@@ -335,6 +356,12 @@ class ShardedPool(MemoryPool):
         """See ``MemoryPool.attach_quant``; attaches the mirror once on
         the shared host store, then every live child stages it."""
         LA.attach_quant_mirror(self.store, group)
+        self._stage_quant()
+
+    def _stage_quant(self) -> None:
+        """Stage the already-attached host mirror on every live child
+        (same split as ``LocalPool._stage_quant``: attach once, stage
+        everywhere — used when the loader built the mirror host-side)."""
         for s, c in enumerate(self.children):
             if not self._alive[s]:
                 continue
@@ -745,6 +772,9 @@ class ShardedPool(MemoryPool):
         self.children.append(child)
         self._alive = np.append(self._alive, True)
         self.elastic["added"] += 1
+        # start the new node empty-compacted: the groups the placement
+        # moves below are adopted one by one (1/N staging from day one)
+        self._apply_staging(only=new)
         desired = np.asarray(
             self.placement.place(self.spec.n_groups, self.n_shards,
                                  group_sizes=self._group_rows(),
@@ -825,6 +855,7 @@ class ShardedPool(MemoryPool):
                 restored += 1
             self.failover["recovered_groups"] += restored
         self._recompute_serving()
+        self._apply_staging(only=shard)
 
     # ------------------------------------------------------------ migration
 
@@ -934,6 +965,16 @@ class ShardedPool(MemoryPool):
         if self.sim_s or any("sim_total_s" in s for s in out["shards"]):
             out["sim_s"] = dict(self.sim_s)
             out["sim_total_s"] = self.sim_total_s
+        stg = [s.get("staging") for s in out["shards"]]
+        if any(stg):
+            # per-node device staging: the 1/N footprint story in one place
+            out["staging"] = {
+                "device_bytes_by_shard": [(t or {}).get("device_bytes", 0)
+                                          for t in stg],
+                "blocks_staged_by_shard": [(t or {}).get("blocks_staged", 0)
+                                           for t in stg],
+                "restaged_blocks": sum((t or {}).get("restaged_blocks", 0)
+                                       for t in stg)}
         wired = [s["wire"] for s in out["shards"] if "wire" in s]
         if wired:
             # remote children: measured wire traffic summed over nodes

@@ -25,6 +25,15 @@ same way.
 Optionally (``sleep=True``) the pool also *injects* the modeled latency
 as real wall time — useful to make the serving tier feel remote reads in
 end-to-end latency percentiles; off by default so tests stay fast.
+Since the verbs re-plumb, every modeled charge slice is also *issued*
+through a :class:`repro.rdma.verbs.QueuePair` over the accounting-only
+``ModelBearer``: one ``post_send`` per modeled round trip, one
+``WorkRequest`` per descriptor.  The bearer carries no bytes and the
+clock is still priced from the aggregate slice (so ``sim_s`` stays
+bit-identical to the pre-verbs math), but the doorbell/descriptor
+structure of the simulated fabric now flows through the same QP
+interface the real bearers use — ``snapshot()["qp"]`` reports the
+tallies.
 """
 from __future__ import annotations
 
@@ -36,6 +45,8 @@ import numpy as np
 from repro.core.cost_model import RDMA_100G, Fabric
 from repro.core.layout import Store
 from repro.pool.local import LocalPool
+from repro.rdma import verbs as V
+from repro.rdma.loopback import ModelBearer
 
 Slices = Union[float, int, Sequence[float]]
 
@@ -62,7 +73,30 @@ class SimulatedRDMAPool(LocalPool):
         self.sleep = sleep
         self.parallel = parallel
         self.sim_s: dict[str, float] = {}      # per-verb modeled seconds
+        # the simulated NIC: every charge slice posts its descriptor
+        # structure through this QP (accounting only, no bytes move)
+        self._qp = V.QueuePair(ModelBearer())
         super().__init__(store, use_gather_kernel=use_gather_kernel)
+
+    def _post_slice(self, n_bytes: float, descriptors: float,
+                    trips: float) -> None:
+        """Issue one charge slice as WR lists: ``trips`` doorbell
+        batches carrying ``descriptors`` READ WRs between them (the
+        first batch also names the slice's bytes).  Completions are
+        polled immediately — the model bearer is synchronous."""
+        t = max(int(trips), 1) if trips else 0
+        if t == 0:
+            return
+        d = max(int(descriptors), t)
+        base, extra = divmod(d, t)
+        for i in range(t):
+            n = base + (1 if i < extra else 0)
+            wrs = [V.WorkRequest(V.READ, rkey=V.RKEY_SPANS,
+                                 length=int(n_bytes) if i == 0 and k == 0
+                                 else 0)
+                   for k in range(n)]
+            self._qp.post_send(wrs)
+        self._qp.cq.poll(t)
 
     def model_dt(self, n_bytes: float, descriptors: float,
                  trips: float) -> float:
@@ -76,6 +110,11 @@ class SimulatedRDMAPool(LocalPool):
         b = np.atleast_1d(np.asarray(n_bytes, np.float64))
         d = np.atleast_1d(np.asarray(descriptors, np.float64))
         t = np.atleast_1d(np.asarray(trips, np.float64))
+        for bi, di, ti in zip(b, d, t):
+            self._post_slice(bi, di, ti)
+        # the clock is priced from the aggregate slice (not summed over
+        # WR lists) so the float math is bit-identical to the pre-QP
+        # accounting
         dt = fanout_dt([self.model_dt(bi, di, ti)
                         for bi, di, ti in zip(b, d, t)],
                        self.parallel and len(b) > 1)
@@ -97,6 +136,7 @@ class SimulatedRDMAPool(LocalPool):
         out["fabric"] = fabric_params(self.fabric)
         out["sim_s"] = dict(self.sim_s)
         out["sim_total_s"] = self.sim_total_s
+        out["qp"] = self._qp.bearer.snapshot()
         return out
 
 

@@ -1,0 +1,334 @@
+"""repro.rdma — the verbs layer and the 1/N compacted device staging.
+
+Four layers of coverage:
+
+* **verbs units** — WR-list -> frame mapping invariants (one
+  ``post_send`` == one doorbell batch == one frame), MR registration
+  geometry, and completion-queue error mapping.
+* **bearer conformance** — ``RemotePool`` over {loopback-QP, tcp-QP} x
+  {none, int8} must be bit-identical to ``LocalPool`` (results, ledger,
+  and ``wire_vs_model`` exact), single-node and sharded over loopback
+  HostRegions.
+* **1/N staging** — sharded children stage only their owned groups'
+  blocks: staged device bytes scale ~1/N across {1, 2, 4} shards, and
+  migration / failover healing re-stages only the moved blocks.
+* **failure surface** — a server-side error drains as completions and
+  raises ``RuntimeError`` without desynchronizing the bearer.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G, NetLedger
+from repro.core.hnsw import HNSWParams
+from repro.core.layout import MT_GROUP, build_store
+from repro.core.meta import build_meta
+from repro.net import RemotePool, spawn_pool_servers
+from repro.pool import LocalPool, ShardedPool
+from repro.rdma import verbs as V
+
+CFG = dict(mode="full", search_mode="scan", n_rep=12, b=3, ef=32,
+           cache_frac=0.25, seed=3, fabric=RDMA_100G)
+
+
+@pytest.fixture(scope="module")
+def servers():
+    with spawn_pool_servers(1) as endpoints:
+        yield endpoints
+
+
+@pytest.fixture(scope="module")
+def pds(sift_small):
+    return sift_small.data[:1200], sift_small.queries[:24]
+
+
+def _tiny_store(data, ov_cap=0):
+    meta = build_meta(data, 8, seed=0, meta_levels=2)
+    return build_store(data, meta, ov_cap=ov_cap,
+                       sub_params=HNSWParams(M=4, M0=8, ef_construction=40))
+
+
+def _build(pool, data, **over):
+    cfg = {**CFG, **over, "pool": pool}
+    return DHNSWEngine(EngineConfig(**cfg)).build(data)
+
+
+# ------------------------------------------------------------ verbs units
+
+def test_wr_frame_read_list_is_one_doorbell_frame():
+    wrs = [V.read_wr(V.RKEY_SPANS, p, 128) for p in (3, 1, 7)]
+    op, payload, flags = V.wr_frame(wrs)
+    from repro.net import wire as W
+    assert op == W.OP_READ_SPANS
+    assert np.array_equal(W.dec_pids(payload), [3, 1, 7])
+    assert flags == 0
+    # row/quant-row rkeys map to their own opcodes
+    assert V.wr_frame([V.read_wr(V.RKEY_ROWS, 5, 4)])[0] == W.OP_READ_ROWS
+    assert (V.wr_frame([V.read_wr(V.RKEY_QROWS, 5, 4)])[0]
+            == W.OP_READ_QUANT_ROWS)
+
+
+def test_wr_frame_rejects_malformed_lists():
+    with pytest.raises(ValueError):
+        V.wr_frame([])
+    with pytest.raises(ValueError):          # heterogeneous read rkeys
+        V.wr_frame([V.read_wr(V.RKEY_SPANS, 0, 8),
+                    V.read_wr(V.RKEY_ROWS, 1, 8)])
+    with pytest.raises(ValueError):          # write list must close w/ IMM
+        V.wr_frame([V.write_wr(V.RKEY_REGION, 0, b"x")])
+    with pytest.raises(ValueError):          # SEND is a single-WR batch
+        V.wr_frame([V.send_wr(1), V.send_wr(2)])
+
+
+def test_region_mrs_geometry(pds):
+    data, _ = pds
+    store = _tiny_store(data)
+    spec = store.spec
+    mrs = V.region_mrs(spec)
+    assert set(mrs) == {V.RKEY_SPANS, V.RKEY_ROWS, V.RKEY_OVERFLOW,
+                        V.RKEY_REGION}
+    assert mrs[V.RKEY_SPANS].length == spec.n_partitions
+    assert mrs[V.RKEY_SPANS].nbytes == spec.partition_bytes()
+    assert mrs[V.RKEY_REGION].length == spec.n_blocks
+    from repro.core import layout as LA
+    LA.attach_quant_mirror(store, 8)
+    qmrs = V.region_mrs(store.spec, quant=True)
+    assert V.RKEY_QROWS in qmrs
+    assert (qmrs[V.RKEY_QROWS].nbytes
+            == store.spec.dim + (store.spec.dim // 8) * 4)
+
+
+def test_completion_queue_maps_remote_errors():
+    from repro.net import wire as W
+
+    class ErrBearer:
+        frames = False
+        closed = False
+
+        def __init__(self):
+            self.q = []
+
+        def submit(self, op, payload, flags=0, *, prefix=b"", wrs=None):
+            self.q.append((op or 7, W.FLAG_ERROR, b"boom"))
+            return 0
+
+        def complete(self):
+            return self.q.pop(0)
+
+    qp = V.QueuePair(ErrBearer())
+    qp.post_send([V.send_wr(7)])
+    comp = qp.cq.poll()[0]
+    assert comp.status == V.WC_REMOTE_ERROR
+    assert comp.error == "boom"
+    with pytest.raises(RuntimeError):
+        qp.cq.poll()                          # nothing outstanding
+
+
+# ------------------------------------------------- bearer conformance
+
+def _assert_search_identical(e0, e1, queries):
+    d0, g0, st0 = e0.search(queries, k=10)
+    d1, g1, st1 = e1.search(queries, k=10)
+    assert np.array_equal(g0, g1)
+    assert np.array_equal(d0, d1)
+    for key in ("round_trips", "descriptors", "bytes", "bytes_saved"):
+        assert st0["net"][key] == st1["net"][key], key
+    return st1
+
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+@pytest.mark.parametrize("bearer", ["loopback", "tcp"])
+def test_bearer_conformance_bit_identical(pds, servers, bearer, quant):
+    """The QP path over either bearer: search + insert bit-identical to
+    LocalPool, ledger parity, and measured wire bytes == the model for
+    every data verb."""
+    data, queries = pds
+    e0 = _build("local", data, quant=quant)
+    e1 = _build("remote", data, quant=quant, bearer=bearer,
+                endpoints=servers if bearer == "tcp" else None)
+    _assert_search_identical(e0, e1, queries)
+    g0 = e0.insert(queries[:2] + 0.001)
+    g1 = e1.insert(queries[:2] + 0.001)
+    assert np.array_equal(g0, g1)
+    _assert_search_identical(e0, e1, queries[:8])
+    snap = e1.pool.snapshot()
+    assert snap["bearer"] == bearer
+    wvm = snap["wire_vs_model"]
+    assert wvm, "no wire_vs_model in remote snapshot"
+    for verb, row in wvm.items():
+        if verb.startswith("read"):
+            # span/row reads: payload == model by protocol construction
+            assert row["measured"] == row["modeled"], (verb, row)
+        elif verb == "append":
+            # append frames carry an 8-byte pid routing word the model
+            # does not price (it charges vector + gid only)
+            assert row["measured"] >= row["modeled"], (verb, row)
+            assert row["ratio"] < 1.05, (verb, row)
+
+
+def test_sharded_over_loopback_regions_bit_identical(pds):
+    """Two RemotePool children, each over its own in-process HostRegion:
+    the sharded fan-out through the QP path stays bit-identical."""
+    data, queries = pds
+    e0 = _build("local", data)
+    e1 = _build("sharded", data, shard_transport="remote",
+                bearer="loopback", n_shards=2)
+    _assert_search_identical(e0, e1, queries)
+    snap = e1.pool.snapshot()
+    assert all(s["bearer"] == "loopback" for s in snap["shards"])
+    assert snap["wire_total"]["frames_tx"] > 0
+
+
+def test_loopback_raw_verbs_match_local_with_doorbell_frames(pds):
+    """Raw verb level: one WR-list post per doorbell batch — 5 spans at
+    doorbell=2 cost exactly 3 frames == the ledger's round trips — and
+    every verb result and charge matches LocalPool."""
+    data, _ = pds
+    s0, s1 = _tiny_store(data), _tiny_store(data)
+    lp = LocalPool(s0)
+    rp = RemotePool(s1, None, bearer="loopback")
+    led_l, led_r = NetLedger(RDMA_100G), NetLedger(RDMA_100G)
+
+    pids = np.array([0, 2, 3, 5, 6])
+    f0 = rp.wire["frames_tx"]
+    gl, vl = lp.read_spans(pids, ledger=led_l, doorbell=2)
+    gr, vr = rp.read_spans(pids, ledger=led_r, doorbell=2)
+    assert np.array_equal(np.asarray(gl), np.asarray(gr))
+    assert np.array_equal(np.asarray(vl), np.asarray(vr))
+    assert rp.wire["frames_tx"] - f0 == 3 == led_r.round_trips
+    assert led_l.as_dict() == led_r.as_dict()
+
+    rows = np.array([[0, 5, 9], [2, -1, 7]], np.int32)
+    assert np.array_equal(np.asarray(lp.read_rows(rows)),
+                          np.asarray(rp.read_rows(rows)))
+
+    vec = data[0] + 0.5
+    assert lp.append(vec, 9999, 1, ledger=led_l) == \
+        rp.append(vec, 9999, 1, ledger=led_r) >= 0
+    assert np.array_equal(s0.vec_buf, s1.vec_buf)
+    assert np.array_equal(s0.meta_table, s1.meta_table)
+    assert led_l.as_dict() == led_r.as_dict()
+    rp.close()
+
+
+def test_loopback_server_error_drains_and_surfaces(pds):
+    """A bad descriptor raises a clean RuntimeError; the bearer stays
+    usable (completions were drained, not abandoned)."""
+    data, _ = pds
+    rp = RemotePool(_tiny_store(data), None, bearer="loopback")
+    with pytest.raises(RuntimeError, match="pool server error"):
+        rp.read_spans(np.array([0, 999]), ledger=None)
+    g, v = rp.read_spans(np.array([1]), ledger=None)
+    assert np.asarray(v).shape[0] == 1
+    rp.close()
+
+
+# ------------------------------------------------------- 1/N staging
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_staged_device_bytes_scale_inverse_with_shards(pds, n):
+    """Each sharded child stages only its owned groups, block-compacted:
+    staged blocks partition the region exactly, and per-shard device
+    bytes are the compacted blocks plus the (replicated) meta table."""
+    data, _ = pds
+    store = _tiny_store(data)
+    spec = store.spec
+    sp = ShardedPool(store, [lambda s: LocalPool(s)] * n)
+    stg = sp.snapshot()["staging"]
+    assert sum(stg["blocks_staged_by_shard"]) == spec.n_blocks
+    cap = -(-spec.n_groups // n) * spec.group_blocks   # ceil(G/N) groups
+    assert max(stg["blocks_staged_by_shard"]) <= cap
+    blk_bytes = (spec.gblk + spec.vblk) * 4
+    for staged, dev in zip(stg["blocks_staged_by_shard"],
+                           stg["device_bytes_by_shard"]):
+        assert dev == staged * blk_bytes + store.meta_table.nbytes
+
+
+def test_compacted_reads_bit_identical_to_full(pds):
+    """The indirection is invisible: span/row reads off a compacted
+    pool equal the fully staged one, dead lanes and ledger charges
+    included.  Two layers: a compacted LocalPool restricted to half the
+    groups (like-for-like ledger parity on the owned pids), and a
+    2-shard pool whose children are compacted (data parity over all
+    pids; the sharded ledger legitimately differs — parallel shards
+    charge the max round trip, not the sum)."""
+    data, _ = pds
+    s0, s1, s2 = _tiny_store(data), _tiny_store(data), _tiny_store(data)
+    spec = s0.spec
+    lp = LocalPool(s0)
+    half = list(range(spec.n_groups // 2))
+    cp = LocalPool(s1, owned_groups=half)
+    assert cp.staging["compacted"]
+    mt = s0.meta_table
+    owned_pids = np.array([p for p in range(spec.n_partitions)
+                           if int(mt[p, MT_GROUP]) in half])
+    led_l, led_c = NetLedger(RDMA_100G), NetLedger(RDMA_100G)
+    res_l = lp.read_spans(owned_pids, ledger=led_l, doorbell=4)
+    res_c = cp.read_spans(owned_pids, ledger=led_c, doorbell=4)
+    for a, b in zip(res_l, res_c):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert led_l.as_dict() == led_c.as_dict()
+
+    sp = ShardedPool(s2, [lambda s: LocalPool(s)] * 2)
+    assert all(c.staging["compacted"] for c in sp.children)
+    pids = np.arange(spec.n_partitions)
+    res_s = sp.read_spans(pids, ledger=None, doorbell=4)
+    res_f = lp.read_spans(pids, ledger=None, doorbell=4)
+    for a, b in zip(res_f, res_s):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    rows = np.array([[0, 65, 130], [200, -1, 7]], np.int32)
+    assert np.array_equal(np.asarray(lp.read_rows(rows)),
+                          np.asarray(sp.read_rows(rows)))
+
+
+def test_migration_restages_only_moved_blocks(pds):
+    """Moving one group's serving replica stages exactly that group's
+    blocks on the destination — nothing else on any shard."""
+    data, _ = pds
+    store = _tiny_store(data)
+    gb = store.spec.group_blocks
+    sp = ShardedPool(store, [lambda s: LocalPool(s)] * 2)
+    c0, c1 = sp.children
+    assert c0.staging["restaged_blocks"] == 0
+    assert c1.staging["restaged_blocks"] == 0
+    g = int(np.nonzero(sp._serve == 0)[0][0])
+    pre1 = c1.staging["blocks_staged"]
+    sp._migrate(g, 0, 1)
+    assert sp.owner_of_group(g) == 1
+    assert c1.staging["restaged_blocks"] == gb
+    assert c1.staging["blocks_staged"] == pre1 + gb
+    assert c0.staging["restaged_blocks"] == 0
+    lp = LocalPool(_tiny_store(data))
+    pids = np.arange(store.spec.n_partitions)
+    a = lp.read_spans(pids, ledger=None)
+    b = sp.read_spans(pids, ledger=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_failover_restages_only_dead_shards_groups(pds):
+    """Healing a death re-stages only the dead shard's groups onto
+    survivors (group-granular adoption), never the full region."""
+    data, _ = pds
+    store = _tiny_store(data)
+    spec = store.spec
+    sp = ShardedPool(store, [lambda s: LocalPool(s)] * 3, replication=2)
+    held0 = sum(1 for row in sp._replicas if (row == 0).any())
+    assert held0 > 0
+    sp._on_shard_down(0)
+    survivors = sp.children[1:]
+    restaged = sum(c.staging["restaged_blocks"] for c in survivors)
+    assert restaged == sp.failover["rereplicated_groups"] * spec.group_blocks
+    assert sp.failover["rereplicated_groups"] <= held0
+    for s, c in enumerate(sp.children[1:], start=1):
+        assert c.staging["restaged_blocks"] % spec.group_blocks == 0
+        held = sum(1 for row in sp._replicas if (row == s).any())
+        assert c.staging["blocks_staged"] == held * spec.group_blocks
+    lp = LocalPool(_tiny_store(data))
+    pids = np.arange(spec.n_partitions)
+    a = lp.read_spans(pids, ledger=None)
+    b = sp.read_spans(pids, ledger=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))

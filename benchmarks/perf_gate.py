@@ -59,6 +59,16 @@ GATED = {
     # per-shard staged device footprint is a deterministic function of
     # placement — growing means compaction stopped holding ~1/N
     "staged_mb_max": "up",
+    # straggler-chaos observability (pool chaos_latency row) — all
+    # modeled-clock functions of the seeded WR schedule.  Fewer kept /
+    # latency-kept traces means the tail sampler stopped promoting the
+    # slow batches; zero detector flags means the straggler detector
+    # went blind; a rising p99 or cut ratio means replica-ranked reads
+    # stopped routing around the injected shard; a fallen burn peak
+    # means the SLO engine stopped seeing the injected violations.
+    "kept_traces": "down", "why_kept_latency": "down",
+    "detector_flags": "down", "p99_cut_ratio": "up",
+    "p99_on_us": "up", "burn_peak": "down",
 }
 # measured on the runner's clock, or incidental detail — never gated
 IGNORED = frozenset({
@@ -68,6 +78,11 @@ IGNORED = frozenset({
     "pallas_us", "ref_us", "deaths", "read_retries",
     "rereplicated_groups", "lost_groups", "recover_wall_s",
     "inflight_peak", "restaged_blocks",
+    # chaos_latency incidentals: deterministic but either redundant with
+    # a gated ratio (p99_off_us) or free to drift with workload detail
+    # (check cadence, ring pressure, exact reroute point)
+    "p99_off_us", "discarded_traces", "reroute_batch", "checks",
+    "moved_groups", "injected_posts", "ring_dropped",
 })
 
 

@@ -36,6 +36,15 @@ bit-identical to ``LocalPool``, and reports per-batch latency
 percentiles (the kill batch pays re-replication once; nothing may hang
 on the dead socket, so p99 stays bounded).
 
+The ``--chaos-latency`` sweep is the straggler-observability gate: a
+seeded ``WRInjector`` degrades every WR post on one shard of a 3-shard
+``replication=2`` sim-RDMA pool, and the run asserts — on the modeled
+clock, deterministically — that the straggler detector flags exactly
+that shard, replica-ranked reads route around it (cutting modeled p99
+vs a detection-off twin), the tail sampler keeps the slow-batch traces
+(``why_kept=latency``), the SLO burn rate spikes above 1 and recovers,
+and every batch stays bit-identical to ``LocalPool``.
+
 Writes ``BENCH_pool.json``.  ``--smoke`` is the CI crash check: tiny
 config, asserts nothing about perf (the transport parity and chaos
 asserts still run — they are correctness properties, not perf bars).
@@ -246,6 +255,153 @@ def run_chaos(*, smoke: bool = False) -> dict:
     return row
 
 
+def run_chaos_latency(*, smoke: bool = False) -> dict:
+    """Seeded WR-latency chaos on one shard of a replicated sharded pool.
+
+    A ``WRInjector`` degrades every WR post on shard 1 of a 3-shard
+    ``replication=2`` sim-RDMA pool.  Two engines run the same batch
+    stream: one with the straggler detector on (``straggler_check_every``),
+    one with it off.  The row proves, on the MODELED clock (injection
+    lands in the observed histograms, never in the cost model):
+
+      * the detector flags exactly the injected shard and replica-ranked
+        reads route around it (``inj.posts`` stops growing);
+      * the post-detection modeled p99 is cut vs the detection-off twin;
+      * the tail sampler keeps the slow batches (``why_kept=latency``);
+      * the SLO burn rate spikes > 1 during injection and recovers;
+      * results stay bit-identical to a ``LocalPool`` reference with
+        tracing + injection on.
+
+    Everything asserted is a deterministic function of the seeded
+    schedule and the counted workload — no wall clock.
+    """
+    from repro.obs.hist import StragglerDetector
+    from repro.obs.slo import SLO, SLOTracker
+    from repro.obs.trace import TRACER
+    from repro.rdma.inject import WRInjector
+
+    n, n_rep = (1500, 12) if smoke else (8_000, 32)
+    warm, injected, post = (8, 6, 6) if smoke else (10, 8, 8)
+    n_batches = warm + injected + post
+    per = 8
+    ds = sift_like(n=n, n_queries=64, seed=0)
+    base = dict(mode="full", search_mode="scan", b=3, ef=32, n_rep=n_rep,
+                cache_frac=0.25, doorbell=16, fabric=RDMA_100G, seed=0)
+    ref = DHNSWEngine(EngineConfig(pool="local", **base)).build(ds.data)
+    shard_kw = dict(base, pool="sharded", shard_transport="sim_rdma",
+                    n_shards=3, replication=2)
+    eng_on = DHNSWEngine(EngineConfig(**shard_kw,
+                                      straggler_check_every=1)).build(ds.data)
+    eng_off = DHNSWEngine(EngineConfig(**shard_kw)).build(ds.data)
+    # small smoke workload: fewer samples per (verb, shard) than the
+    # detector's production default before it may judge a shard
+    eng_on.pool.straggler = StragglerDetector(min_count=4,
+                                              min_excess_s=2e-4)
+    inj_on = WRInjector(seed=7, delay_s=2e-3)
+    inj_off = WRInjector(seed=7, delay_s=2e-3)
+
+    TRACER.configure(trace_id=71, tail=True, tail_quantile=0.95,
+                     tail_window=64)
+    slo = SLOTracker(SLO(0.99, 0.0, name="p99<model"), short_window=4,
+                     long_window=64)
+    dts_on, dts_off, burns = [], [], []
+    mismatches = 0
+    reroute_batch = -1
+    for i in range(n_batches):
+        if i == warm:
+            # SLO threshold: 2x the worst healthy (warm) modeled batch
+            thr = 2.0 * max(dts_on)
+            slo.slos["serve"] = SLO(0.99, thr, name="p99<model")
+            eng_on.pool.children[1].set_injector(inj_on)
+            eng_off.pool.children[1].set_injector(inj_off)
+            TRACER.set_phase("injected")
+        elif i == warm + injected:
+            eng_on.pool.children[1].set_injector(None)
+            eng_off.pool.children[1].set_injector(None)
+            TRACER.set_phase("post")
+        elif i == 0:
+            TRACER.set_phase("warm")
+        s = i % (len(ds.queries) // per)
+        qb = ds.queries[s * per:(s + 1) * per]
+        # one root per batch: engine spans become children, and the
+        # keep/drop decision runs on the deterministic modeled seconds
+        with TRACER.span("bench.batch", tier="bench", batch=i) as sp:
+            t_on = eng_on.pool.sim_total_s
+            d1, g1, _ = eng_on.search(qb, k=10)
+            dt_on = eng_on.pool.sim_total_s - t_on
+            t_off = eng_off.pool.sim_total_s
+            d2, g2, _ = eng_off.search(qb, k=10)
+            dt_off = eng_off.pool.sim_total_s - t_off
+            dr, gr, _ = ref.search(qb, k=10)
+            sp.set(model_s=dt_on)
+        for d, g in ((d1, g1), (d2, g2)):
+            if not (np.array_equal(d, dr) and np.array_equal(g, gr)):
+                mismatches += 1
+        dts_on.append(dt_on)
+        dts_off.append(dt_off)
+        if i >= warm:
+            slo.record("serve", "bench", dt_on)
+            burns.append(slo.report()["serve"]["bench"]["burn"])
+        if reroute_batch < 0 and not np.any(eng_on.pool._serve == 1):
+            reroute_batch = i
+    TRACER.set_phase(None)
+
+    assert mismatches == 0, \
+        f"{mismatches} chaos batches diverged from LocalPool"
+    strag = eng_on.pool.snapshot()["stragglers"]
+    assert set(strag["flagged"]) == {"1"}, strag
+    assert warm <= reroute_batch < warm + injected, reroute_batch
+    assert np.any(eng_off.pool._serve == 1)   # detection off: no reroute
+    assert inj_on.posts > 0 and inj_off.posts > inj_on.posts
+
+    # modeled p99 over the post-detection injected window: the rerouted
+    # engine no longer pays the injected delay, its twin still does
+    win = [b for b in range(warm, warm + injected) if b > reroute_batch]
+    assert win, "reroute left no post-detection injected batches"
+    p99_on = float(np.percentile(np.asarray(dts_on)[win], 99))
+    p99_off = float(np.percentile(np.asarray(dts_off)[win], 99))
+    assert p99_on < p99_off, (p99_on, p99_off)
+
+    burn_peak = max(burns)
+    burn_final = burns[-1]
+    assert burn_peak > 1.0, burns
+    assert burn_final < 1.0, burns
+
+    spans = TRACER.snapshot()
+    slow = [s for s in spans if s["name"] == "bench.batch"
+            and s["attrs"].get("why_kept") == "latency"
+            and s["attrs"].get("phase") == "injected"]
+    assert slow, "tail sampler kept no injected slow-batch traces"
+    health = TRACER.health()
+    TRACER.disable()
+
+    row = {"n_shards": 3, "replication": 2, "injected_shard": 1,
+           "flagged_shard": 1, "delay_us": 2000,
+           "n_batches": n_batches, "warm_batches": warm,
+           "mismatches": mismatches, "bit_identical_to_local": True,
+           "eng_off_serves_injected_shard": True, "burn_recovered": True,
+           "reroute_batch": reroute_batch,
+           "checks": strag["checks"],
+           "moved_groups": strag["moved_groups"],
+           "detector_flags": strag["flagged_now"],
+           "injected_posts": inj_on.posts,
+           "p99_on_us": round(p99_on * 1e6, 3),
+           "p99_off_us": round(p99_off * 1e6, 3),
+           "p99_cut_ratio": round(p99_on / p99_off, 4),
+           "burn_peak": round(burn_peak, 3),
+           "kept_traces": health["kept"],
+           "discarded_traces": health["discarded"],
+           "why_kept_latency": len(slow),
+           "ring_dropped": health["dropped"]}
+    print(f"chaos-latency: injected shard 1 ({row['delay_us']} us/post), "
+          f"flagged at batch {reroute_batch}, moved "
+          f"{row['moved_groups']} groups, p99 {row['p99_off_us']} -> "
+          f"{row['p99_on_us']} modeled us (x{row['p99_cut_ratio']}), "
+          f"burn peak {row['burn_peak']} -> {round(burn_final, 3)}, "
+          f"{row['why_kept_latency']} slow traces kept", flush=True)
+    return row
+
+
 def straggler_fabrics(n_shards: int, slowdown: float = 8.0) -> tuple:
     """n_shards fabrics, the last one ``slowdown``x worse on every term."""
     base = RDMA_100G
@@ -347,7 +503,7 @@ def _load_blob(out: str, fallback: dict) -> dict:
 
 def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
         shards_only: bool = False, transport_only: bool = False,
-        chaos_only: bool = False) -> dict:
+        chaos_only: bool = False, chaos_latency_only: bool = False) -> dict:
     if smoke:
         n, n_rep, n_batches = 1500, 12, 2
         modes = ("full",)
@@ -372,6 +528,14 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
         with open(out, "w") as f:
             json.dump(blob, f, indent=2)
         print(f"wrote {out} (chaos row)")
+        return blob
+    if chaos_latency_only:
+        blob = _load_blob(out, {"bench": "pool", "smoke": smoke,
+                                "rows": []})
+        blob["chaos_latency"] = run_chaos_latency(smoke=smoke)
+        with open(out, "w") as f:
+            json.dump(blob, f, indent=2)
+        print(f"wrote {out} (chaos-latency row)")
         return blob
     rows = []
     if not shards_only:
@@ -401,7 +565,8 @@ def run(*, smoke: bool = False, out: str = "BENCH_pool.json",
                 "n_batches": n_batches, "rows": rows,
                 "shard_rows": shard_rows,
                 "transport_rows": transport_rows,
-                "chaos": run_chaos(smoke=smoke)}
+                "chaos": run_chaos(smoke=smoke),
+                "chaos_latency": run_chaos_latency(smoke=smoke)}
     with open(out, "w") as f:
         json.dump(blob, f, indent=2)
     print(f"wrote {out} ({len(blob['rows'])} + {len(shard_rows)} shard "
@@ -421,10 +586,15 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="run only the failover chaos gate (replication=2 "
                          "over loopback servers, kill -9 one mid-run)")
+    ap.add_argument("--chaos-latency", action="store_true",
+                    help="run only the straggler chaos gate (seeded WR "
+                         "latency injection on one shard; detector + "
+                         "reroute + tail-sampler + SLO-burn asserts)")
     ap.add_argument("--out", default="BENCH_pool.json")
     args = ap.parse_args()
     run(smoke=args.smoke, out=args.out, shards_only=args.shards,
-        transport_only=args.transport, chaos_only=args.chaos)
+        transport_only=args.transport, chaos_only=args.chaos,
+        chaos_latency_only=args.chaos_latency)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,12 @@ compute / pool / net spans; with ``--pool remote`` also the harvested
 server-side service times), writes Chrome-trace JSON to FILE, and
 prints the per-stage breakdown report at the end — see
 docs/observability.md.
+
+``--slo "p99<5ms"`` attaches a latency SLO to the serving tier
+(``repro.obs.slo``): the batched run then scores every request against
+it and the summary ends with the SLO attainment / burn-rate table and
+the straggler detector's verdicts over the pool's per-(verb, shard)
+latency histograms — see docs/observability.md.
 """
 import argparse
 import contextlib
@@ -100,6 +106,11 @@ def main():
                     help="record spans with repro.obs, write "
                          "Chrome-trace JSON to FILE, and print the "
                          "stage breakdown report")
+    ap.add_argument("--slo", default="", metavar="SPEC",
+                    help='latency SLO like "p99<5ms" (units us/ms/s) '
+                         "scored per request by the micro-batcher; the "
+                         "summary ends with the attainment/burn-rate "
+                         "table and straggler verdicts")
     args = ap.parse_args()
 
     if args.trace:
@@ -127,6 +138,31 @@ def main():
                                        replication=args.replication)
                           ).build(ds.data)
         run_demo(args, ds, eng)
+
+
+def print_slo_table(slo_report, straggler_report, straggler_stats):
+    """SLO attainment / burn-rate table + straggler verdicts at exit."""
+    print("\n  SLO attainment (burn = violation rate / error budget; "
+          "short+long window min):")
+    print(f"    {'tier':>6s} {'key':>6s} {'objective':>12s} {'n':>6s} "
+          f"{'attain':>8s} {'burn':>6s} {'met':>4s}")
+    for tier in sorted(slo_report):
+        for key, r in sorted(slo_report[tier].items()):
+            print(f"    {tier:>6s} {key:>6s} {r['slo']:>12s} {r['n']:>6d} "
+                  f"{100 * r['attainment']:7.2f}% {r['burn']:6.2f} "
+                  f"{'yes' if r['met'] else 'NO':>4s}")
+    if straggler_report is None:
+        return
+    flagged = straggler_report.get("flagged", {})
+    if not flagged:
+        print(f"    stragglers: none flagged "
+              f"({straggler_stats.get('checks', 0)} detector checks)")
+        return
+    for shard, info in sorted(flagged.items()):
+        print(f"    STRAGGLER shard {shard}: {info['verb']} tail "
+              f"{info['shard_q_s'] * 1e6:.1f} us vs fleet "
+              f"{info['fleet_q_s'] * 1e6:.1f} us (x{info['ratio']:.1f}, "
+              f"+{info['excess_s'] * 1e6:.1f} us penalty on reads)")
 
 
 def print_endpoint_table(pool_snap):
@@ -179,8 +215,8 @@ def run_demo(args, ds, eng):
     print(f"  {qps:8.1f} qps   p50 {p50:7.1f} ms   p95 {p95:7.1f} ms")
 
     print(f"\nsame load through the micro-batcher:")
-    with SearchServer(eng, BatchPolicy(max_batch=64,
-                                       max_wait_s=4e-3)) as srv:
+    with SearchServer(eng, BatchPolicy(max_batch=64, max_wait_s=4e-3,
+                                       slo=args.slo or None)) as srv:
         # warm the fused-shape jit caches like a long-running server
         closed_loop(args.clients, 2 * warm, ds.queries,
                     lambda q: srv.search(q, k=10))
@@ -229,6 +265,13 @@ def run_demo(args, ds, eng):
                   f"  {tot['bytes'] / 1e6:8.2f} MB"
                   f"  {tot['round_trips']:6.0f} trips"
                   f"  {verbs:5.0f} span/append verbs")
+
+    if args.slo and snap.get("slo"):
+        strag = strag_stats = None
+        if hasattr(eng.pool, "check_stragglers"):
+            strag = eng.pool.check_stragglers()
+            strag_stats = eng.pool.straggler_stats
+        print_slo_table(snap["slo"], strag, strag_stats)
 
     if args.trace:
         from repro.obs import report

@@ -120,6 +120,12 @@ class EngineConfig:
     # that would overflow a shard spill to the next-best one.  None =
     # unbounded shards.
     shard_budgets: Optional[tuple] = None
+    # straggler detection cadence for sharded/remote pools: run the
+    # tail-divergence detector over the per-(verb, shard) latency
+    # histograms every N charged span reads and penalize flagged shards
+    # in replica-read ranking (0 = off; manual pool.check_stragglers()
+    # always works).  Needs replication >= 2 to actually reroute.
+    straggler_check_every: int = 0
     # stage-1 flat kernel route: "off" keeps the per-pair jnp path;
     # "auto" routes flat (scan-mode) stage 1 through the fused
     # quant_topk kernel when the quantized tier is dense-resident

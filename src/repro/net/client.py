@@ -250,10 +250,15 @@ class RemotePool(MemoryPool):
                             raise RuntimeError(f"pool server error: {error}")
                 except (ConnectionError, socket.timeout, OSError) as e:
                     self._fail(e)
+        dt = time.perf_counter() - t0
         self.wire["wire_s"][verb] = (self.wire["wire_s"].get(verb, 0.0)
-                                     + time.perf_counter() - t0)
+                                     + dt)
         self.wire["frames_by_verb"][verb] = (
             self.wire["frames_by_verb"].get(verb, 0) + len(wr_lists))
+        # measured post->poll seconds into the per-(verb, shard) latency
+        # histogram — the real-wire twin of the simulated transports'
+        # modeled dt (protocol._charge records those)
+        self._observe(verb, dt)
         return outs
 
     def _rpc(self, op, payload=b"", *, flags=0, verb="misc"):

@@ -89,6 +89,11 @@ class HostRegion:
         # on) and the service-time spans recorded for FLAG_TRACE
         # requests, drained by a stats({"drain_trace": true}) call
         self.service_s: Counter = Counter()
+        # per-verb service-time histograms (mergeable log buckets) — the
+        # server-side tail view a STATS drain ships to the compute node
+        from repro.obs.hist import LatencyHistogram
+        self.service_hist: dict = {}
+        self._hist_cls = LatencyHistogram
         self.trace_spans: deque = deque(maxlen=self.TRACE_CAP)
 
     # ------------------------------------------------------------ durability
@@ -220,6 +225,8 @@ class HostRegion:
                "payload_tx": self.payload_tx,
                "payload_rx": self.payload_rx,
                "service_s": {k: float(v) for k, v in self.service_s.items()},
+               "service_hist": {k: h.to_dict()
+                                for k, h in sorted(self.service_hist.items())},
                "uptime_s": round(time.time() - self.t0, 3),
                "attached": self.store is not None}
         if self.store is not None:
@@ -274,6 +281,10 @@ class HostRegion:
                 self.durability.maybe_checkpoint(self.store)
             dur = time.perf_counter() - t0
             self.service_s[name] += dur
+            h = self.service_hist.get(name)
+            if h is None:
+                h = self.service_hist[name] = self._hist_cls()
+            h.record(dur)
             self.payload_tx += len(resp)
             if tctx is not None:
                 self.trace_spans.append(

@@ -5,6 +5,11 @@ by the hot paths) so every tier — serve, compute, pool, net, kernels — can
 emit spans without import cycles.  See ``docs/observability.md``.
 """
 
+from repro.obs.hist import (HIST_BOUNDS, LatencyHistogram,
+                            StragglerDetector, VerbShardHist)
+from repro.obs.slo import SLO, SLOTracker, parse_slo
 from repro.obs.trace import TRACER, Tracer, chrome_trace, load_trace
 
-__all__ = ["TRACER", "Tracer", "chrome_trace", "load_trace"]
+__all__ = ["TRACER", "Tracer", "chrome_trace", "load_trace",
+           "HIST_BOUNDS", "LatencyHistogram", "VerbShardHist",
+           "StragglerDetector", "SLO", "SLOTracker", "parse_slo"]

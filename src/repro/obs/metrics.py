@@ -90,11 +90,101 @@ def span_histograms(spans: Iterable[Dict[str, Any]]) -> List[str]:
     return out
 
 
+def slo_lines(report: Dict[str, Any]) -> List[str]:
+    """Exposition lines for an ``SLOTracker.report()`` dict."""
+    out: List[str] = []
+    if not report:
+        return out
+    _head(out, "repro_slo", "SLO attainment and burn rates", "gauge")
+    for tier in sorted(report):
+        for key in sorted(report[tier]):
+            row = report[tier][key]
+            lab = {"tier": tier, "key": key}
+            for what in ("attainment", "burn_short", "burn_long", "burn",
+                         "violations", "n"):
+                out.append(_line("repro_slo", row.get(what, 0.0),
+                                 dict(lab, what=what)))
+            out.append(_line("repro_slo", 1.0 if row.get("met") else 0.0,
+                             dict(lab, what="met")))
+    return out
+
+
+def tracer_lines(tracer) -> List[str]:
+    """Tracer-health gauges (ring occupancy/drops, tail kept/discarded)
+    from a live :class:`~repro.obs.trace.Tracer`."""
+    out: List[str] = []
+    if tracer is None:
+        return out
+    _head(out, "repro_tracer", "tracer ring + tail-sampler health",
+          "gauge")
+    for what, v in sorted(tracer.health().items()):
+        out.append(_line("repro_tracer", float(v), {"what": what}))
+    return out
+
+
+def pool_hist_lines(hist: Dict[str, Any]) -> List[str]:
+    """Prometheus histogram lines for a pool's nested per-(verb, shard)
+    latency view (``snapshot()["hist"]``, i.e. ``VerbShardHist.to_dict``
+    output).  Only buckets that advance the cumulative count are
+    emitted (plus ``+Inf``) to keep the exposition compact — still a
+    valid, monotone Prometheus histogram."""
+    out: List[str] = []
+    if not hist:
+        return out
+    from repro.obs.hist import HIST_BOUNDS
+    name = "repro_pool_verb_latency_seconds"
+    _head(out, name, "observed transport latency by (verb, shard)",
+          "histogram")
+    for verb in sorted(hist):
+        for shard in sorted(hist[verb], key=int):
+            d = hist[verb][shard]
+            counts = list(d.get("counts", ()))
+            lab = {"verb": verb, "shard": shard}
+            cum = 0
+            for i, ub in enumerate(HIST_BOUNDS):
+                c = counts[i] if i < len(counts) else 0
+                if c:
+                    cum += c
+                    out.append(_line(name + "_bucket", cum,
+                                     dict(lab, le=repr(ub))))
+            total = sum(counts)
+            out.append(_line(name + "_bucket", total,
+                             dict(lab, le="+Inf")))
+            out.append(_line(name + "_sum", d.get("sum_s", 0.0), lab))
+            out.append(_line(name + "_count", d.get("count", total), lab))
+    return out
+
+
+def straggler_lines(stragglers: Dict[str, Any]) -> List[str]:
+    """Gauges for a ``ShardedPool`` straggler report (detector counters
+    + per-shard flags with their tail excess)."""
+    out: List[str] = []
+    if not stragglers:
+        return out
+    _head(out, "repro_straggler", "straggler-detector counters", "gauge")
+    for what in ("checks", "flagged_now", "reroutes", "moved_groups"):
+        if what in stragglers:
+            out.append(_line("repro_straggler", stragglers[what],
+                             {"what": what}))
+    flagged = stragglers.get("flagged", {})
+    if flagged:
+        _head(out, "repro_straggler_excess_seconds",
+              "flagged shard tail excess vs fleet", "gauge")
+        for shard in sorted(flagged, key=int):
+            info = flagged[shard]
+            out.append(_line("repro_straggler_excess_seconds",
+                             info.get("excess_s", 0.0),
+                             {"shard": shard,
+                              "verb": info.get("verb", "-")}))
+    return out
+
+
 def render_prometheus(stats: Dict[str, Any],
-                      spans: Optional[Iterable[Dict[str, Any]]] = None
-                      ) -> str:
+                      spans: Optional[Iterable[Dict[str, Any]]] = None,
+                      tracer=None) -> str:
     """Render a ``SearchServer.stats()`` snapshot (and optionally the
-    tracer's spans) as Prometheus text exposition."""
+    tracer's spans + the tracer's own health gauges) as Prometheus text
+    exposition."""
     out: List[str] = []
     _head(out, "repro_serve_requests_total", "requests completed", "counter")
     out.append(_line("repro_serve_requests_total",
@@ -166,6 +256,10 @@ def render_prometheus(stats: Dict[str, Any],
               "counter")
         for key, v in sorted(pool.get("totals", {}).items()):
             out.append(_line("repro_pool_total", v, {"what": key}))
+        out.extend(pool_hist_lines(pool.get("hist", {})))
+    out.extend(slo_lines(stats.get("slo", {})))
+    out.extend(straggler_lines(stats.get("stragglers", {})))
+    out.extend(tracer_lines(tracer))
     if spans is not None:
         out.extend(span_histograms(spans))
     return "\n".join(out) + "\n"
@@ -192,6 +286,28 @@ def render_pool_server(stats: Dict[str, Any]) -> str:
     _head(out, "repro_poolserver_uptime_seconds", "server uptime", "gauge")
     out.append(_line("repro_poolserver_uptime_seconds",
                      stats.get("uptime_s", 0.0)))
+    sh = stats.get("service_hist")
+    if sh:
+        from repro.obs.hist import HIST_BOUNDS
+        name = "repro_poolserver_service_seconds"
+        _head(out, name, "per-verb service-time histogram", "histogram")
+        for verb in sorted(sh):
+            d = sh[verb]
+            counts = list(d.get("counts", ()))
+            cum = 0
+            for i, ub in enumerate(HIST_BOUNDS):
+                c = counts[i] if i < len(counts) else 0
+                if c:
+                    cum += c
+                    out.append(_line(name + "_bucket", cum,
+                                     {"verb": verb, "le": repr(ub)}))
+            total = sum(counts)
+            out.append(_line(name + "_bucket", total,
+                             {"verb": verb, "le": "+Inf"}))
+            out.append(_line(name + "_sum", d.get("sum_s", 0.0),
+                             {"verb": verb}))
+            out.append(_line(name + "_count", d.get("count", total),
+                             {"verb": verb}))
     ing = stats.get("ingest")
     if ing:
         _head(out, "repro_poolserver_ingest_total",

@@ -25,6 +25,23 @@ server-side spans) are attached with :meth:`Tracer.add` /
 Tiers are free-form strings; the conventional taxonomy is documented in
 ``docs/observability.md`` (serve / compute / pool / net / server / kernel
 / bench).
+
+Tail-based sampling
+-------------------
+``configure(tail=True)`` switches the ring from "last N spans" to "the
+interesting traces": spans still record always-on and cheap, but a
+non-root span is *staged* per-thread instead of entering the ring, and
+only when its root closes is the whole trace either promoted (root +
+staged children append together) or discarded.  A root is promoted when
+it is explicitly marked (``keep=True`` attr), touched an error or
+failover (``error``/``failover`` attrs), or its latency — ``model_s``
+attr when present (deterministic modeled seconds), wall ``dur``
+otherwise — reaches an adaptive quantile threshold over a rolling
+window of recent roots.  The promoted root carries ``why_kept`` in its
+attrs (``marked`` / ``error`` / ``latency`` / ``warmup``); ``kept`` and
+``discarded`` count root decisions and :meth:`Tracer.health` exposes
+them next to ring occupancy, so the ring holds the p99 outliers instead
+of the last N requests and silent span loss stays visible.
 """
 
 from __future__ import annotations
@@ -110,6 +127,12 @@ class Tracer:
         self.capacity = int(capacity)
         self.trace_id = 0
         self.dropped = 0
+        self.tail = False
+        self.tail_quantile = 0.95
+        self.tail_window = 256
+        self.kept = 0
+        self.discarded = 0
+        self._root_durs: deque = deque(maxlen=self.tail_window)
         self._spans: deque = deque(maxlen=self.capacity)
         self._ids = itertools.count(1)
         self._tls = threading.local()
@@ -124,19 +147,35 @@ class Tracer:
         enabled: bool = True,
         capacity: Optional[int] = None,
         trace_id: Optional[int] = None,
+        tail: Optional[bool] = None,
+        tail_quantile: Optional[float] = None,
+        tail_window: Optional[int] = None,
     ) -> "Tracer":
         """Enable (or reconfigure) tracing and reset the buffer.
 
         *trace_id* defaults to a fresh 63-bit id derived from the wall
-        clock; pass an explicit value for reproducible tests.
+        clock; pass an explicit value for reproducible tests.  *tail*
+        switches on tail-based sampling (see module docstring):
+        *tail_quantile* is the adaptive latency threshold over a rolling
+        window of *tail_window* recent root latencies.
         """
         with self._lock:
             if capacity is not None:
                 self.capacity = int(capacity)
+            if tail is not None:
+                self.tail = bool(tail)
+            if tail_quantile is not None:
+                self.tail_quantile = float(tail_quantile)
+            if tail_window is not None:
+                self.tail_window = int(tail_window)
             self._spans = deque(maxlen=self.capacity)
             self._ids = itertools.count(1)
             self._tids = {}
             self.dropped = 0
+            self.kept = 0
+            self.discarded = 0
+            self._root_durs = deque(maxlen=self.tail_window)
+            self._tls = threading.local()
             self._phase = None
             if trace_id is not None:
                 self.trace_id = int(trace_id)
@@ -149,7 +188,12 @@ class Tracer:
         """Turn tracing off and drop all buffered spans."""
         with self._lock:
             self.enabled = False
+            self.tail = False
             self._spans.clear()
+            self._root_durs.clear()
+            self.kept = 0
+            self.discarded = 0
+            self._tls = threading.local()
             self._phase = None
             self.trace_id = 0
 
@@ -157,7 +201,11 @@ class Tracer:
         """Drop buffered spans but keep the enabled state and trace id."""
         with self._lock:
             self._spans.clear()
+            self._root_durs.clear()
             self.dropped = 0
+            self.kept = 0
+            self.discarded = 0
+            self._tls = threading.local()
 
     def set_phase(self, phase: Optional[str]) -> None:
         """Tag subsequently recorded spans with ``attrs["phase"] = phase``."""
@@ -198,7 +246,11 @@ class Tracer:
         if not self.enabled:
             return 0
         sid = next(self._ids)
-        self._record(name, tier, t0, dur, sid, parent_id, dict(attrs or {}))
+        # explicit-parent spans (harvested from a server, stitched after
+        # the fact) bypass tail staging: their root may have closed long
+        # ago on another node, so they enter the ring directly
+        self._record(name, tier, t0, dur, sid, parent_id, dict(attrs or {}),
+                     stack=False)
         return sid
 
     def _current_id(self) -> int:
@@ -227,25 +279,89 @@ class Tracer:
         span_id: int,
         parent_id: int,
         attrs: Dict[str, Any],
+        stack: bool = True,
     ) -> None:
-        """Append one finished span to the ring buffer."""
+        """Route one finished span: straight into the ring, or — under
+        tail sampling, for stack-parented spans — through per-thread
+        staging until its root trace is promoted or discarded."""
         if self._phase is not None and "phase" not in attrs:
             attrs["phase"] = self._phase
+        rec = {
+            "name": name,
+            "tier": tier,
+            "t0": t0,
+            "dur": dur,
+            "id": span_id,
+            "parent": parent_id,
+            "trace": self.trace_id,
+            "tid": self._tid(),
+            "attrs": attrs,
+        }
+        if not self.tail or not stack:
+            self._append(rec)
+            return
+        if parent_id != 0:
+            stage = getattr(self._tls, "stage", None)
+            if stage is None:
+                stage = self._tls.stage = []
+            stage.append(rec)
+            return
+        # a root closed: decide the whole trace at once
+        why = self._tail_decide(dur, attrs)
+        staged = getattr(self._tls, "stage", None) or []
+        self._tls.stage = []
+        if why is None:
+            self.discarded += 1
+            return
+        self.kept += 1
+        attrs["why_kept"] = why
+        for s in staged:
+            self._append(s)
+        self._append(rec)
+
+    def _append(self, rec: Dict[str, Any]) -> None:
+        """Append one span dict to the ring, counting overflow drops."""
         if len(self._spans) == self.capacity:
             self.dropped += 1
-        self._spans.append(
-            {
-                "name": name,
-                "tier": tier,
-                "t0": t0,
-                "dur": dur,
-                "id": span_id,
-                "parent": parent_id,
-                "trace": self.trace_id,
-                "tid": self._tid(),
-                "attrs": attrs,
-            }
-        )
+        self._spans.append(rec)
+
+    def _tail_decide(self, dur: float, attrs: Dict[str, Any]) -> Optional[str]:
+        """Keep/drop verdict for one closed root trace.
+
+        Effective latency is ``attrs["model_s"]`` when present (modeled
+        seconds — deterministic under simulated transports and WR
+        injection) and the wall ``dur`` otherwise.  Returns the
+        ``why_kept`` reason or None to discard.
+        """
+        eff = float(attrs.get("model_s", dur))
+        why = None
+        if attrs.get("keep"):
+            why = "marked"
+        elif attrs.get("error") or attrs.get("failover"):
+            why = "error"
+        else:
+            durs = sorted(self._root_durs)
+            if len(durs) < 8:
+                why = "warmup"     # no stable threshold yet: keep
+            else:
+                k = min(len(durs) - 1,
+                        int(self.tail_quantile * len(durs)))
+                if eff >= durs[k] and eff > 0.0:
+                    why = "latency"
+        self._root_durs.append(eff)
+        return why
+
+    def health(self) -> Dict[str, Any]:
+        """Tracer health gauges: ring occupancy/drops + tail counters."""
+        durs = sorted(self._root_durs)
+        thr = 0.0
+        if len(durs) >= 8:
+            thr = durs[min(len(durs) - 1,
+                           int(self.tail_quantile * len(durs)))]
+        return {"enabled": int(self.enabled), "tail": int(self.tail),
+                "capacity": self.capacity, "occupancy": len(self._spans),
+                "dropped": self.dropped, "kept": self.kept,
+                "discarded": self.discarded, "threshold_s": thr}
 
     # -- inspection / export ----------------------------------------------
 

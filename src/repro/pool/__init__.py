@@ -62,7 +62,8 @@ def make_pool_factory(cfg):
             store, children, placement=make_placement(cfg.placement),
             parallel=cfg.shard_parallel,
             replication=getattr(cfg, "replication", 1),
-            shard_budgets=getattr(cfg, "shard_budgets", None))
+            shard_budgets=getattr(cfg, "shard_budgets", None),
+            straggler_check_every=getattr(cfg, "straggler_check_every", 0))
     if cfg.pool == "sharded":
         def child(fabric, ep=None):
             if cfg.shard_transport == "local":
@@ -100,5 +101,6 @@ def make_pool_factory(cfg):
             placement=make_placement(cfg.placement),
             parallel=cfg.shard_parallel,
             replication=getattr(cfg, "replication", 1),
-            shard_budgets=getattr(cfg, "shard_budgets", None))
+            shard_budgets=getattr(cfg, "shard_budgets", None),
+            straggler_check_every=getattr(cfg, "straggler_check_every", 0))
     raise ValueError(f"unknown pool transport {cfg.pool!r}")

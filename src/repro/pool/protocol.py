@@ -131,11 +131,34 @@ class MemoryPool(abc.ABC):
 
     # ------------------------------------------------------------ charging
 
-    def _transport(self, verb: str, n_bytes, descriptors, trips) -> None:
+    def _transport(self, verb: str, n_bytes, descriptors, trips):
         """Transport hook, called once per charge with the slice it
-        carried.  Default: bytes move over nothing.  Each argument may
-        be a scalar (one destination) or a per-destination sequence (a
-        sharded fan-out); see ``SimulatedRDMAPool``."""
+        carried.  Default: bytes move over nothing (returns None).
+        Transports that model a wire return the slice's observed
+        seconds, which ``_charge`` records into the per-(verb, shard)
+        latency histogram (:meth:`hist`).  Each argument may be a scalar
+        (one destination) or a per-destination sequence (a sharded
+        fan-out); see ``SimulatedRDMAPool``."""
+        return None
+
+    @property
+    def hist(self):
+        """Lazy per-(verb, shard) latency histogram view.
+
+        ``shard_id`` (set by ``ShardedPool`` on its children; defaults
+        to 0) keys the shard dimension; a transport contributes by
+        returning observed seconds from ``_transport`` or by calling
+        :meth:`_observe` directly (the remote CQ-poll path)."""
+        h = getattr(self, "_hist", None)
+        if h is None:
+            from repro.obs.hist import VerbShardHist
+            h = self._hist = VerbShardHist()
+        return h
+
+    def _observe(self, verb: str, seconds: float) -> None:
+        """Record one observed-latency sample for ``verb`` on this pool's
+        shard into :meth:`hist`."""
+        self.hist.record(verb, getattr(self, "shard_id", 0), seconds)
 
     def _charge(self, verb: str, ledger: Optional[NetLedger],
                 n_bytes: float, descriptors: int) -> None:
@@ -149,7 +172,9 @@ class MemoryPool(abc.ABC):
         self.totals["round_trips"] += trips
         self.totals["descriptors"] += descriptors
         self.totals["bytes"] += n_bytes
-        self._transport(verb, n_bytes, descriptors, trips)
+        dt = self._transport(verb, n_bytes, descriptors, trips)
+        if dt is not None:
+            self._observe(verb, float(dt))
         if TRACER.enabled:
             TRACER.event("pool." + verb, tier="pool", kind=self.kind,
                          bytes=float(n_bytes), descs=int(descriptors),
@@ -166,7 +191,9 @@ class MemoryPool(abc.ABC):
         self.totals["round_trips"] += 1
         self.totals["descriptors"] += 1
         self.totals["bytes"] += n_bytes
-        self._transport(verb, n_bytes, 1, 1)
+        dt = self._transport(verb, n_bytes, 1, 1)
+        if dt is not None:
+            self._observe(verb, float(dt))
         if TRACER.enabled:
             TRACER.event("pool." + verb, tier="pool", kind=self.kind,
                          bytes=float(n_bytes), descs=1, trips=1)
@@ -243,8 +270,12 @@ class MemoryPool(abc.ABC):
 
     def snapshot(self) -> dict:
         """Verb counts + charged totals (+ transport-specific extras)."""
-        return {"kind": self.kind, "verbs": dict(self.verbs),
-                "totals": dict(self.totals)}
+        out = {"kind": self.kind, "verbs": dict(self.verbs),
+               "totals": dict(self.totals)}
+        h = getattr(self, "_hist", None)
+        if h is not None and len(h):
+            out["hist"] = h.to_dict()
+        return out
 
 
 def _fresh_totals() -> dict:

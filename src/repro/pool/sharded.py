@@ -105,10 +105,14 @@ class ShardedPool(MemoryPool):
                  child_factories: Sequence[Callable[[Store], MemoryPool]],
                  *, placement="round_robin", parallel: bool = True,
                  replication: int = 1,
-                 shard_budgets: Optional[Sequence[float]] = None):
+                 shard_budgets: Optional[Sequence[float]] = None,
+                 straggler: Optional[dict] = None,
+                 straggler_check_every: int = 0):
         assert len(child_factories) >= 1, "need at least one shard"
         self.store = store
         self.children = [f(store) for f in child_factories]
+        for s, c in enumerate(self.children):
+            c.shard_id = s        # keys the per-(verb, shard) histograms
         self.placement: PlacementPolicy = make_placement(placement)
         self.parallel = parallel
         self.replication = max(1, int(replication))
@@ -134,6 +138,20 @@ class ShardedPool(MemoryPool):
         # planned fleet changes (add_shard / remove_shard)
         self.elastic = {"added": 0, "removed": 0, "moved_groups": 0,
                         "bytes": 0.0}
+        # tail-divergence detection over the children's per-(verb, shard)
+        # latency histograms; a flagged shard's serving cost is penalized
+        # by its observed tail excess so replica reads route around it
+        from repro.obs.hist import StragglerDetector
+        self.straggler = StragglerDetector(**(straggler or {}))
+        self._check_every = max(0, int(straggler_check_every))
+        self._since_check = 0
+        self._straggler_penalty: dict[int, float] = {}
+        self._last_straggler_report: Optional[dict] = None
+        self.straggler_stats = {"checks": 0, "flagged_now": 0,
+                                "reroutes": 0, "moved_groups": 0}
+        # dead children skipped during a trace drain (satellite: a dying
+        # PoolServer must never poison the query path via observability)
+        self.trace_harvest_failures = 0
         self._alive = np.ones(len(self.children), bool)
         self._reset_placement()
         self._stage_meta()
@@ -264,8 +282,13 @@ class ShardedPool(MemoryPool):
     def _recompute_serving(self) -> None:
         """Re-pick each group's serving replica: cheapest (modeled
         seconds per span) live replica, with accumulated serving load
-        breaking cost ties so equal-speed replicas split the groups."""
+        breaking cost ties so equal-speed replicas split the groups.
+        Shards the straggler detector flagged carry their observed tail
+        excess as a cost penalty, so reads prefer a healthy replica."""
         costs = np.asarray(self._shard_costs(), np.float64)
+        for s, p in getattr(self, "_straggler_penalty", {}).items():
+            if 0 <= s < len(costs):
+                costs[s] += p
         loads = np.zeros(self.n_shards, np.float64)
         serve = np.full(len(self._replicas), -1, np.int64)
         for g in range(len(self._replicas)):
@@ -382,6 +405,11 @@ class ShardedPool(MemoryPool):
         pids = np.asarray(pids).reshape(-1)
         verb = "read_spans_quant" if quant else "read_spans"
         self.verbs[verb] += len(pids)
+        if self._check_every and ledger is not None:
+            self._since_check += 1
+            if self._since_check >= self._check_every:
+                self._since_check = 0
+                self.check_stragglers()
         m = len(pids)
         parts, slices = [], []
         todo = np.arange(m, dtype=np.int64)
@@ -767,6 +795,7 @@ class ShardedPool(MemoryPool):
         shard's index."""
         new = self.n_shards
         child = child_factory(self.store)
+        child.shard_id = new
         if self.store.qvec_buf is not None:
             child._stage_quant()
         self.children.append(child)
@@ -829,6 +858,7 @@ class ShardedPool(MemoryPool):
         if hasattr(old, "close"):
             old.close()
         child = child_factory(self.store)
+        child.shard_id = shard
         if (self.store.qvec_buf is not None
                 and getattr(child, "attached_via", "upload") != "recovered"
                 and hasattr(child, "_stage_quant")):
@@ -914,11 +944,55 @@ class ShardedPool(MemoryPool):
 
     # ------------------------------------------------------------ stats
 
+    def merged_hist(self):
+        """Fleet-wide per-(verb, shard) latency view: every child's
+        histogram (keyed by the ``shard_id`` set at construction) merged
+        with the parent's own — the input the straggler detector reads."""
+        from repro.obs.hist import VerbShardHist
+        m = VerbShardHist()
+        own = getattr(self, "_hist", None)
+        if own is not None:
+            m.merge(own)
+        for c in self.children:
+            ch = getattr(c, "_hist", None)
+            if ch is not None:
+                m.merge(ch)
+        return m
+
+    def check_stragglers(self) -> dict:
+        """Run the straggler detector over :meth:`merged_hist` and act.
+
+        A flagged shard's serving cost is penalized by its observed tail
+        excess (seconds at the detector's quantile), and the serving map
+        is recomputed — with ``replication >= 2`` the flagged shard's
+        groups move to a healthy replica (counted in
+        ``straggler_stats``); a recovered shard loses its penalty the
+        same way.  Runs automatically every ``straggler_check_every``
+        charged span reads when configured, or manually.  Returns the
+        detector report (also surfaced in ``snapshot()["stragglers"]``).
+        """
+        self.straggler_stats["checks"] += 1
+        report = self.straggler.verdicts(self.merged_hist())
+        penalty = {int(s): float(i["excess_s"])
+                   for s, i in report["flagged"].items()}
+        self.straggler_stats["flagged_now"] = len(penalty)
+        if penalty != self._straggler_penalty:
+            old = self._serve.copy()
+            self._straggler_penalty = penalty
+            self._recompute_serving()
+            moved = int((old != self._serve).sum())
+            if moved:
+                self.straggler_stats["reroutes"] += 1
+                self.straggler_stats["moved_groups"] += moved
+        self._last_straggler_report = report
+        return report
+
     def harvest_trace(self) -> int:
         """Drain server-side trace spans from every live remote child
         (children without the hook — local/sim shards — contribute 0).
-        A child dying mid-harvest is ignored: observability must never
-        take down the pool it is observing."""
+        A child dying mid-harvest is skipped and counted
+        (``trace_harvest_failures``): observability must never take down
+        the pool it is observing."""
         n = 0
         for s, c in enumerate(self.children):
             if not self._alive[s] or not hasattr(c, "harvest_trace"):
@@ -926,6 +1000,7 @@ class ShardedPool(MemoryPool):
             try:
                 n += c.harvest_trace()
             except PoolUnavailableError:
+                self.trace_harvest_failures += 1
                 continue
         return n
 
@@ -954,6 +1029,17 @@ class ShardedPool(MemoryPool):
         out["replication_io"] = dict(self.replication_io)
         out["failover"] = dict(self.failover)
         out["elastic"] = dict(self.elastic)
+        out["trace_harvest_failures"] = self.trace_harvest_failures
+        rep = self._last_straggler_report or {}
+        out["stragglers"] = dict(
+            self.straggler_stats,
+            flagged={str(s): dict(i)
+                     for s, i in rep.get("flagged", {}).items()},
+            penalty_s={str(s): p
+                       for s, p in self._straggler_penalty.items()})
+        mh = self.merged_hist()
+        if len(mh):
+            out["hist"] = mh.to_dict()
         shards = []
         for s, c in enumerate(self.children):
             try:

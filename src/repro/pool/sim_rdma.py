@@ -105,22 +105,35 @@ class SimulatedRDMAPool(LocalPool):
         return (trips * f.rtt_s + descriptors * f.per_op_s
                 + n_bytes / f.bw_Bps)
 
+    def set_injector(self, injector) -> None:
+        """Attach (or with None, detach) a WR-level fault injector to the
+        simulated NIC's bearer; see :mod:`repro.rdma.inject`.  Injected
+        latency lands in the *observed* clock (``sim_s``, histograms)
+        but never in :meth:`model_dt` — the a-priori cost model stays
+        honest and only the straggler detector can route around it."""
+        self._qp.bearer.injector = injector
+
     def _transport(self, verb: str, n_bytes: Slices, descriptors: Slices,
-                   trips: Slices) -> None:
+                   trips: Slices) -> float:
         b = np.atleast_1d(np.asarray(n_bytes, np.float64))
         d = np.atleast_1d(np.asarray(descriptors, np.float64))
         t = np.atleast_1d(np.asarray(trips, np.float64))
+        inj = getattr(self._qp.bearer, "injector", None)
+        inj0 = inj.injected_s if inj is not None else 0.0
         for bi, di, ti in zip(b, d, t):
             self._post_slice(bi, di, ti)
         # the clock is priced from the aggregate slice (not summed over
         # WR lists) so the float math is bit-identical to the pre-QP
-        # accounting
+        # accounting; WR-injected delay (chaos) adds on top
         dt = fanout_dt([self.model_dt(bi, di, ti)
                         for bi, di, ti in zip(b, d, t)],
                        self.parallel and len(b) > 1)
+        if inj is not None:
+            dt += inj.injected_s - inj0
         self.sim_s[verb] = self.sim_s.get(verb, 0.0) + dt
         if self.sleep:
             time.sleep(dt)
+        return dt
 
     @property
     def sim_total_s(self) -> float:

@@ -215,7 +215,17 @@ class QueuePair:
         ``prefix`` is an opaque trace-context prepended outside the verb
         payload (never priced).  The completion lands on ``self.cq`` in
         posting order.
+
+        When a :class:`repro.rdma.inject.WRInjector` is attached to the
+        bearer (``bearer.injector``) it is consulted here, before the
+        list is framed or submitted: injected latency accrues on the
+        injector (transports fold it into their observed clocks) and an
+        injected fault raises before anything is posted, so a failed
+        post charges nothing.
         """
+        inj = getattr(self.bearer, "injector", None)
+        if inj is not None:
+            inj.on_post(wrs)
         if getattr(self.bearer, "frames", True):
             op, payload, flags = wr_frame(wrs)
         else:                       # accounting-only bearer: skip framing

@@ -42,6 +42,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.engine import pow2_pad
+from repro.obs.slo import SLOTracker
 from repro.obs.trace import TRACER
 
 
@@ -94,6 +95,13 @@ class BatchPolicy:
     wfq: bool = False
     tenant_weight: dict = field(default_factory=dict)   # tenant -> weight
     wfq_quantum: int = 8        # rows of credit per weight unit per sweep
+    # latency SLOs (repro.obs.slo): a single spec ("p99<5ms" or an SLO)
+    # watches end-to-end request latency per tenant; a {tier: spec} dict
+    # attaches objectives per stage ("serve" end-to-end, "fetch" pool
+    # wire time, "queue" wait).  None disables SLO tracking entirely.
+    slo: Optional[object] = None
+    slo_short_window: int = 64   # burn-rate fast window (requests)
+    slo_long_window: int = 512   # burn-rate slow window (requests)
 
     @property
     def fair_queue(self) -> bool:
@@ -220,6 +228,9 @@ class ServeMetrics:
         # ratio, fetches, rounds) for the Prometheus exporter
         self.engine_agg = {"cache_hits": 0.0, "n_fetches": 0.0,
                            "n_rounds": 0.0}
+        # per-tenant/per-tier SLO evaluation; attached by MicroBatcher
+        # when BatchPolicy.slo is configured, else stays None
+        self.slo: Optional[SLOTracker] = None
 
     def _tenant(self, tenant: str) -> dict:
         """Caller must hold the lock."""
@@ -268,12 +279,20 @@ class ServeMetrics:
             self.n_rejected += 1
             self._tenant(tenant)["rejected"] += 1
 
-    def record_request(self, total_s: float, breakdown: dict):
+    def record_request(self, total_s: float, breakdown: dict,
+                       tenant: str = "-"):
         with self._lock:
             self.n_requests += 1
             self._lat.append(total_s)
             for key in self.breakdown:
                 self.breakdown[key] += breakdown.get(key, 0.0)
+            if self.slo is not None:
+                # feed every configured tier; record() ignores the rest
+                self.slo.record("serve", tenant, total_s)
+                for tier, key in (("fetch", "fetch_s"),
+                                  ("queue", "queue_s")):
+                    if key in breakdown:
+                        self.slo.record(tier, tenant, breakdown[key])
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -316,6 +335,15 @@ class ServeMetrics:
                     alive = self.pool_snap.get("alive")
                     if alive is not None:
                         out["failover"]["alive_shards"] = int(sum(alive))
+                    out["failover"]["trace_harvest_failures"] = (
+                        self.pool_snap.get("trace_harvest_failures", 0))
+                # straggler verdicts ride next to the latency numbers:
+                # "p99 moved AND shard 1 is flagged" is one glance
+                if "stragglers" in self.pool_snap:
+                    out["stragglers"] = copy.deepcopy(
+                        self.pool_snap["stragglers"])
+            if self.slo is not None:
+                out["slo"] = self.slo.report()
             for p in (50, 95, 99):
                 out[f"p{p}_ms"] = (float(np.percentile(lat, p)) * 1e3
                                    if len(lat) else 0.0)
@@ -336,6 +364,11 @@ class MicroBatcher:
         self.engine = engine
         self.policy = policy or BatchPolicy()
         self.metrics = ServeMetrics()
+        if self.policy.slo is not None:
+            self.metrics.slo = SLOTracker(
+                self.policy.slo,
+                short_window=self.policy.slo_short_window,
+                long_window=self.policy.slo_long_window)
         self.arrivals = ArrivalRateEWMA(self.policy.ewma_alpha)
         self._bucket = TokenBucket(self.policy.rate, self.policy.burst)
         self._tenant_buckets: dict[str, TokenBucket] = {}
@@ -641,7 +674,7 @@ class MicroBatcher:
                 self.metrics.record_request(stats["total_s"], {
                     "queue_s": stats["queue_s"], "route_s": est["meta_s"],
                     "plan_s": est["plan_s"], "fetch_s": stats["fetch_s"],
-                    "serve_s": est["sub_s"]})
+                    "serve_s": est["sub_s"]}, tenant=r.tenant)
                 r.future.set_result((d[off:off + m, :r.k],
                                      g[off:off + m, :r.k], stats))
                 self.metrics.note_served(r.tenant, m)
@@ -666,7 +699,8 @@ class MicroBatcher:
         for r in group:
             m = r.vecs.shape[0]
             self.metrics.record_request(t_done - r.t_submit,
-                                        {"queue_s": t_disp - r.t_submit})
+                                        {"queue_s": t_disp - r.t_submit},
+                                        tenant=r.tenant)
             r.future.set_result(np.asarray(gids[off:off + m]))
             self.metrics.note_served(r.tenant, m)
             off += m

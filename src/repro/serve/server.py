@@ -76,12 +76,14 @@ class SearchServer:
         return self.batcher.metrics.snapshot()
 
     def metrics_text(self) -> str:
-        """Prometheus text exposition of :meth:`stats` plus per-span
-        duration histograms when the tracer is enabled."""
+        """Prometheus text exposition of :meth:`stats` — SLO burn rates,
+        per-(verb, shard) pool latency histograms, straggler verdicts,
+        and tracer-health gauges included — plus per-span duration
+        histograms when the tracer is enabled."""
         from repro.obs.metrics import render_prometheus
         from repro.obs.trace import TRACER
         spans = TRACER.snapshot() if TRACER.enabled else None
-        return render_prometheus(self.stats(), spans)
+        return render_prometheus(self.stats(), spans, tracer=TRACER)
 
     def dump_trace(self, path) -> int:
         """Harvest server-side spans (remote pools) and write the whole

@@ -33,10 +33,16 @@ import numpy as np
 import pytest
 
 from repro.core import DHNSWEngine, EngineConfig
+from repro.core.cost_model import RDMA_100G
 from repro.net.server import PoolServer
 from repro.obs import report
+from repro.obs.hist import (HIST_BOUNDS, LatencyHistogram, StragglerDetector,
+                            VerbShardHist)
 from repro.obs.metrics import render_pool_server, render_prometheus
+from repro.obs.slo import SLO, SLOTracker, parse_slo
 from repro.obs.trace import TRACER, Tracer, chrome_trace, load_trace
+from repro.pool.protocol import PoolUnavailableError
+from repro.rdma.inject import InjectedFault, WRInjector
 from repro.serve.batcher import BatchPolicy
 from repro.serve.server import SearchServer
 
@@ -365,6 +371,266 @@ def test_dump_trace_harvests_remote(pds, tmp_path):
     finally:
         TRACER.disable()
         srv.stop()
+
+
+# ------------------------------------------------------------ histograms
+
+
+def test_latency_histogram_unit():
+    h = LatencyHistogram()
+    for v in (1e-6, 1e-5, 1e-4, 1e-3):
+        h.record(v)
+    assert h.count == 4
+    assert h.sum_s == pytest.approx(1.111e-3)
+    assert h.quantile(0.5) <= h.quantile(0.99)
+    assert h.quantile(1.0) >= 1e-3
+    h.record(1e4)                      # overflow bucket
+    assert h.quantile(1.0) > HIST_BOUNDS[-1]
+    other = LatencyHistogram()
+    other.record(2e-4)
+    h.merge(other)
+    assert h.count == 6
+    assert h.mean() == pytest.approx(h.sum_s / 6)
+    back = LatencyHistogram.from_dict(h.to_dict())
+    assert back.counts == h.counts and back.count == h.count
+    assert back.sum_s == pytest.approx(h.sum_s)
+
+
+def test_verb_shard_hist_and_straggler_detector():
+    vh = VerbShardHist()
+    for s in range(3):
+        for _ in range(40):
+            vh.record("read_spans", s, 1e-2 if s == 1 else 1e-5)
+    det = StragglerDetector(min_count=32)
+    rep = det.verdicts(vh)
+    assert set(rep["flagged"]) == {1}
+    info = rep["flagged"][1]
+    assert info["verb"] == "read_spans"
+    assert info["excess_s"] > 1e-3
+    assert info["ratio"] > det.ratio
+    back = VerbShardHist.from_dict(vh.to_dict())
+    assert len(back) == len(vh)
+    assert back.get("read_spans", 1).count == 40
+    # a uniform fleet never flags; nor does one with too few samples
+    uni = VerbShardHist()
+    for s in range(3):
+        for _ in range(40):
+            uni.record("read_rows", s, 1e-5)
+    uni.record("read_meta", 0, 5.0)    # single-shard verb: no fleet
+    assert det.verdicts(uni)["flagged"] == {}
+
+
+# ------------------------------------------------------------ injection
+
+
+def test_wr_injector_deterministic_schedule():
+    a = WRInjector(seed=7, delay_s=1e-4, spike_s=1e-3, spike_every=5)
+    b = WRInjector(seed=7, delay_s=1e-4, spike_s=1e-3, spike_every=5)
+    for _ in range(20):
+        a.on_post([None])
+        b.on_post([None])
+    assert a.snapshot() == b.snapshot()
+    # (i * MIX + 7) % 5 == 0 <=> i % 5 == 3: posts 3, 8, 13, 18 spike
+    assert a.posts == 20 and a.injections == 20
+    assert a.injected_s == pytest.approx(20 * 1e-4 + 4 * 1e-3)
+    c = WRInjector(seed=8, spike_s=1e-3, spike_every=5)
+    for _ in range(20):
+        c.on_post([None])
+    assert c.injections == 4           # seed shifts which posts spike
+    assert c.injected_s == pytest.approx(4e-3)
+
+
+def test_wr_injector_error_is_connection_error():
+    e = WRInjector(seed=0, error_every=1)
+    with pytest.raises(InjectedFault):
+        e.on_post([None])
+    assert e.faults == 1
+    assert e.injected_s == 0.0         # failed posts charge nothing
+    # the fault must flow through the existing failover handlers
+    assert issubclass(InjectedFault, ConnectionError)
+
+
+# ------------------------------------------------------------ tail sampling
+
+
+def test_tail_sampler_keeps_interesting_roots():
+    tr = Tracer()
+    tr.configure(trace_id=41, tail=True, tail_quantile=0.9, tail_window=64)
+    for _ in range(8):                 # no stable threshold yet: kept
+        with tr.span("warm", tier="serve", model_s=0.010):
+            pass
+    assert tr.kept == 8
+    assert all(s["attrs"]["why_kept"] == "warmup" for s in tr.snapshot())
+    for _ in range(10):                # under threshold: whole trace drops
+        with tr.span("fast", tier="serve", model_s=0.001):
+            tr.event("child", tier="pool")
+    assert tr.discarded == 10
+    assert len(tr.snapshot()) == 8
+    with tr.span("slow", tier="serve", model_s=0.050):
+        tr.event("child", tier="pool")
+    spans = tr.snapshot()
+    root = [s for s in spans if s["name"] == "slow"]
+    assert root and root[0]["attrs"]["why_kept"] == "latency"
+    assert any(s["name"] == "child" for s in spans)   # staged child kept
+    with tr.span("meh", tier="serve", model_s=0.001, keep=True):
+        pass
+    assert tr.snapshot()[-1]["attrs"]["why_kept"] == "marked"
+    with tr.span("bad", tier="serve", model_s=0.001, error=1):
+        pass
+    assert tr.snapshot()[-1]["attrs"]["why_kept"] == "error"
+    h = tr.health()
+    assert h["tail"] == 1 and h["kept"] == tr.kept == 11
+    assert h["discarded"] == 10 and h["threshold_s"] > 0.0
+
+
+def test_tail_sampler_default_ring_semantics_unchanged():
+    # tail off: the ring is still "last N spans", as the capacity test
+    # and every pre-tail consumer assume
+    tr = Tracer(capacity=4)
+    tr.configure(trace_id=1)
+    assert tr.tail is False
+    for i in range(7):
+        tr.event(f"e{i}")
+    assert [s["name"] for s in tr.snapshot()] == ["e3", "e4", "e5", "e6"]
+    assert tr.health()["dropped"] == 3
+
+
+# ------------------------------------------------------------ SLOs
+
+
+def test_slo_parse_and_burn_rate():
+    slo = parse_slo("p99<5ms")
+    assert slo.quantile == pytest.approx(0.99)
+    assert slo.threshold_s == pytest.approx(5e-3)
+    assert slo.budget == pytest.approx(0.01)
+    assert parse_slo("P95 < 250US").threshold_s == pytest.approx(250e-6)
+    assert parse_slo(SLO(0.5, 1.0)) == SLO(0.5, 1.0)
+    for bad in ("99<5ms", "p0<5ms", "p100<5ms", "p99<5min", "p99"):
+        with pytest.raises(ValueError):
+            parse_slo(bad)
+
+    t = SLOTracker("p90<1ms", short_window=4, long_window=16)
+    for _ in range(12):
+        t.record("serve", "a", 1e-4)
+    t.record("fetch", "a", 9.9)        # unconfigured tier: no-op
+    r = t.report()["serve"]["a"]
+    assert r["n"] == 12 and r["violations"] == 0
+    assert r["burn"] == 0.0 and r["met"] is True
+    for _ in range(4):                 # sustained violation
+        t.record("serve", "a", 5e-3)
+    r = t.report()["serve"]["a"]
+    # short window all-bad: burn = 1.0 / budget(0.1); long smooths it
+    assert r["burn_short"] == pytest.approx(10.0)
+    assert r["burn_long"] == pytest.approx((4 / 16) / 0.1)
+    assert r["burn"] == pytest.approx(2.5)   # multi-window AND: the min
+    assert r["violations"] == 4 and r["met"] is False
+
+
+# ------------------------------------------------------------ chaos e2e
+
+
+def test_straggler_detected_and_routed_around(pds):
+    data, queries = pds
+    kw = dict(CFG, pool="sharded", shard_transport="sim_rdma", n_shards=3,
+              replication=2, fabric=RDMA_100G)
+    ref = DHNSWEngine(EngineConfig(**kw)).build(data)
+    d0a, g0a, _ = ref.search(queries[:8], k=5)
+    d0b, g0b, _ = ref.search(queries[8:], k=5)
+
+    TRACER.configure(trace_id=51, tail=True, tail_window=64)
+    eng = DHNSWEngine(EngineConfig(**kw)).build(data)
+    eng.pool.straggler = StragglerDetector(min_count=4, min_excess_s=1e-4)
+    for _ in range(3):                            # warm: healthy fleet
+        d1, g1, _ = eng.search(queries[:8], k=5)
+    assert eng.pool.check_stragglers()["flagged"] == {}
+
+    inj = WRInjector(seed=7, delay_s=2e-3)
+    eng.pool.children[1].set_injector(inj)
+    for _ in range(3):
+        d2, g2, _ = eng.search(queries[8:], k=5)
+    assert inj.posts > 0
+    rep = eng.pool.check_stragglers()
+    assert set(rep["flagged"]) == {1}             # exactly the slow shard
+    assert rep["flagged"][1]["excess_s"] >= 1e-4
+    # the flagged shard loses every serving slot to a healthy replica
+    assert not np.any(eng.pool._serve == 1)
+
+    posts_before = inj.posts
+    spans_before = eng.pool.verbs.get("read_spans", 0)
+    d3, g3, _ = eng.search(queries[8:], k=5)
+    assert eng.pool.verbs["read_spans"] > spans_before
+    assert inj.posts == posts_before              # routed around shard 1
+
+    # chaos + tail tracing never changes results
+    for d, g, dr, gr in ((d1, g1, d0a, g0a), (d2, g2, d0b, g0b),
+                         (d3, g3, d0b, g0b)):
+        assert np.array_equal(np.asarray(d), np.asarray(dr))
+        assert np.array_equal(np.asarray(g), np.asarray(gr))
+
+    st = eng.pool.snapshot()
+    assert st["stragglers"]["flagged_now"] == 1
+    assert st["stragglers"]["reroutes"] >= 1
+    assert st["stragglers"]["moved_groups"] >= 1
+    assert st["stragglers"]["penalty_s"]["1"] >= 1e-4
+    assert "read_spans" in st["hist"]
+
+
+def test_slo_and_metrics_with_dead_shard(pds):
+    data, queries = pds
+    kw = dict(CFG, pool="sharded", shard_transport="sim_rdma", n_shards=3,
+              replication=2)
+    eng = DHNSWEngine(EngineConfig(**kw)).build(data)
+    pol = BatchPolicy(max_batch=8, max_wait_s=1e-3, slo="p99<5ms",
+                      slo_short_window=4)
+    with SearchServer(eng, pol) as srv:
+        srv.search(queries[:4], k=5)
+        eng.pool._on_shard_down(1)
+        srv.search(queries[4:8], k=5)
+
+        # a child that dies mid-harvest is counted, never raised
+        def _dead_harvest():
+            raise PoolUnavailableError("shard died mid-drain")
+        eng.pool.children[0].harvest_trace = _dead_harvest
+        assert eng.pool.harvest_trace() == 0
+        assert eng.pool.trace_harvest_failures == 1
+        srv.search(queries[8:12], k=5)    # refresh the pool snapshot
+
+        st = srv.stats()
+        r = st["slo"]["serve"]["-"]
+        assert r["n"] >= 2
+        assert {"burn", "burn_short", "burn_long", "attainment",
+                "met"} <= set(r)
+        assert r["threshold_ms"] == pytest.approx(5.0)
+        assert st["failover"]["trace_harvest_failures"] == 1
+        assert st["failover"]["alive_shards"] == 2
+        assert "stragglers" in st
+        txt = srv.metrics_text()
+    for family in ("repro_slo", "repro_pool_verb_latency_seconds_bucket",
+                   "repro_tracer", "repro_straggler",
+                   "repro_failover"):
+        assert family in txt, family
+    for line in txt.strip().splitlines():
+        if not line.startswith("#"):
+            float(line.rsplit(" ", 1)[1])
+
+
+def test_pool_server_service_histograms(pds):
+    data, queries = pds
+    eng = DHNSWEngine(EngineConfig(**CFG, pool="remote",
+                                   bearer="loopback")).build(data)
+    eng.search(queries[:4], k=5)
+    st = eng.pool.server_stats()
+    assert st["service_hist"]
+    for verb, series in st["service_hist"].items():
+        assert series["count"] >= 1
+        assert verb in st["service_s"]
+    txt = render_pool_server(st)
+    assert "repro_poolserver_service_seconds_bucket" in txt
+    assert "repro_poolserver_service_seconds_count" in txt
+    for line in txt.strip().splitlines():
+        if not line.startswith("#"):
+            float(line.rsplit(" ", 1)[1])
+    eng.pool.close()
 
 
 # ------------------------------------------------------------ determinism
